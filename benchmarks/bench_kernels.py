@@ -1,0 +1,46 @@
+"""Kernel microbenchmarks (interpret mode on CPU: relative numbers only;
+the BlockSpec tilings are the TPU-relevant artifact)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import record, time_fn
+from repro.kernels import ops, ref
+
+
+def main(quick=False):
+    n = 64 * 1024
+    # fused adamw vs per-op jnp reference
+    p = jnp.asarray(np.random.RandomState(0).randn(n), jnp.float32)
+    g = jnp.asarray(np.random.RandomState(1).randn(n), jnp.float32)
+    m = jnp.zeros((n,), jnp.float32)
+    v = jnp.zeros((n,), jnp.float32)
+    kw = dict(lr=jnp.float32(1e-3), b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+              step=jnp.int32(3))
+    us_k = time_fn(lambda: [np.asarray(x) for x in
+                            ops.fused_adamw(p, g, m, v, block=16384, **kw)])
+    us_r = time_fn(lambda: [np.asarray(x) for x in
+                            ref.adamw_ref(p, g, m, v, **kw)])
+    record("kernels/fused_adamw_interpret", us_k, f"n={n};ref_us={us_r:.0f}")
+
+    x = jnp.asarray(np.random.RandomState(0).randn(256, 512), jnp.float32)
+    w = jnp.ones((512,), jnp.float32)
+    us_k = time_fn(lambda: np.asarray(ops.rmsnorm(x, w, row_block=64)))
+    us_r = time_fn(lambda: np.asarray(ref.rmsnorm_ref(x, w)))
+    record("kernels/rmsnorm_interpret", us_k, f"shape=256x512;ref_us={us_r:.0f}")
+
+    q = jnp.asarray(np.random.RandomState(0).randn(1, 2, 256, 64), jnp.bfloat16)
+    k = jnp.asarray(np.random.RandomState(1).randn(1, 2, 256, 64), jnp.bfloat16)
+    vv = jnp.asarray(np.random.RandomState(2).randn(1, 2, 256, 64), jnp.bfloat16)
+    us_k = time_fn(lambda: np.asarray(
+        ops.flash_attention(q, k, vv, block_q=128, block_k=128), np.float32))
+    us_r = time_fn(lambda: np.asarray(
+        ref.attention_ref(q, k, vv), np.float32))
+    record("kernels/flash_attention_interpret", us_k,
+           f"BHSD=1x2x256x64;ref_us={us_r:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Serving throughput: prefill+decode tokens/s across batch sizes (smoke
+configs on CPU; the production path is the dry-run's serve_step)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import record, time_fn
+from repro.configs.registry import get_smoke_config
+from repro.launch.serve import Request, Server
+from repro.models import transformer as tfm
+
+
+def bench_arch(arch: str, batches=(1, 4), prompt_len=16, max_new=16):
+    import jax
+    cfg = get_smoke_config(arch)
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    for batch in batches:
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, prompt_len),
+                        max_new=max_new)
+                for i in range(batch * 2)]
+        srv = Server(cfg, params, batch, max_len=prompt_len + max_new + 1)
+        stats = srv.run(reqs)
+        record(f"serve/{arch}/batch_{batch}", stats["wall_s"] * 1e6,
+               f"tokens_per_s={stats['tokens_per_s']:.1f}")
+
+
+def main(quick=False):
+    for arch in ("rwkv6-1.6b", "gemma3-4b", "olmoe-1b-7b"):
+        bench_arch(arch, batches=(1, 4) if not quick else (2,))
+
+
+if __name__ == "__main__":
+    main()

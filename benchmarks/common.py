@@ -1,0 +1,31 @@
+"""Benchmark harness helpers: timing, CSV rows, executor matrix."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

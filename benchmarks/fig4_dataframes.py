@@ -1,0 +1,98 @@
+"""Fig 4 (e-h): DataFrame workloads on the annotated Table library."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import workloads as w
+from benchmarks.common import record, time_fn
+from repro import hardware
+from repro.core import annotated_table as tb
+from repro.core import mozart
+
+
+def _crime_table(n, seed=0):
+    r = np.random.RandomState(seed)
+    return tb.Table({
+        "city": r.randint(0, 500, n).astype(np.int64),
+        "pop": (r.rand(n) * 1000).astype(np.float64),
+        "crime": (r.rand(n) * 10).astype(np.float64),
+    })
+
+
+def bench_crime_index(n=2_000_000, iters=3):
+    t = _crime_table(n)
+    ref = w.crime_index_np(t)
+    for ex in ("eager", "pipelined"):
+        def once():
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+                return float(w.crime_index(t))
+        us = time_fn(once, iters=iters)
+        assert np.isclose(once(), ref, rtol=1e-6)
+        record(f"fig4/crime_index/{ex}", us, f"n={n}")
+
+
+def bench_data_cleaning(n=2_000_000, iters=3):
+    r = np.random.RandomState(0)
+    vals = r.randn(n) * 1e5
+    vals[r.rand(n) < 0.05] = -5.0
+    t = tb.Table({"value": vals})
+    ref = w.data_cleaning_np(t)
+    for ex in ("eager", "pipelined", "scan"):
+        def once():
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+                valid, total = w.data_cleaning(t)
+                return float(valid), float(total)
+        us = time_fn(once, iters=iters)
+        got = once()
+        assert np.isclose(got[0], ref[0]) and np.isclose(got[1], ref[1], rtol=1e-6)
+        record(f"fig4/data_cleaning/{ex}", us, f"n={n}")
+
+
+def bench_birth_analysis(n=2_000_000, iters=3):
+    r = np.random.RandomState(0)
+    t = tb.Table({
+        "year": r.randint(1950, 2010, n).astype(np.int64),
+        "births": r.randint(1, 50, n).astype(np.float64),
+    })
+    ref = tb._group_reduce(t, "year", "births", "sum")
+    for ex in ("eager", "pipelined"):
+        def once():
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+                return w.birth_analysis(t).value
+        us = time_fn(once, iters=iters)
+        got = once()
+        np.testing.assert_allclose(np.asarray(got.cols["sum"]),
+                                   np.asarray(ref.cols["sum"]), rtol=1e-9)
+        record(f"fig4/birth_analysis/{ex}", us, f"n={n}")
+
+
+def bench_movielens(n=1_000_000, n_movies=4000, iters=3):
+    r = np.random.RandomState(0)
+    ratings = tb.Table({
+        "movie": r.randint(0, n_movies, n).astype(np.int64),
+        "rating": (r.rand(n) * 5).astype(np.float64),
+    })
+    movies = tb.Table({
+        "movie": np.arange(n_movies, dtype=np.int64),
+        "year": r.randint(1950, 2020, n_movies).astype(np.float64),
+    })
+    for ex in ("eager", "pipelined"):
+        def once():
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+                return w.movielens(ratings, movies).value
+        us = time_fn(once, iters=iters)
+        record(f"fig4/movielens/{ex}", us, f"n={n}")
+
+
+def main(quick=False):
+    scale = 4 if quick else 1
+    bench_crime_index(2_000_000 // scale)
+    bench_data_cleaning(2_000_000 // scale)
+    bench_birth_analysis(2_000_000 // scale)
+    bench_movielens(1_000_000 // scale)
+
+
+if __name__ == "__main__":
+    main()

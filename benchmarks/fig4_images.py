@@ -1,0 +1,42 @@
+"""Fig 4 (n-o): ImageMagick-analogue filter pipelines (Nashville, Gotham)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import workloads as w
+from benchmarks.common import record, time_fn
+from repro import hardware
+from repro.core import mozart
+
+
+def _image(h, wd, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).rand(h, wd, 3), jnp.float32)
+
+
+def bench_filter(name, pipeline, h=2000, wd=1500, iters=3):
+    im = _image(h, wd)
+    ref = w.image_pipeline_ref(pipeline, im)
+    base = None
+    for ex in ("eager", "pipelined", "fused", "scan"):
+        def once():
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+                return np.asarray(pipeline(im))
+        us = time_fn(once, iters=iters)
+        got = once()
+        assert np.allclose(got, ref, atol=2e-3), (name, ex)
+        if ex == "eager":
+            base = us
+        record(f"fig4/{name}/{ex}", us,
+               f"img={h}x{wd};speedup_vs_base={base / us:.2f}")
+
+
+def main(quick=False):
+    scale = 2 if quick else 1
+    bench_filter("nashville", w.nashville, 2000 // scale, 1500 // scale)
+    bench_filter("gotham", w.gotham, 2000 // scale, 1500 // scale)
+
+
+if __name__ == "__main__":
+    main()

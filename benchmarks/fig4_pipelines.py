@@ -1,0 +1,111 @@
+"""Fig 4 (a-d, j-m): numerical workloads — un-annotated base vs Mozart.
+
+CPU analogue of the paper's measurement: the "base system" runs each
+library function whole (eager executor = un-annotated NumPy/MKL); Mozart
+pipelines L2-sized chunks through the whole chain.  Both run the SAME
+jit-compiled functions — only the data movement schedule differs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import workloads as w
+from benchmarks.common import record, time_fn
+from repro import hardware
+from repro.core import mozart
+
+EXECUTORS = ("eager", "pipelined", "fused", "scan")
+
+
+def _run(name, build, check, n_label, executors=EXECUTORS, iters=3):
+    base_us = None
+    for ex in executors:
+        def once():
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+                outs = build()
+                return [np.asarray(o) for o in outs]
+        us = time_fn(once, warmup=1, iters=iters)
+        if ex == "eager":
+            base_us = us
+            got = once()
+            ok = check(got)
+            assert ok, f"{name}: eager result mismatch"
+        speedup = base_us / us if base_us else 1.0
+        record(f"fig4/{name}/{ex}", us, f"n={n_label};speedup_vs_base={speedup:.2f}")
+
+
+def bench_black_scholes(n=2_000_000, iters=3):
+    d = w.black_scholes_data(n)
+    ref_call, ref_put = w.black_scholes_np(d)
+
+    def build():
+        call, put = w.black_scholes(**d)
+        return call, put
+
+    def check(got):
+        return (np.allclose(got[0], ref_call, rtol=2e-3, atol=1e-3)
+                and np.allclose(got[1], ref_put, rtol=2e-3, atol=1e-3))
+
+    _run("black_scholes", build, check, n, iters=iters)
+
+
+def bench_haversine(n=2_000_000, iters=3):
+    r = np.random.RandomState(0)
+    lat = jnp.asarray(r.uniform(-1.5, 1.5, n), jnp.float32)
+    lon = jnp.asarray(r.uniform(-3.1, 3.1, n), jnp.float32)
+    ref = w.haversine_np(np.asarray(lat), np.asarray(lon))
+
+    def build():
+        return (w.haversine(lat, lon),)
+
+    def check(got):
+        return np.allclose(got[0], ref, rtol=2e-3, atol=1e-2)
+
+    _run("haversine", build, check, n, iters=iters)
+
+
+def bench_nbody(n=1500, iters=3):
+    r = np.random.RandomState(0)
+    pos = jnp.asarray(r.randn(n, 3), jnp.float32)
+    mass = jnp.asarray(r.rand(n) + 0.1, jnp.float32)
+    ref = w.nbody_np(pos, mass)
+
+    def build():
+        return tuple(w.nbody_step(pos, mass))
+
+    def check(got):
+        return all(np.allclose(g, rr, rtol=5e-2, atol=5e-2)
+                   for g, rr in zip(got, ref))
+
+    _run("nbody", build, check, n, iters=iters)
+
+
+def bench_shallow_water(n=1200, iters=3):
+    r = np.random.RandomState(0)
+    eta = jnp.asarray(1.0 + 0.1 * r.randn(n, n), jnp.float32)
+    u = jnp.zeros((n, n), jnp.float32)
+    v = jnp.zeros((n, n), jnp.float32)
+    ref = w.shallow_water_np(eta, u, v)
+
+    def build():
+        return tuple(w.shallow_water_step(eta, u, v))
+
+    def check(got):
+        return all(np.allclose(g, rr, rtol=1e-2, atol=1e-3)
+                   for g, rr in zip(got, ref))
+
+    _run("shallow_water", build, check, n, iters=iters)
+
+
+def main(quick=False):
+    scale = 4 if quick else 1
+    bench_black_scholes(2_000_000 // scale)
+    bench_haversine(2_000_000 // scale)
+    bench_nbody(1500 // scale)
+    bench_shallow_water(1200 // scale)
+
+
+if __name__ == "__main__":
+    main()

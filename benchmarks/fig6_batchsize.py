@@ -1,0 +1,50 @@
+"""Fig 6: effect of batch (chunk) size; Mozart's heuristic vs a sweep."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import workloads as w
+from benchmarks.common import record, time_fn
+from repro import hardware
+from repro.core import mozart
+
+
+def main(quick=False):
+    n = 2_000_000 // (4 if quick else 1)
+    d = w.black_scholes_data(n)
+
+    def run(batch):
+        def once():
+            with mozart.session(executor="scan", chip=hardware.CPU_HOST,
+                                batch_elements=batch):
+                call, put = w.black_scholes(**d)
+                return np.asarray(call), np.asarray(put)
+        return time_fn(once, iters=3)
+
+    sweeps = [1 << p for p in range(10, 21)]
+    results = {b: run(b) for b in sweeps}
+    for b, us in results.items():
+        record(f"fig6/black_scholes/batch_{b}", us, "")
+
+    # the heuristic's choice (paper: C * L2 / sum(elem bytes))
+    with mozart.session(executor="scan", chip=hardware.CPU_HOST) as ctx:
+        call, put = w.black_scholes(**d)
+        _ = np.asarray(call)
+        heur_chunks = ctx.stats["chunks"]
+    heur_batch = int(np.ceil(n / heur_chunks))
+    heur_us = run(None) if False else time_fn(lambda: _heur_once(d))
+    best_b = min(results, key=results.get)
+    record("fig6/black_scholes/heuristic", heur_us,
+           f"batch~{heur_batch};best_batch={best_b};"
+           f"within={heur_us / results[best_b]:.2f}x_of_best")
+
+
+def _heur_once(d):
+    with mozart.session(executor="scan", chip=hardware.CPU_HOST):
+        call, put = w.black_scholes(**d)
+        return np.asarray(call), np.asarray(put)
+
+
+if __name__ == "__main__":
+    main()

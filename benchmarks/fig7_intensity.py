@@ -1,0 +1,66 @@
+"""Fig 7: compute- vs memory-boundedness.
+
+(a) relative intensity (cycles/byte proxy: time per element on an
+L2-resident array) of add/mul/sqrt/div/erf/exp;
+(b) Mozart speedup over the un-annotated library for 10 chained
+applications of each op on a large array — memory-bound ops benefit most.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import record, time_fn
+from repro import hardware
+from repro.core import annotated_numpy as anp
+from repro.core import mozart
+
+OPS = ["add", "multiply", "sqrt", "divide", "erf", "exp"]
+
+
+def _chain(op, x, times=10):
+    cur = x
+    f = getattr(anp, op)
+    for _ in range(times):
+        if op in ("add", "multiply", "divide"):
+            cur = f(cur, 1.000001)
+        else:
+            cur = f(cur)
+            if op == "exp":
+                cur = anp.multiply(cur, 0.5)   # keep values bounded
+    return cur
+
+
+def main(quick=False):
+    # (a) intensity on an L2-resident array
+    small = jnp.asarray(np.random.RandomState(0).rand(64 * 1024) + 0.5,
+                        jnp.float32)
+    intens = {}
+    for op in OPS:
+        def once():
+            with mozart.session(executor="eager"):
+                return np.asarray(_chain(op, small, times=10))
+        us = time_fn(once, iters=3)
+        intens[op] = us
+        record(f"fig7/intensity/{op}", us, "l2_resident")
+
+    # (b) speedup on a large array
+    n = 4_000_000 // (4 if quick else 1)
+    big = jnp.asarray(np.random.RandomState(1).rand(n) + 0.5, jnp.float32)
+    for op in OPS:
+        def eager():
+            with mozart.session(executor="eager"):
+                return np.asarray(_chain(op, big, times=10))
+        def piped():
+            with mozart.session(executor="scan", chip=hardware.CPU_HOST):
+                return np.asarray(_chain(op, big, times=10))
+        eus = time_fn(eager, iters=3)
+        pus = time_fn(piped, iters=3)
+        record(f"fig7/speedup/{op}", pus,
+               f"eager_us={eus:.0f};speedup={eus/pus:.2f};"
+               f"rel_intensity={intens[op]/intens['add']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

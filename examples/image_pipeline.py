@@ -1,0 +1,37 @@
+"""The paper's Nashville filter through Mozart (ImageMagick integration).
+
+    PYTHONPATH=src python examples/image_pipeline.py
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.workloads import nashville, gotham
+from repro import hardware
+from repro.core import mozart
+
+
+def main():
+    im = jnp.asarray(np.random.RandomState(0).rand(1600, 1200, 3), jnp.float32)
+
+    with mozart.session(executor="eager") as ctx:
+        t0 = time.perf_counter()
+        base = np.asarray(nashville(im))
+        t_base = time.perf_counter() - t0
+
+    with mozart.session(executor="scan", chip=hardware.CPU_HOST) as ctx:
+        t0 = time.perf_counter()
+        out = np.asarray(nashville(im))
+        t_moz = time.perf_counter() - t0
+        stages = ctx.stats["stages"]
+
+    assert np.allclose(out, base, atol=2e-3)
+    print(f"nashville 1600x1200: un-annotated {t_base*1e3:.0f}ms, "
+          f"mozart {t_moz*1e3:.0f}ms ({t_base/t_moz:.2f}x) "
+          f"[{stages} stage(s), row-split pipeline]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""qwen2-vl-2b [vlm] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936; M-RoPE, dynamic resolution.  [arXiv:2409.12191; hf]
+
+The vision frontend (ViT patch encoder) is a STUB per the brief:
+``input_specs()`` supplies precomputed patch/text embeddings plus the three
+M-RoPE position streams (t, h, w)."""
+
+from repro.models.config import AttnConfig, ModelConfig
+
+ARCH_ID = "qwen2-vl-2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="vlm",
+        n_layers=28,
+        d_model=1536,
+        d_ff=8960,
+        vocab_size=151936,
+        attn=AttnConfig(n_heads=12, n_kv_heads=2, head_dim=128,
+                        rope_theta=1000000.0, mrope=True,
+                        mrope_sections=(16, 24, 24)),
+        gated_mlp=True,
+        activation="silu",
+        subquadratic=False,
+        max_seq_len=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab_size=256,
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16, mrope=True,
+                        mrope_sections=(2, 3, 3)),
+        gated_mlp=True,
+        activation="silu",
+    )

@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "granite-34b": "repro.configs.granite_34b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch_id]).smoke_config()

@@ -1,0 +1,75 @@
+"""Assigned input shapes and per-arch applicability rules.
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a KV cache of seq_len), NOT
+``train_step``.  ``long_500k`` requires sub-quadratic attention: it is
+skipped for pure full-attention archs (recorded, not silently dropped) and
+runs for SSM / hybrid / mostly-local archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500k decode needs sub-quadratic attention (see DESIGN.md)"
+    if shape.kind == "decode" and not cfg.decode_supported:
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+def enc_len_for(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Stub speech-frontend length for enc-dec archs."""
+    return min(shape.seq_len, 4096)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train: the batch dict consumed by ``lm.loss_fn``.
+    decode: (token, positions-free) — caches are produced separately via
+    ``eval_shape`` on ``init_caches``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        extra = 1 if shape.kind == "train" else 0    # labels need S+1 tokens
+        batch: dict = {"tokens": jax.ShapeDtypeStruct((B, S + extra), i32)}
+        if cfg.encdec:
+            E = enc_len_for(cfg, shape)
+            batch["enc_embeds"] = jax.ShapeDtypeStruct((B, E, cfg.d_model), cfg.dtype)
+        elif cfg.family == "vlm":
+            batch["input_embeds"] = jax.ShapeDtypeStruct((B, S + extra, cfg.d_model), cfg.dtype)
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, S + extra), i32)
+        elif cfg.family == "audio" and not cfg.encdec:
+            batch["input_embeds"] = jax.ShapeDtypeStruct((B, S + extra, cfg.d_model), cfg.dtype)
+        return batch
+    # decode: one new token against a cache of S tokens
+    out = {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.encdec:
+        E = enc_len_for(cfg, shape)
+        out["enc_out"] = jax.ShapeDtypeStruct((B, E, cfg.d_model), cfg.dtype)
+    return out

@@ -1,0 +1,47 @@
+"""repro.core — Split Annotations (Mozart) in JAX.
+
+The paper's primary contribution: split types + split annotations over
+unmodified functions, lazy dataflow capture (libmozart), the stage planner,
+and the pipelined/parallel executors (Mozart).
+
+Public API:
+    mozart.session / configure / evaluate      — runtime scope
+    splittable / annotate                      — attach SAs to functions
+    split types & specs                        — Along, Broadcast(_), Generic,
+                                                 Unknown, Reduce, Pytree, Custom
+"""
+
+from repro.core import runtime as mozart
+from repro.core.annotation import SA, AnnotatedFn, annotate, splittable
+from repro.core.future import Future
+from repro.core.split_types import (
+    BROADCAST,
+    Along,
+    ArraySplit,
+    Broadcast,
+    Custom,
+    Generic,
+    GenericVar,
+    Pytree,
+    PytreeSplit,
+    Reduce,
+    ReduceSplit,
+    RuntimeInfo,
+    ScalarSplit,
+    SplitSpec,
+    SplitType,
+    TypeEnv,
+    UnificationError,
+    Unknown,
+    UnknownSplit,
+    default_split_type,
+    _,
+)
+
+__all__ = [
+    "mozart", "SA", "AnnotatedFn", "annotate", "splittable", "Future",
+    "BROADCAST", "Along", "ArraySplit", "Broadcast", "Custom", "Generic",
+    "GenericVar", "Pytree", "PytreeSplit", "Reduce", "ReduceSplit",
+    "RuntimeInfo", "ScalarSplit", "SplitSpec", "SplitType", "TypeEnv",
+    "UnificationError", "Unknown", "UnknownSplit", "default_split_type", "_",
+]

@@ -1,0 +1,142 @@
+"""The "ImageMagick" integration (paper §7): row-split image operators.
+
+Images are (H, W, 3) float32 arrays in [0,1].  The split type is the
+paper's MagickWand row split: pieces are horizontal bands (crops), and the
+merge stacks bands back together — which is exactly ``ArraySplit(axis=0)``.
+
+Like the paper we leave boundary-coupled operators (``blur``) un-annotated:
+a blur over a band differs from a blur over the full image at band edges,
+violating the SA condition F(a) = Merge(F(a1), F(a2), ...) (§3.4 / §7.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import split_types as st
+from repro.core.annotation import annotate
+
+__all_ops__: dict[str, object] = {}
+
+
+def _reg(name, fn):
+    __all_ops__[name] = fn
+    globals()[name] = fn
+    return fn
+
+
+def _rgb_to_hsv(img):
+    r, g, b = img[..., 0], img[..., 1], img[..., 2]
+    mx = jnp.max(img, axis=-1)
+    mn = jnp.min(img, axis=-1)
+    d = mx - mn
+    safe = jnp.where(d == 0, 1.0, d)
+    h = jnp.where(
+        mx == r, (g - b) / safe % 6.0,
+        jnp.where(mx == g, (b - r) / safe + 2.0, (r - g) / safe + 4.0),
+    )
+    h = jnp.where(d == 0, 0.0, h) / 6.0
+    s = jnp.where(mx == 0, 0.0, d / jnp.where(mx == 0, 1.0, mx))
+    return jnp.stack([h, s, mx], axis=-1)
+
+
+def _hsv_to_rgb(hsv):
+    h, s, v = hsv[..., 0] * 6.0, hsv[..., 1], hsv[..., 2]
+    i = jnp.floor(h)
+    f = h - i
+    p = v * (1 - s)
+    q = v * (1 - f * s)
+    t = v * (1 - (1 - f) * s)
+    i = i.astype(jnp.int32) % 6
+    r = jnp.select([i == 0, i == 1, i == 2, i == 3, i == 4, i == 5], [v, q, p, p, t, v])
+    g = jnp.select([i == 0, i == 1, i == 2, i == 3, i == 4, i == 5], [t, v, v, q, p, p])
+    b = jnp.select([i == 0, i == 1, i == 2, i == 3, i == 4, i == 5], [p, p, t, v, v, q])
+    return jnp.stack([r, g, b], axis=-1)
+
+
+# -- annotated operators (all row-splittable) --------------------------------
+
+def _colortone(img, color, level, negate):
+    """Blend a solid color weighted by (optionally negated) luminance."""
+    lum = (img[..., 0] * 0.299 + img[..., 1] * 0.587 + img[..., 2] * 0.114)
+    mask = 1.0 - lum if negate else lum
+    alpha = (mask * level)[..., None]
+    c = jnp.asarray(color, img.dtype)
+    return jnp.clip(img * (1 - alpha) + c * alpha, 0.0, 1.0)
+
+
+_reg("colortone", annotate(
+    _colortone, name="colortone", static=("color", "level", "negate"),
+    img=st.Generic("S"), ret=st.Generic("S")))
+
+
+def _gamma(img, g):
+    return jnp.clip(jnp.power(jnp.maximum(img, 1e-6), 1.0 / g), 0.0, 1.0)
+
+
+_reg("gamma", annotate(_gamma, name="gamma", img=st.Generic("S"),
+                       g=st._, ret=st.Generic("S")))
+
+
+def _modulate(img, brightness, saturation, hue):
+    """ImageMagick -modulate (percentages, 100 = unchanged)."""
+    hsv = _rgb_to_hsv(img)
+    h = (hsv[..., 0] + (hue - 100.0) / 200.0) % 1.0
+    s = jnp.clip(hsv[..., 1] * (saturation / 100.0), 0.0, 1.0)
+    v = jnp.clip(hsv[..., 2] * (brightness / 100.0), 0.0, 1.0)
+    return _hsv_to_rgb(jnp.stack([h, s, v], axis=-1))
+
+
+_reg("modulate", annotate(
+    _modulate, name="modulate",
+    img=st.Generic("S"), brightness=st._, saturation=st._, hue=st._,
+    ret=st.Generic("S")))
+
+
+def _contrast(img, amount):
+    """Sigmoidal-ish contrast about mid-gray."""
+    return jnp.clip(0.5 + (img - 0.5) * amount, 0.0, 1.0)
+
+
+_reg("contrast", annotate(_contrast, name="contrast", img=st.Generic("S"),
+                          amount=st._, ret=st.Generic("S")))
+
+
+def _level(img, black, white):
+    return jnp.clip((img - black) / jnp.maximum(white - black, 1e-6), 0.0, 1.0)
+
+
+_reg("level", annotate(_level, name="level", img=st.Generic("S"),
+                       black=st._, white=st._, ret=st.Generic("S")))
+
+
+def _screen_blend(img, other):
+    return 1.0 - (1.0 - img) * (1.0 - other)
+
+
+_reg("screen_blend", annotate(
+    _screen_blend, name="screen_blend",
+    img=st.Generic("S"), other=st.Generic("S"), ret=st.Generic("S")))
+
+
+def _brightness_histogram(img):
+    lum = (img[..., 0] * 0.299 + img[..., 1] * 0.587 + img[..., 2] * 0.114)
+    return jnp.histogram(lum, bins=16, range=(0.0, 1.0))[0]
+
+
+_reg("brightness_histogram", annotate(
+    _brightness_histogram, name="brightness_histogram",
+    img=st.Generic("S"), ret=st.Reduce("add")))
+
+
+# -- deliberately UN-annotated: boundary-coupled (paper §7.1) ------------------
+
+def blur(img, radius: int = 2):
+    """Box blur.  NOT annotatable: band edges differ from full-image edges."""
+    k = 2 * radius + 1
+    kern = jnp.ones((k, k, 1, 1), img.dtype) / (k * k)
+    x = img[None].transpose(0, 3, 1, 2).reshape(-1, 1, *img.shape[:2])
+    out = jax.lax.conv_general_dilated(
+        x, kern.transpose(2, 3, 0, 1), (1, 1), "SAME")
+    return out.reshape(3, *img.shape[:2]).transpose(1, 2, 0)

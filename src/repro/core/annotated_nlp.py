@@ -1,0 +1,136 @@
+"""The "spaCy" integration (paper §7): NLP pipeline over token minibatches.
+
+The paper's spaCy split type uses the library's own minibatch tokenizer to
+split a corpus; any function over text pipelines/parallelizes through it.
+Our analogue: a corpus is a (docs, max_len) padded token-id matrix + length
+vector; ``CorpusSplit`` splits by documents (the minibatch dimension), and
+the "library" ops are jit-compiled per-token taggers / feature extractors —
+unmodified functions, SAs only (the paper integrated spaCy with 20 LoC;
+ours is comparable).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import split_types as st
+from repro.core.annotation import annotate
+
+
+class Corpus:
+    """Padded token-id matrix (docs, max_len) + per-doc lengths."""
+
+    def __init__(self, tokens, lengths):
+        self.tokens = tokens          # (D, L) int32
+        self.lengths = lengths        # (D,) int32
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+def _corpus_flatten(c: Corpus):
+    return [c.tokens, c.lengths], None
+
+
+jax.tree_util.register_pytree_node(
+    Corpus, _corpus_flatten, lambda _, xs: Corpus(*xs))
+
+
+class CorpusSplit(st.SplitType):
+    """Split a corpus by documents (the paper's minibatch split)."""
+
+    name = "CorpusSplit"
+
+    def __init__(self, n_docs: int):
+        super().__init__(int(n_docs))
+        self.n_docs = int(n_docs)
+
+    def info(self, value: Corpus) -> st.RuntimeInfo:
+        eb = int(value.tokens.shape[1]) * 4 + 4
+        return st.RuntimeInfo(num_elements=self.n_docs, elem_bytes=eb)
+
+    def split(self, value: Corpus, start: int, end: int) -> Corpus:
+        return Corpus(value.tokens[start:end], value.lengths[start:end])
+
+    def merge(self, pieces: Sequence[Corpus]) -> Corpus:
+        return Corpus(jnp.concatenate([p.tokens for p in pieces]),
+                      jnp.concatenate([p.lengths for p in pieces]))
+
+
+st.register_default_split(Corpus, lambda c: CorpusSplit(c.n_docs))
+
+
+class CorpusRows(st.SplitSpec):
+    def construct(self, value, bound, generics):
+        if value is None:
+            return st.UnknownSplit()
+        n = value.n_docs if isinstance(value, Corpus) else int(
+            jax.tree_util.tree_leaves(value)[0].shape[0])
+        return CorpusSplit(n)
+
+
+__all_ops__: dict[str, Any] = {}
+
+
+def _reg(name, fn):
+    __all_ops__[name] = fn
+    globals()[name] = fn
+    return fn
+
+
+# -- the "library": unmodified jit-able NLP functions -------------------------
+
+def _pos_tag(corpus: Corpus, emb, head):
+    """Per-token classification with a preloaded model (emb (V,d), head (d,T))."""
+    x = emb[corpus.tokens]                                 # (D, L, d)
+    logits = jnp.einsum("dlk,kt->dlt", x, head)
+    tags = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    mask = jnp.arange(corpus.tokens.shape[1])[None] < corpus.lengths[:, None]
+    return jnp.where(mask, tags, -1)
+
+
+_reg("pos_tag", annotate(_pos_tag, name="pos_tag",
+                         corpus=CorpusRows(), emb=st._, head=st._,
+                         ret=st.Along(0)))
+
+
+def _token_counts(corpus: Corpus):
+    """Corpus-level statistics: valid-token count (a reduction)."""
+    mask = jnp.arange(corpus.tokens.shape[1])[None] < corpus.lengths[:, None]
+    return jnp.sum(mask.astype(jnp.int32))
+
+
+_reg("token_counts", annotate(_token_counts, name="token_counts",
+                              corpus=CorpusRows(), ret=st.Reduce("add")))
+
+
+def _normalize_case(corpus: Corpus, vocab_size: int):
+    """Stub lemmatizer: fold the 'uppercase' half of the vocab down."""
+    half = vocab_size // 2
+    toks = jnp.where(corpus.tokens >= half, corpus.tokens - half, corpus.tokens)
+    return Corpus(toks, corpus.lengths)
+
+
+class _SameCorpus(st.SplitSpec):
+    def construct(self, value, bound, generics):
+        if "S" not in generics:
+            generics["S"] = st.GenericVar("S")
+        return generics["S"]
+
+
+_reg("normalize_case", annotate(_normalize_case, name="normalize_case",
+                                static=("vocab_size",),
+                                corpus=_SameCorpus(), ret=_SameCorpus()))
+
+
+def make_corpus(n_docs: int, max_len: int = 64, vocab: int = 1000,
+                seed: int = 0) -> Corpus:
+    r = np.random.RandomState(seed)
+    lengths = r.randint(4, max_len, n_docs).astype(np.int32)
+    toks = r.randint(0, vocab, (n_docs, max_len)).astype(np.int32)
+    return Corpus(jnp.asarray(toks), jnp.asarray(lengths))

@@ -1,0 +1,190 @@
+"""The "NumPy / Intel MKL" integration (paper §7, Listing 2).
+
+SAs over jnp vector math.  Mirrors the paper's MKL integration: the
+*library* functions are the jit-compiled jnp ops (hand-optimized black
+boxes from Mozart's point of view), and the annotator supplies only split
+types.  Exactly like the paper we generate most SAs from a table because
+functions with matching signatures share an annotation shape.
+
+Usage:
+    from repro.core import annotated_numpy as anp
+    with mozart.session(executor="scan") as ctx:
+        d1 = anp.log1p(x); d2 = anp.add(d1, y); ...
+        result = d2.value
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.special
+
+from repro.core import split_types as st
+from repro.core.annotation import AnnotatedFn, SA, annotate, splittable
+from repro.core.future import register_operator
+
+__all_ops__: dict[str, AnnotatedFn] = {}
+
+
+def _reg(name: str, fn: AnnotatedFn) -> AnnotatedFn:
+    __all_ops__[name] = fn
+    globals()[name] = fn
+    return fn
+
+
+# -- unary elementwise:  (S) -> S  ------------------------------------------
+_UNARY = {
+    "exp": jnp.exp, "log": jnp.log, "log1p": jnp.log1p, "sqrt": jnp.sqrt,
+    "erf": jax.scipy.special.erf, "negative": jnp.negative, "abs": jnp.abs,
+    "sin": jnp.sin, "cos": jnp.cos, "tanh": jnp.tanh, "sign": jnp.sign,
+    "arcsin": jnp.arcsin, "arccos": jnp.arccos, "expm1": jnp.expm1,
+    "square": jnp.square, "reciprocal": jnp.reciprocal, "floor": jnp.floor,
+    "isnan": jnp.isnan, "logical_not": jnp.logical_not,
+}
+
+for _name, _fn in _UNARY.items():
+    def _mk(f):
+        def op(x):
+            return f(x)
+        return op
+    _reg(_name, annotate(_mk(_fn), name=_name, elementwise=True,
+                         x=st.Generic("S"), ret=st.Generic("S")))
+
+
+# -- binary elementwise:  (S, S) -> S  (scalar operands broadcast) ----------
+_BINARY = {
+    "add": jnp.add, "subtract": jnp.subtract, "multiply": jnp.multiply,
+    "divide": jnp.divide, "power": jnp.power, "maximum": jnp.maximum,
+    "minimum": jnp.minimum, "greater": jnp.greater, "less": jnp.less,
+    "equal": jnp.equal, "logical_and": jnp.logical_and,
+    "logical_or": jnp.logical_or, "atan2": jnp.arctan2, "mod": jnp.mod,
+}
+
+
+class _BinarySpec(st.SplitSpec):
+    """Generic S for array operands, broadcast for scalar operands."""
+
+    def construct(self, value, bound, generics):
+        # ``value is None`` = upstream dynamic-shape output: still an array.
+        if value is not None and not getattr(value, "shape", ()):
+            return st.BROADCAST
+        if "S" not in generics:
+            generics["S"] = st.GenericVar("S")
+        return generics["S"]
+
+
+for _name, _fn in _BINARY.items():
+    def _mkb(f):
+        def op(x, y):
+            return f(x, y)
+        return op
+    _reg(_name, annotate(_mkb(_fn), name=_name, elementwise=True,
+                         x=_BinarySpec(), y=_BinarySpec(), ret=st.Generic("S")))
+
+
+# -- ternary ------------------------------------------------------------------
+def _where(c, x, y):
+    return jnp.where(c, x, y)
+
+
+_reg("where", annotate(_where, name="where", elementwise=True,
+                       c=_BinarySpec(), x=_BinarySpec(), y=_BinarySpec(),
+                       ret=st.Generic("S")))
+
+
+# -- reductions: (ArraySplit over axis) -> ReduceSplit --------------------------
+# One split type per reduction merge op, exactly like the paper's NumPy
+# integration ("we implemented split types for each reduction operator ...
+# these only required merge functions").
+def _make_reduction(name: str, red: Callable, merge_op: str):
+    def op(x):
+        return red(x)
+    return _reg(name, annotate(op, name=name, x=st.Generic("S"),
+                               ret=st.Reduce(merge_op)))
+
+
+_make_reduction("sum", jnp.sum, "add")
+_make_reduction("max", jnp.max, "max")
+_make_reduction("min", jnp.min, "min")
+_make_reduction("prod", jnp.prod, "mul")
+
+
+def _sum_axis(x, axis):
+    return jnp.sum(x, axis=axis)
+
+
+class _AxisReduceRet(st.SplitSpec):
+    """sum(m, axis): reducing the split axis yields partials (ReduceSplit);
+    reducing another axis keeps the row split (ArraySplit over axis 0)."""
+
+    def construct(self, value, bound, generics):
+        axis = bound["axis"]
+        if axis == 0:
+            return st.ReduceSplit("add")
+        return st.ArraySplit(tuple(value.shape), 0)
+
+
+_reg("sum_axis", annotate(_sum_axis, name="sum_axis", static=("axis",),
+                          x=st.Along(0), ret=_AxisReduceRet()))
+
+
+# -- shape-changing ops: unknown split types (paper Ex. 4) --------------------
+def _compress(mask, x):
+    # NOTE: dynamic output shape -> not jit-able; Mozart runs it raw per chunk.
+    import numpy as np
+    mask = np.asarray(mask)
+    xx = np.asarray(x)
+    return jnp.asarray(xx[mask])
+
+
+_compress_ann = annotate(_compress, name="compress",
+                         mask=st.Generic("S"), x=st.Generic("S"), ret=st.Unknown())
+_compress_ann.sa.dynamic = True
+_reg("compress", _compress_ann)
+
+
+# -- matrix ops (MKL L2 BLAS analogue) ----------------------------------------
+def _matvec(m, v):
+    return m @ v
+
+
+_reg("matvec", annotate(_matvec, name="matvec",
+                        m=st.Along(0), v=st._, ret=st.Along(0)))
+
+
+def _matmul(a, b):
+    return a @ b
+
+
+# A @ B splits by rows of A; B is broadcast (the paper's matrix-panel split).
+_reg("matmul", annotate(_matmul, name="matmul",
+                        a=st.Along(0), b=st._, ret=st.Along(0)))
+
+
+# -- axis-parameterized normalize (paper §3.1 example) -------------------------
+def _normalize_axis(m, axis):
+    mean = jnp.mean(m, axis=axis, keepdims=True)
+    sd = jnp.std(m, axis=axis, keepdims=True) + 1e-9
+    return (m - mean) / sd
+
+
+class _MatrixSplitCtor(st.SplitSpec):
+    """MatrixSplit(m, axis): split along the axis NOT being normalized."""
+
+    def construct(self, value, bound, generics):
+        axis = int(bound["axis"])
+        split_axis = 1 - axis           # normalizing rows => split rows apart
+        return st.ArraySplit(tuple(value.shape), split_axis)
+
+
+_reg("normalize_axis", annotate(
+    _normalize_axis, name="normalize_axis", static=("axis",),
+    m=_MatrixSplitCtor(), ret=_MatrixSplitCtor()))
+
+
+# -- operator table for Future dunders ---------------------------------------
+for _op in ("add", "subtract", "multiply", "divide", "power", "negative"):
+    register_operator(_op, __all_ops__[_op])

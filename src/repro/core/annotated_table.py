@@ -1,0 +1,321 @@
+"""The "Pandas" integration (paper §7): a columnar Table + SAs.
+
+The Table library itself is deliberately plain (dict of equal-length
+columns, numpy/jnp kernels) — it stands in for Pandas' C internals.  The
+annotator's contribution is ONLY the split types and SAs:
+
+* ``TableSplit``  — split a Table by rows (the paper's DataFrame/Series
+  row split).  Column extraction yields ordinary arrays, whose ArraySplit
+  pipelines with the NumPy integration inside one stage.
+* ``GroupSplit``  — groupBy partials: chunks aggregate locally, the merge
+  re-groups and re-aggregates (commutative aggregations only, like the
+  paper).
+* filters and joins return ``unknown``; joins split one side and broadcast
+  the other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import split_types as st
+from repro.core.annotation import annotate
+
+
+# ---------------------------------------------------------------------------
+# The "library": a minimal columnar table
+# ---------------------------------------------------------------------------
+
+
+class Table:
+    """Dict of equal-length columns.  Registered as a JAX pytree."""
+
+    def __init__(self, cols: dict[str, Any]):
+        self.cols = dict(cols)
+
+    @property
+    def nrows(self) -> int:
+        for v in self.cols.values():
+            return int(v.shape[0])
+        return 0
+
+    def column(self, name: str):
+        return self.cols[name]
+
+    def __repr__(self) -> str:
+        return f"Table({list(self.cols)}, nrows={self.nrows})"
+
+    def to_numpy(self) -> dict[str, np.ndarray]:
+        return {k: np.asarray(v) for k, v in self.cols.items()}
+
+
+def _table_flatten(t: Table):
+    keys = sorted(t.cols)
+    return [t.cols[k] for k in keys], tuple(keys)
+
+
+def _table_unflatten(keys, vals):
+    return Table(dict(zip(keys, vals)))
+
+
+jax.tree_util.register_pytree_node(Table, _table_flatten, _table_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Split types
+# ---------------------------------------------------------------------------
+
+
+class TableSplit(st.SplitType):
+    """Split a Table by rows.  Params: (nrows,)."""
+
+    name = "TableSplit"
+
+    def __init__(self, nrows: int):
+        super().__init__(int(nrows))
+        self.nrows = int(nrows)
+
+    def info(self, value: Table) -> st.RuntimeInfo:
+        eb = sum(np.dtype(v.dtype).itemsize for v in value.cols.values())
+        return st.RuntimeInfo(num_elements=self.nrows, elem_bytes=max(eb, 1))
+
+    def split(self, value: Table, start: int, end: int) -> Table:
+        return Table({k: v[start:end] for k, v in value.cols.items()})
+
+    def merge(self, pieces: Sequence[Table]) -> Table:
+        if len(pieces) == 1:
+            return pieces[0]
+        keys = pieces[0].cols.keys()
+        return Table({k: jnp.concatenate([p.cols[k] for p in pieces]) for k in keys})
+
+
+class GroupSplit(st.SplitType):
+    """Partial group-aggregations; merge re-groups and re-aggregates.
+
+    Params: (op, key column, value column) — partial sums from different
+    aggregations never pipeline into each other.
+    """
+
+    name = "GroupSplit"
+
+    def __init__(self, op: str, key: str, val: str):
+        super().__init__(op, key, val)
+        self.op, self.key, self.val = op, key, val
+
+    @property
+    def splittable(self) -> bool:
+        return False
+
+    def info(self, value: Any) -> None:
+        return None
+
+    def split(self, value, start, end):
+        raise TypeError("GroupSplit values are partials; merge first")
+
+    def merge(self, pieces: Sequence[Table]) -> Table:
+        cat = Table({
+            k: np.concatenate([np.asarray(p.cols[k]) for p in pieces])
+            for k in pieces[0].cols
+        })
+        # Re-aggregate the partials.  Partial columns already hold partial
+        # sums/counts/extrema, so the second-level reduction is sum for
+        # sum/count/mean and the op itself for max/min (associativity).
+        keys = np.asarray(cat.cols[self.key])
+        uniq, inv = np.unique(keys, return_inverse=True)
+
+        def resum(colname):
+            out = np.zeros(len(uniq), np.float64)
+            np.add.at(out, inv, np.asarray(cat.cols[colname], np.float64))
+            return out
+
+        if self.op == "sum":
+            return Table({self.key: uniq, "sum": resum("sum")})
+        if self.op == "count":
+            return Table({self.key: uniq, "count": resum("count").astype(np.int64)})
+        if self.op == "mean":
+            return Table({self.key: uniq, "mean": resum("mean"), "_cnt": resum("_cnt")})
+        vals = np.asarray(cat.cols[self.op], np.float64)
+        out = np.full(len(uniq), -np.inf if self.op == "max" else np.inf)
+        (np.maximum if self.op == "max" else np.minimum).at(out, inv, vals)
+        return Table({self.key: uniq, self.op: out})
+
+
+class TableUnknown(st.UnknownSplit):
+    """unknown for Tables: merge concatenates rows of every column."""
+
+    name = "unknown"
+
+    def merge(self, pieces: Sequence[Table]) -> Table:
+        if len(pieces) == 1:
+            return pieces[0]
+        keys = pieces[0].cols.keys()
+        return Table({
+            k: np.concatenate([np.asarray(p.cols[k]) for p in pieces])
+            for k in keys
+        })
+
+
+st.register_default_split(Table, lambda t: TableSplit(t.nrows))
+
+
+class TableRows(st.SplitSpec):
+    def construct(self, value, bound, generics):
+        if value is None:
+            # downstream of a dynamic op: fresh unknown
+            return TableUnknown()
+        nrows = value.nrows if isinstance(value, Table) else _tree_nrows(value)
+        return TableSplit(nrows)
+
+
+class TableUnknownSpec(st.SplitSpec):
+    def construct(self, value, bound, generics):
+        return TableUnknown()
+
+
+def _tree_nrows(aval_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(aval_tree)
+    return int(leaves[0].shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Aggregation kernels (numpy; the "C internals")
+# ---------------------------------------------------------------------------
+
+_AGG_COLS = {"sum": "sum", "count": "count", "mean": "mean", "max": "max", "min": "min"}
+
+
+def _group_reduce(t: Table, key: str, valcol: str, op: str) -> Table:
+    keys = np.asarray(t.cols[key])
+    uniq, inv = np.unique(keys, return_inverse=True)
+    if op in ("sum", "mean", "count"):
+        sums = np.zeros(len(uniq), np.float64)
+        cnts = np.zeros(len(uniq), np.int64)
+        if op != "count":
+            np.add.at(sums, inv, np.asarray(t.cols[valcol], np.float64))
+        np.add.at(cnts, inv, 1)
+        if op == "sum":
+            return Table({key: uniq, "sum": sums})
+        if op == "count":
+            return Table({key: uniq, "count": cnts})
+        # mean partials carry (sum, count); final mean computed by caller
+        return Table({key: uniq, "mean": sums, "_cnt": cnts.astype(np.float64)})
+    vals = np.asarray(t.cols[valcol], np.float64)
+    out = np.full(len(uniq), -np.inf if op == "max" else np.inf)
+    (np.maximum if op == "max" else np.minimum).at(out, inv, vals)
+    return Table({key: uniq, op: out})
+
+
+def _group_reduce_partial(t: Table, key: str, valcol: str, op: str) -> Table:
+    """Per-chunk partial.  mean -> (sum in 'mean', count in '_cnt')."""
+    return _group_reduce(t, key, valcol, op)
+
+
+# ---------------------------------------------------------------------------
+# Annotated operators (the SAs)
+# ---------------------------------------------------------------------------
+
+__all_ops__: dict[str, Any] = {}
+
+
+def _reg(name, fn):
+    __all_ops__[name] = fn
+    globals()[name] = fn
+    return fn
+
+
+def _col(t: Table, name: str):
+    return t.column(name)
+
+
+_reg("col", annotate(_col, name="col", static=("name",),
+                     t=st.Generic("S"), ret=st.Along(0)))
+
+
+def _with_column(t: Table, name: str, values):
+    cols = dict(t.cols)
+    cols[name] = values
+    return Table(cols)
+
+
+class _SameTableSplit(st.SplitSpec):
+    """with_column keeps the row split of its input table."""
+
+    def construct(self, value, bound, generics):
+        if "S" not in generics:
+            generics["S"] = st.GenericVar("S")
+        return generics["S"]
+
+
+_reg("with_column", annotate(
+    _with_column, name="with_column", static=("name",),
+    t=_SameTableSplit(), values=st.Along(0), ret=_SameTableSplit()))
+
+
+def _select(t: Table, names: tuple):
+    return Table({n: t.cols[n] for n in names})
+
+
+_reg("select", annotate(_select, name="select", static=("names",),
+                        t=st.Generic("S"), ret=st.Generic("S")))
+
+
+def _filter_rows(t: Table, mask):
+    m = np.asarray(mask)
+    return Table({k: np.asarray(v)[m] for k, v in t.cols.items()})
+
+
+# NOTE: mask uses its own generic M — a Series mask and a Table split by rows
+# advance in lockstep (same element counts) but carry different split types.
+_filter = annotate(_filter_rows, name="filter_rows",
+                   t=st.Generic("S"), mask=st.Generic("M"), ret=TableUnknownSpec())
+_filter.sa.dynamic = True
+_reg("filter_rows", _filter)
+
+
+def _groupby_agg(t: Table, key: str, val: str, op: str):
+    return _group_reduce_partial(t, key, val, op)
+
+
+class _GroupRet(st.SplitSpec):
+    def construct(self, value, bound, generics):
+        return GroupSplit(bound["op"], bound["key"], bound["val"])
+
+
+_gb = annotate(_groupby_agg, name="groupby_agg", static=("key", "val", "op"),
+               t=st.Generic("S"), ret=_GroupRet())
+_gb.sa.dynamic = True
+_reg("groupby_agg", _gb)
+
+
+def finalize_mean(t: Table, key: str) -> Table:
+    """Resolve mean partials (sum,count) into the final mean column."""
+    return Table({key: t.cols[key], "mean": np.asarray(t.cols["mean"]) /
+                  np.maximum(np.asarray(t.cols["_cnt"]), 1)})
+
+
+def _join_inner(left: Table, right: Table, on: str):
+    """Inner join; splits LEFT, broadcasts RIGHT (right keys unique)."""
+    lk = np.asarray(left.cols[on])
+    rk = np.asarray(right.cols[on])
+    order = np.argsort(rk, kind="stable")
+    rk_sorted = rk[order]
+    pos = np.searchsorted(rk_sorted, lk)
+    pos = np.clip(pos, 0, len(rk_sorted) - 1)
+    hit = rk_sorted[pos] == lk
+    ridx = order[pos[hit]]
+    out = {k: np.asarray(v)[hit] for k, v in left.cols.items()}
+    for k, v in right.cols.items():
+        if k != on:
+            out[f"{k}_r" if k in out else k] = np.asarray(v)[ridx]
+    return Table(out)
+
+
+_join = annotate(_join_inner, name="join_inner", static=("on",),
+                 left=st.Generic("S"), right=st._, ret=TableUnknownSpec())
+_join.sa.dynamic = True
+_reg("join_inner", _join)

@@ -1,0 +1,157 @@
+"""Split annotations over unmodified functions (paper §3, Listing 3).
+
+``@splittable`` attaches an SA to a function *without changing its body*:
+
+    @splittable(x=Along(0), y=Along(0), ret=Along(0))
+    def vadd(x, y): return x + y                     # the "library" fn
+
+    @splittable(m=Custom(matrix_ctor), axis=_, ret=Reduce("add"), static=("axis",))
+    def sum_reduce(m, axis): ...
+
+The decorated function behaves as follows:
+
+* called with JAX tracers (i.e. from inside someone else's ``jit``) — the
+  original function runs directly; Mozart stays out of the way;
+* called under a lazy Mozart context — the call is *registered* in the
+  dataflow graph and a ``Future`` is returned (libmozart ``register()``);
+* called eagerly (``lazy=False``) — the jitted original runs immediately,
+  which is exactly "the library without Mozart" (our baseline).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.core import split_types as st
+from repro.core.future import Future
+from repro.core.graph import NodeRef
+
+
+class SA:
+    """A split annotation: split specs per argument + return + metadata."""
+
+    def __init__(
+        self,
+        arg_specs: dict[str, st.SplitSpec],
+        ret_spec: st.SplitSpec,
+        static: Sequence[str] = (),
+        elementwise: bool = False,
+        mut: Sequence[str] = (),
+        cost_hint: float = 1.0,
+    ):
+        self.arg_specs = arg_specs
+        self.ret_spec = ret_spec
+        self.static = tuple(static)
+        self.elementwise = elementwise      # hint: stage may lower to Pallas
+        self.mut = tuple(mut)               # donation hint (JAX is pure)
+        self.cost_hint = cost_hint
+
+
+class AnnotatedFn:
+    """A library function wrapped (not modified) by its SA."""
+
+    def __init__(self, fn: Callable, sa: SA, name: str | None = None):
+        functools.update_wrapper(self, fn)
+        self.fn = fn
+        self.sa = sa
+        self.name = name or getattr(fn, "__name__", "fn")
+        self.signature = inspect.signature(fn)
+        self._jitted: Callable | None = None
+
+    # -- plain execution ----------------------------------------------------
+    @property
+    def jitted(self) -> Callable:
+        if self._jitted is None:
+            self._jitted = jax.jit(self.fn, static_argnames=self.sa.static or None)
+        return self._jitted
+
+    def call_eager(self, bound: dict[str, Any]) -> Any:
+        return self.jitted(**bound)
+
+    def call_raw(self, bound: dict[str, Any]) -> Any:
+        return self.fn(**bound)
+
+    # -- laziness -----------------------------------------------------------
+    def __call__(self, *args, **kwargs):
+        from repro.core.runtime import current_context
+
+        b = self.signature.bind(*args, **kwargs)
+        b.apply_defaults()
+        bound = dict(b.arguments)
+
+        # Inside someone else's trace: step aside entirely.
+        if any(isinstance(v, jax.core.Tracer) for v in bound.values()):
+            return self.fn(**bound)
+
+        ctx = current_context()
+        if ctx is None or not ctx.lazy:
+            return self.call_eager(self._force_all(bound))
+        return ctx.register_call(self, bound)
+
+    @staticmethod
+    def _force_all(bound: dict[str, Any]) -> dict[str, Any]:
+        return {
+            k: (v.value if isinstance(v, Future) else v) for k, v in bound.items()
+        }
+
+    def __repr__(self) -> str:
+        return f"AnnotatedFn({self.name})"
+
+    # -- SA machinery ---------------------------------------------------------
+    def abstract_eval(self, bound_avals: dict[str, Any]) -> Any:
+        """Output aval via jax.eval_shape, statics closed over."""
+        statics = {k: bound_avals[k] for k in self.sa.static}
+        arrs = {k: v for k, v in bound_avals.items() if k not in self.sa.static}
+
+        def f(**kw):
+            return self.fn(**kw, **statics)
+
+        return jax.eval_shape(f, **arrs)
+
+    def construct_types(self, bound: dict[str, Any], avals: dict[str, Any], out_aval):
+        """Run every split-type constructor for one call (paper §3.2)."""
+        generics: dict[str, st.GenericVar] = {}
+        ctor_args = dict(bound)          # constructors may read runtime args
+        arg_types: dict[str, Any] = {}
+        for name, value in bound.items():
+            spec = self.sa.arg_specs.get(name, st._)
+            arg_types[name] = spec.construct(avals[name], ctor_args, generics)
+        out_type = self.sa.ret_spec.construct(out_aval, ctor_args, generics)
+        return arg_types, out_type
+
+
+def splittable(
+    ret: st.SplitSpec | None = None,
+    static: Sequence[str] = (),
+    elementwise: bool = False,
+    mut: Sequence[str] = (),
+    name: str | None = None,
+    **arg_specs: st.SplitSpec,
+) -> Callable[[Callable], AnnotatedFn]:
+    """Attach a split annotation to an unmodified function.
+
+    ``ret`` defaults to a fresh SA-local generic if any argument uses a
+    generic, else to ``Along(0)``-style inference is NOT attempted — the
+    annotator should be explicit; we default to ``Unknown()`` which is always
+    safe (it merely prevents pipelining downstream).
+    """
+    if ret is None:
+        ret = st.Unknown()
+
+    def deco(fn: Callable) -> AnnotatedFn:
+        sa = SA(dict(arg_specs), ret, static=static, elementwise=elementwise, mut=mut)
+        return AnnotatedFn(fn, sa, name=name)
+
+    return deco
+
+
+def annotate(fn: Callable, *, ret: st.SplitSpec | None = None,
+             static: Sequence[str] = (), elementwise: bool = False,
+             name: str | None = None, **arg_specs: st.SplitSpec) -> AnnotatedFn:
+    """Annotate a function you do not own (third-party annotator workflow)."""
+    return splittable(ret=ret, static=static, elementwise=elementwise,
+                      name=name or getattr(fn, "__name__", "fn"), **arg_specs)(fn)

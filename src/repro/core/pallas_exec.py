@@ -1,0 +1,133 @@
+"""Lower a planned Mozart stage onto the split-pipeline Pallas kernel.
+
+Eligibility (checked, with graceful fallback to the fused executor):
+  * every node is annotated ``elementwise=True``, or is a whole-array
+    reduction whose output type is ``ReduceSplit`` (sum/max/min/prod);
+  * every splittable stage input is a 1-D ``ArraySplit`` along axis 0 and
+    all agree on length;
+  * broadcast inputs are scalars ();
+  * reductions are only consumed outside the stage (they produce partials).
+
+The stage chain itself is *reused as-is*: the kernel body calls each
+annotated function's original implementation on VMEM-resident tiles — the
+library function is still unmodified, it simply runs on a (1, BLOCK) block.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import hardware
+from repro.core import split_types as st
+from repro.core.executor import stage_elem_bytes, stage_num_elements
+from repro.core.graph import NodeRef
+from repro.core.planner import Stage, _value_key
+
+
+def _eligible(stage: Stage, concrete: dict[tuple, Any]) -> bool:
+    for node in stage.nodes:
+        t = stage.out_types[node.id]
+        if node.fn.sa.elementwise:
+            continue
+        if isinstance(t, st.ReduceSplit):
+            continue
+        return False
+    for key, si in stage.inputs.items():
+        v = concrete[key]
+        if si.split_type.splittable:
+            if not isinstance(si.split_type, st.ArraySplit):
+                return False
+            if si.split_type.axis != 0 or len(si.split_type.shape) != 1:
+                return False
+        else:
+            if getattr(v, "shape", ()) not in ((), (1,)):
+                return False
+    # reductions must not feed later nodes inside this stage
+    node_ids = {n.id for n in stage.nodes}
+    for node in stage.nodes:
+        if isinstance(stage.out_types[node.id], st.ReduceSplit):
+            for other in stage.nodes:
+                for v in other.bound.values():
+                    if isinstance(v, NodeRef) and v.node_id == node.id:
+                        return False
+    return True
+
+
+def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx) -> bool:
+    from repro.kernels.split_pipeline import split_pipeline_call
+
+    if not _eligible(stage, concrete):
+        return False
+
+    split_keys = [k for k, si in stage.inputs.items() if si.split_type.splittable]
+    bcast_keys = [k for k, si in stage.inputs.items() if not si.split_type.splittable]
+    if not split_keys:
+        return False
+
+    n = stage_num_elements(stage, concrete, ctx.pedantic)
+    elem_bytes = stage_elem_bytes(stage, concrete, n)
+    batch = ctx.batch_elements or hardware.mozart_batch_elements(elem_bytes, ctx.chip)
+
+    escape_ids = sorted(stage.escaping)
+    out_kinds = []
+    out_dtypes = []
+    for nid in escape_ids:
+        t = stage.out_types[nid]
+        node = next(nd for nd in stage.nodes if nd.id == nid)
+        if isinstance(t, st.ReduceSplit):
+            out_kinds.append(("reduce", t.op_name))
+        else:
+            out_kinds.append(("concat", ""))
+        out_dtypes.append(node.out_aval.dtype)
+
+    def chain_fn(blocks, bcasts):
+        env: dict[Any, Any] = {}
+        for k, b in zip(split_keys, blocks):
+            env[k] = b
+        for k, b in zip(bcast_keys, bcasts):
+            env[k] = b
+        reduce_src: dict[int, Any] = {}
+        for node in stage.nodes:
+            kw = {}
+            src = None
+            for name, v in node.bound.items():
+                if name in node.fn.sa.static:
+                    kw[name] = v
+                    continue
+                if isinstance(v, NodeRef) and ("node", v.node_id) in env:
+                    kw[name] = env[("node", v.node_id)]
+                else:
+                    kw[name] = env[_value_key(v)]
+                if src is None:
+                    src = kw[name]
+            if isinstance(stage.out_types[node.id], st.ReduceSplit):
+                # The kernel applies the masked reduction itself (padding must
+                # be excluded), so hand it the PRE-reduction block.
+                reduce_src[node.id] = src
+                env[("node", node.id)] = node.fn.fn(**kw)
+            else:
+                env[("node", node.id)] = node.fn.fn(**kw)  # unmodified library fn
+        outs = []
+        for nid, (kind, _) in zip(escape_ids, out_kinds):
+            outs.append(reduce_src[nid] if kind == "reduce" else env[("node", nid)])
+        return outs
+
+    results = split_pipeline_call(
+        chain_fn,
+        [concrete[k] for k in split_keys],
+        [concrete[k] for k in bcast_keys],
+        out_kinds,
+        out_dtypes,
+        block_elems=batch,
+        interpret=(jax.default_backend() != "tpu"),
+    )
+    for nid, res in zip(escape_ids, results):
+        node = next(nd for nd in stage.nodes if nd.id == nid)
+        node.result = res
+    for node in stage.nodes:
+        node.done = True
+    ctx.stats["pallas_stages"] += 1
+    return True

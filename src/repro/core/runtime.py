@@ -1,0 +1,148 @@
+"""The Mozart runtime facade: contexts, configuration, evaluation.
+
+A ``MozartContext`` owns a dataflow graph (libmozart), a planner, and an
+executor configuration.  ``evaluate()`` converts pending annotated calls into
+stages and runs them (paper Figure 2).  Contexts nest; ``mozart.session``
+is the user-facing way to scope configuration:
+
+    with mozart.session(executor="scan"):
+        out = bs.black_scholes(price, strike, ...)   # lazy
+        print(out.value)                             # forces evaluation
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import threading
+import weakref
+from typing import Any
+
+from repro import hardware
+from repro.core import split_types as st
+from repro.core.future import Future
+from repro.core.graph import DataflowGraph, NodeRef
+from repro.core.planner import plan
+from repro.core.executor import execute_stage
+
+
+class MozartContext:
+    def __init__(
+        self,
+        executor: str = "pipelined",
+        chip: hardware.Chip = hardware.TARGET,
+        mesh=None,
+        data_axes: tuple[str, ...] = ("data",),
+        lazy: bool = True,
+        pedantic: bool = False,
+        batch_elements: int | None = None,
+        log: bool = False,
+        inner_executor: str = "fused",
+        pipeline: bool = True,
+    ):
+        self.executor = executor
+        self.chip = chip
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.lazy = lazy
+        self.pedantic = pedantic
+        self.batch_elements = batch_elements
+        self.log = log
+        self.inner_executor = inner_executor    # per-shard strategy for "sharded"
+        self.pipeline = pipeline                 # False: Table-4 "-pipe" ablation
+        self.graph = DataflowGraph()
+        self.stats: collections.Counter = collections.Counter()
+
+    # -- libmozart register() -------------------------------------------------
+    def register_call(self, fn, bound: dict[str, Any]) -> Future:
+        avals: dict[str, Any] = {}
+        ctor_bound: dict[str, Any] = {}
+        stored: dict[str, Any] = {}
+        for name, v in bound.items():
+            if isinstance(v, Future):
+                node = v._node
+                avals[name] = node.out_aval
+                ctor_bound[name] = node.out_aval     # ctors may read .shape
+                stored[name] = NodeRef(node.id)
+            else:
+                avals[name] = v
+                ctor_bound[name] = v
+                stored[name] = v
+
+        # Dynamic-shape functions (and consumers of their outputs) cannot be
+        # abstractly evaluated; they run un-jitted per chunk (paper: filters).
+        if getattr(fn.sa, "dynamic", False) or any(a is None for a in avals.values()):
+            out_aval = None
+        else:
+            out_aval = fn.abstract_eval(avals)
+        arg_types, out_type = fn.construct_types(ctor_bound, avals, out_aval)
+        node = self.graph.register(fn, stored, arg_types, out_type, out_aval)
+        fut = Future(self, node)
+        node.future_ref = weakref.ref(fut)
+        self.stats["registered"] += 1
+        return fut
+
+    # -- libmozart evaluate() ---------------------------------------------------
+    def evaluate(self) -> None:
+        pending = self.graph.pending()
+        if not pending:
+            return
+        stages = plan(pending, self.graph,
+                      max_stage_nodes=None if self.pipeline else 1)
+        self.stats["evaluations"] += 1
+        if self.log:
+            for s in stages:
+                names = ",".join(n.fn.name for n in s.nodes)
+                print(f"[mozart] stage {s.id}: [{names}] inputs="
+                      f"{[str(si.split_type) for si in s.inputs.values()]}")
+        for s in stages:
+            execute_stage(s, self.graph, self)
+        self.graph.prune()
+
+    def last_plan(self):
+        """Plan (without executing) — used by tests and EXPLAIN tooling."""
+        return plan(self.graph.pending(), self.graph,
+                    max_stage_nodes=None if self.pipeline else 1)
+
+
+_tls = threading.local()
+
+
+def _stack() -> list[MozartContext]:
+    if not hasattr(_tls, "stack"):
+        _tls.stack = [MozartContext()]      # paper behaviour: lazy by default
+    return _tls.stack
+
+
+def current_context() -> MozartContext | None:
+    s = _stack()
+    return s[-1] if s else None
+
+
+def configure(**kwargs) -> MozartContext:
+    """Reconfigure the innermost context (flushes pending work first)."""
+    ctx = current_context()
+    if ctx is not None:
+        ctx.evaluate()
+    for k, v in kwargs.items():
+        if not hasattr(ctx, k):
+            raise AttributeError(f"unknown Mozart option {k!r}")
+        setattr(ctx, k, v)
+    return ctx
+
+
+@contextlib.contextmanager
+def session(**kwargs):
+    ctx = MozartContext(**kwargs)
+    _stack().append(ctx)
+    try:
+        yield ctx
+        ctx.evaluate()                       # flush at scope exit
+    finally:
+        _stack().pop()
+
+
+def evaluate() -> None:
+    ctx = current_context()
+    if ctx is not None:
+        ctx.evaluate()

@@ -1,0 +1,446 @@
+"""Split types and the splitting API (paper §3).
+
+A *split type* is a parameterized type ``N<V0..Vn>``: two split types are
+equal iff their names and parameters are equal.  Equal split types mean two
+values are split the same way and corresponding pieces may be passed to a
+function together (pipelined).  Annotators bridge the abstraction to code by
+implementing the splitting API: ``constructor`` (function args -> params),
+``split`` (value, [start,end) -> piece), ``merge`` (pieces -> value,
+associative) and ``info`` (element count / element byte width).
+
+This module provides the split-type algebra plus the concrete split types
+used by our library integrations:
+
+* ``ArraySplit``    — split a jnp array along one axis (NumPy/MKL analogue).
+* ``ScalarSplit``   — the paper's missing type "_": broadcast, never split.
+* ``ReduceSplit``   — partial results merged by an associative reduction.
+* ``ConcatSplit``   — alias family for merge-by-concatenation of new outputs.
+* ``UnknownSplit``  — the unique ``unknown`` type (filters etc.).
+* ``GenericVar``    — an SA-local generic (``S``), resolved by unification.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeInfo:
+    """Relayed to Mozart by ``info`` (paper Table 1) to size batches."""
+
+    num_elements: int      # how many splittable elements the value contains
+    elem_bytes: int        # bytes occupied by ONE element (a slice)
+
+
+class SplitType:
+    """Base class. Identity = (name, params); paper §3.2."""
+
+    #: human-readable type name; parameters complete the identity.
+    name: str = "SplitType"
+
+    def __init__(self, *params: Any):
+        self.params = tuple(params)
+
+    # -- type identity ----------------------------------------------------
+    def key(self) -> tuple:
+        return (self.name, self.params)
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, SplitType) and self.key() == other.key()
+
+    def __hash__(self) -> int:
+        return hash(self.key())
+
+    def __repr__(self) -> str:
+        ps = ", ".join(repr(p) for p in self.params)
+        return f"{self.name}<{ps}>"
+
+    # -- splitting API (paper Table 1) ------------------------------------
+    @property
+    def splittable(self) -> bool:
+        """False for broadcast-like types that are copied, not split."""
+        return True
+
+    def info(self, value: Any) -> RuntimeInfo | None:
+        raise NotImplementedError
+
+    def split(self, value: Any, start: int, end: int) -> Any:
+        raise NotImplementedError
+
+    def merge(self, pieces: Sequence[Any]) -> Any:
+        raise NotImplementedError
+
+
+class ScalarSplit(SplitType):
+    """The paper's "_" type: the value is copied to every pipeline."""
+
+    name = "_"
+
+    @property
+    def splittable(self) -> bool:
+        return False
+
+    def info(self, value: Any) -> None:
+        return None                      # does not constrain batch counts
+
+    def split(self, value: Any, start: int, end: int) -> Any:
+        return value                     # pointer copy in the paper
+
+    def merge(self, pieces: Sequence[Any]) -> Any:
+        return pieces[-1]
+
+
+#: canonical broadcast instance — all ScalarSplit() compare equal anyway.
+BROADCAST = ScalarSplit()
+
+
+def _elem_bytes_along(aval_like: Any, axis: int) -> int:
+    shape = tuple(aval_like.shape)
+    dt = jnp.dtype(aval_like.dtype)
+    total = math.prod(shape) * dt.itemsize if shape else dt.itemsize
+    n = shape[axis] if shape else 1
+    return max(total // max(n, 1), 1)
+
+
+class ArraySplit(SplitType):
+    """Split an N-d array along one axis into regularly sized pieces.
+
+    Parameters are ``(shape, axis)`` — mirroring the paper's
+    ``MatrixSplit<rows, cols, axis>``; equality therefore requires both the
+    same dimensions AND the same iteration axis (paper §3.1's normalize-
+    rows-then-columns example maps to ArraySplit((r,c),0) != ArraySplit((r,c),1)).
+    """
+
+    name = "ArraySplit"
+
+    def __init__(self, shape: Sequence[int], axis: int = 0):
+        shape = tuple(int(s) for s in shape)
+        axis = int(axis)
+        if not -len(shape) <= axis < len(shape) if shape else axis != 0:
+            raise ValueError(f"axis {axis} out of bounds for shape {shape}")
+        if shape:
+            axis %= len(shape)
+        super().__init__(shape, axis)
+        self.shape = shape
+        self.axis = axis
+
+    def info(self, value: Any) -> RuntimeInfo:
+        return RuntimeInfo(
+            num_elements=self.shape[self.axis] if self.shape else 1,
+            elem_bytes=_elem_bytes_along(value, self.axis) if self.shape else jnp.dtype(value.dtype).itemsize,
+        )
+
+    def split(self, value: Any, start: int, end: int) -> Any:
+        return jax.lax.slice_in_dim(value, start, end, axis=self.axis)
+
+    def merge(self, pieces: Sequence[Any]) -> Any:
+        if len(pieces) == 1:
+            return pieces[0]
+        return jnp.concatenate(list(pieces), axis=self.axis)
+
+
+class ReduceSplit(SplitType):
+    """Output-only split type for reductions (paper Ex. 5).
+
+    Pieces are partial results; ``merge`` combines them with an associative
+    operator.  The ``op_name`` participates in type identity so that, e.g.,
+    partial sums are never pipelined into a consumer expecting partial maxes.
+    """
+
+    name = "ReduceSplit"
+
+    _OPS: dict[str, Callable[[Any, Any], Any]] = {
+        "add": lambda a, b: a + b,
+        "mul": lambda a, b: a * b,
+        "max": jnp.maximum,
+        "min": jnp.minimum,
+    }
+
+    def __init__(self, op_name: str, extra: tuple = ()):  # extra e.g. axis
+        if op_name not in self._OPS:
+            raise ValueError(f"unknown reduce op {op_name!r}")
+        super().__init__(op_name, tuple(extra))
+        self.op_name = op_name
+
+    @property
+    def splittable(self) -> bool:
+        return False                     # you cannot re-split a partial
+
+    def info(self, value: Any) -> None:
+        return None
+
+    def split(self, value: Any, start: int, end: int) -> Any:
+        raise TypeError("ReduceSplit values are partial results; merge first")
+
+    def merge(self, pieces: Sequence[Any]) -> Any:
+        op = self._OPS[self.op_name]
+        out = pieces[0]
+        for p in pieces[1:]:
+            out = op(out, p)
+        return out
+
+
+_unknown_uid = itertools.count()
+
+
+class UnknownSplit(SplitType):
+    """The paper's ``unknown``: a *unique* split type per instantiation.
+
+    Uniqueness prevents pipelining two independently-filtered values
+    together, while generics may still bind to an unknown value (a generic
+    consumer accepts pieces split in whatever way the producer emitted).
+    Merging concatenates along ``axis`` (the producer's iteration axis).
+    """
+
+    name = "unknown"
+
+    def __init__(self, axis: int = 0, _uid: int | None = None):
+        uid = next(_unknown_uid) if _uid is None else _uid
+        super().__init__(uid)
+        self.axis = axis
+        self.uid = uid
+
+    def info(self, value: Any) -> None:
+        return None                      # element count is unknowable
+
+    def split(self, value: Any, start: int, end: int) -> Any:
+        raise TypeError("unknown-typed values cannot be re-split without a merge")
+
+    def merge(self, pieces: Sequence[Any]) -> Any:
+        if len(pieces) == 1:
+            return pieces[0]
+        return jnp.concatenate(list(pieces), axis=self.axis)
+
+
+class PytreeSplit(SplitType):
+    """Split every array leaf of a pytree along ``axis`` in lockstep.
+
+    Used for optimizer states / (param, m, v) bundles so the whole training
+    update pipelines as one stage.  Identity params: (treedef repr, leading
+    sizes, axis).
+    """
+
+    name = "PytreeSplit"
+
+    def __init__(self, treedef_repr: str, length: int, axis: int = 0):
+        super().__init__(treedef_repr, int(length), int(axis))
+        self.length = int(length)
+        self.axis = int(axis)
+
+    def info(self, value: Any) -> RuntimeInfo:
+        leaves = jax.tree_util.tree_leaves(value)
+        per_elem = sum(_elem_bytes_along(l, self.axis) for l in leaves)
+        return RuntimeInfo(num_elements=self.length, elem_bytes=per_elem)
+
+    def split(self, value: Any, start: int, end: int) -> Any:
+        return jax.tree_util.tree_map(
+            lambda l: jax.lax.slice_in_dim(l, start, end, axis=self.axis), value
+        )
+
+    def merge(self, pieces: Sequence[Any]) -> Any:
+        if len(pieces) == 1:
+            return pieces[0]
+        return jax.tree_util.tree_map(
+            lambda *ls: jnp.concatenate(ls, axis=self.axis), *pieces
+        )
+
+
+# ---------------------------------------------------------------------------
+# Type variables & unification (generics + inference, paper §3.2/§5.1)
+# ---------------------------------------------------------------------------
+
+
+class GenericVar:
+    """An SA-local generic (``S``).  Fresh per function *call*."""
+
+    __slots__ = ("label", "uid")
+    _uids = itertools.count()
+
+    def __init__(self, label: str):
+        self.label = label
+        self.uid = next(GenericVar._uids)
+
+    def __repr__(self) -> str:
+        return f"?{self.label}{self.uid}"
+
+
+class UnificationError(Exception):
+    pass
+
+
+class TypeEnv:
+    """Union-find over GenericVars with concrete SplitType bindings.
+
+    Implements the paper's "push known types along the edges of the graph"
+    inference (§5.1).  Unknown split types are concrete-but-unique, so a var
+    may bind to one, while two distinct unknowns never unify.
+    """
+
+    def __init__(self) -> None:
+        self._parent: dict[int, GenericVar] = {}
+        self._binding: dict[int, SplitType] = {}
+
+    def _find(self, v: GenericVar) -> GenericVar:
+        p = self._parent.get(v.uid)
+        if p is None or p.uid == v.uid:
+            return v
+        root = self._find(p)
+        self._parent[v.uid] = root
+        return root
+
+    def resolve(self, t: "SplitType | GenericVar") -> "SplitType | GenericVar":
+        if isinstance(t, GenericVar):
+            root = self._find(t)
+            return self._binding.get(root.uid, root)
+        return t
+
+    def unify(self, a: "SplitType | GenericVar", b: "SplitType | GenericVar") -> None:
+        a, b = self.resolve(a), self.resolve(b)
+        if isinstance(a, GenericVar) and isinstance(b, GenericVar):
+            if a.uid != b.uid:
+                self._parent[a.uid] = b
+            return
+        if isinstance(a, GenericVar):
+            self._binding[a.uid] = b
+            return
+        if isinstance(b, GenericVar):
+            self._binding[b.uid] = a
+            return
+        if a != b:
+            raise UnificationError(f"split types differ: {a} vs {b}")
+
+    def snapshot(self) -> tuple:
+        return (dict(self._parent), dict(self._binding))
+
+    def restore(self, snap: tuple) -> None:
+        self._parent, self._binding = dict(snap[0]), dict(snap[1])
+
+
+# ---------------------------------------------------------------------------
+# Split SPECS — what annotators write inside an SA.  A spec is the split-type
+# *constructor* (paper §3.2): at call time it maps the bound function
+# arguments to a concrete split type (or a generic var / broadcast).
+# ---------------------------------------------------------------------------
+
+
+class SplitSpec:
+    def construct(self, value: Any, bound: dict[str, Any], generics: dict[str, GenericVar]):
+        raise NotImplementedError
+
+
+class Along(SplitSpec):
+    """ArraySplit along ``axis``; the constructor reads the value's shape.
+
+    ``axis`` may also be the *name* of a function argument (runtime value),
+    mirroring the paper's ``MatrixSplit(m, axis)`` constructor.
+    """
+
+    def __init__(self, axis: int | str = 0):
+        self.axis = axis
+
+    def construct(self, value, bound, generics):
+        if value is None:            # downstream of a dynamic-shape op
+            return UnknownSplit()
+        axis = bound[self.axis] if isinstance(self.axis, str) else self.axis
+        shape = tuple(value.shape)
+        if not shape:
+            return BROADCAST
+        return ArraySplit(shape, int(axis))
+
+
+class Broadcast(SplitSpec):
+    def construct(self, value, bound, generics):
+        return BROADCAST
+
+
+#: annotators may write ``_`` like the paper.
+_ = Broadcast()
+
+
+class Generic(SplitSpec):
+    def __init__(self, label: str = "S"):
+        self.label = label
+
+    def construct(self, value, bound, generics):
+        if self.label not in generics:
+            generics[self.label] = GenericVar(self.label)
+        return generics[self.label]
+
+
+class Unknown(SplitSpec):
+    def __init__(self, axis: int = 0):
+        self.axis = axis
+
+    def construct(self, value, bound, generics):
+        return UnknownSplit(axis=self.axis)
+
+
+class Reduce(SplitSpec):
+    def __init__(self, op_name: str, extra: tuple = ()):
+        self.op_name = op_name
+        self.extra = extra
+
+    def construct(self, value, bound, generics):
+        return ReduceSplit(self.op_name, self.extra)
+
+
+class Custom(SplitSpec):
+    """Escape hatch: an arbitrary constructor ``(value, bound_args) -> SplitType``."""
+
+    def __init__(self, fn: Callable[[Any, dict[str, Any]], SplitType]):
+        self.fn = fn
+
+    def construct(self, value, bound, generics):
+        return self.fn(value, bound)
+
+
+class Pytree(SplitSpec):
+    """PytreeSplit along ``axis`` of every leaf; length from the first leaf."""
+
+    def __init__(self, axis: int = 0):
+        self.axis = axis
+
+    def construct(self, value, bound, generics):
+        leaves, treedef = jax.tree_util.tree_flatten(value)
+        if not leaves:
+            return BROADCAST
+        return PytreeSplit(str(treedef), leaves[0].shape[self.axis], self.axis)
+
+
+#: per-data-type default split constructors (paper §5.1: "annotators provide
+#: a default split type constructor per data type").
+_DEFAULT_SPLITS: list[tuple[type, Callable[[Any], "SplitType"]]] = []
+
+
+def register_default_split(cls: type, ctor: Callable[[Any], "SplitType"]) -> None:
+    _DEFAULT_SPLITS.append((cls, ctor))
+
+
+def default_split_type(value: Any) -> SplitType:
+    """Paper §5.1 fallback: per-data-type default when inference fails."""
+    for cls, ctor in _DEFAULT_SPLITS:
+        if isinstance(value, cls):
+            return ctor(value)
+    shape = tuple(getattr(value, "shape", ()))
+    if not shape:
+        return BROADCAST
+    return ArraySplit(shape, 0)
+
+
+def aval_of(x: Any) -> jax.ShapeDtypeStruct:
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    arr = jnp.asarray(x) if not hasattr(x, "shape") else x
+    return jax.ShapeDtypeStruct(tuple(arr.shape), jnp.dtype(arr.dtype))
+
+
+def nbytes_of(x: Any) -> int:
+    aval = aval_of(x)
+    return math.prod(aval.shape or (1,)) * jnp.dtype(aval.dtype).itemsize

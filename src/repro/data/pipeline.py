@@ -1,0 +1,146 @@
+"""Token data pipeline with SA-annotated preprocessing.
+
+Sources: synthetic (seeded Zipfian tokens — deterministic across restarts,
+indexable by step for exact resume) or a binary token file (memory-mapped
+uint16/uint32).  Preprocessing transforms (dtype cast, clipping to vocab,
+sequence packing into (B, S+1) windows) are ANNOTATED functions, so the
+per-host slice of every global batch is produced by a Mozart pipeline —
+chunked through fast memory and parallelizable across workers, exactly like
+the paper's data-loading workloads (Pandas data cleaning).
+
+A background prefetch thread keeps ``prefetch`` batches ahead of the
+training loop (overlap of input pipeline with compute).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mozart
+from repro.core import split_types as st
+from repro.core.annotation import annotate
+from repro.models.config import ModelConfig
+
+
+# -- annotated preprocessing ops (the "library") ------------------------------
+
+def _mod_vocab(x, vocab):
+    return jnp.mod(x, vocab)
+
+
+def _to_i32(x):
+    return x.astype(jnp.int32)
+
+
+mod_vocab = annotate(_mod_vocab, name="mod_vocab", elementwise=True,
+                     x=st.Generic("S"), vocab=st._, ret=st.Generic("S"))
+to_i32 = annotate(_to_i32, name="to_i32", elementwise=True,
+                  x=st.Generic("S"), ret=st.Generic("S"))
+
+
+class TokenSource:
+    """Deterministic, step-indexable token source."""
+
+    def __init__(self, vocab_size: int, seed: int = 0,
+                 token_file: str | None = None):
+        self.vocab_size = vocab_size
+        self.seed = seed
+        if token_file:
+            raw = np.memmap(token_file, dtype=np.uint16, mode="r")
+            self._tokens = raw
+        else:
+            self._tokens = None
+
+    def batch_at(self, step: int, batch: int, seq: int) -> np.ndarray:
+        """The (batch, seq+1) token window for one global step."""
+        n = batch * (seq + 1)
+        if self._tokens is not None:
+            start = (step * n) % max(len(self._tokens) - n, 1)
+            flat = np.asarray(self._tokens[start:start + n], np.int64)
+        else:
+            rng = np.random.default_rng(self.seed + step)
+            # Zipf-ish distribution bounded to vocab
+            flat = rng.zipf(1.3, size=n).astype(np.int64)
+        return flat.reshape(batch, seq + 1)
+
+
+class DataPipeline:
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, *,
+                 seed: int = 0, token_file: str | None = None,
+                 prefetch: int = 2, use_mozart: bool = True):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.source = TokenSource(cfg.vocab_size, seed, token_file)
+        self.prefetch = prefetch
+        self.use_mozart = use_mozart
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # -- single-batch path (exact resume: call with any step) ---------------
+    def batch_for_step(self, step: int) -> dict:
+        raw = self.source.batch_at(step, self.batch, self.seq)
+        if self.use_mozart:
+            with mozart.session(executor="fused") as _:
+                x = to_i32(mod_vocab(jnp.asarray(raw), self.cfg.vocab_size))
+                tokens = x.value
+        else:
+            tokens = jnp.asarray(raw % self.cfg.vocab_size, jnp.int32)
+        batch = {"tokens": tokens}
+        if self.cfg.encdec:
+            rng = np.random.default_rng(step)
+            batch["enc_embeds"] = jnp.asarray(
+                rng.standard_normal((self.batch, 64, self.cfg.d_model)),
+                self.cfg.dtype)
+        elif self.cfg.family == "vlm":
+            rng = np.random.default_rng(step)
+            batch["input_embeds"] = jnp.asarray(
+                rng.standard_normal(
+                    (self.batch, self.seq + 1, self.cfg.d_model)) * 0.02,
+                self.cfg.dtype)
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(self.seq + 1)[None, None],
+                (3, self.batch, self.seq + 1)).astype(jnp.int32)
+        return batch
+
+    # -- prefetching iterator -------------------------------------------------
+    def _worker(self, start_step: int):
+        step = start_step
+        while not self._stop.is_set():
+            b = self.batch_for_step(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, b), timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def iterate(self, start_step: int = 0) -> Iterator[tuple[int, dict]]:
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._worker, args=(start_step,), daemon=True)
+        self._thread.start()
+        try:
+            while True:
+                yield self._q.get()
+        finally:
+            self.stop()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            while not self._q.empty():
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+            self._thread.join(timeout=2)
+            self._thread = None

@@ -1,0 +1,42 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends every wrapper transparently runs the kernel in
+interpret mode (Python-level execution of the kernel body) so the whole
+framework is testable on CPU while the lowering targets TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_adamw import fused_adamw as _adamw
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.split_pipeline import split_pipeline_call as _split_pipeline
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=256, block_k=256, interpret=None):
+    return _flash(q, k, v, causal=causal, window=window,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "block", "interpret"))
+def fused_adamw(p, g, m, v, *, lr, b1, b2, eps, wd, step,
+                grad_scale=1.0, block=64 * 1024, interpret=None):
+    return _adamw(p, g, m, v, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+                  step=step, grad_scale=grad_scale, block=block,
+                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "row_block", "interpret"))
+def rmsnorm(x, w, *, eps=1e-6, row_block=256, interpret=None):
+    return _rmsnorm(x, w, eps=eps, row_block=row_block, interpret=interpret)
+
+
+split_pipeline = _split_pipeline

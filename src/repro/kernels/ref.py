@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int | None = None,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Dense softmax attention with GQA / causal / sliding-window masks."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * sm_scale
+    q_ids = jnp.arange(Sq)[:, None]
+    k_ids = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (q_ids >= k_ids)
+    if window is not None:
+        mask = mask & (k_ids > q_ids - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible keys: softmax of all -1e30 is uniform garbage; zero
+    p = jnp.where(mask[None, None].any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def adamw_ref(p, g, m, v, *, lr, b1, b2, eps, wd, step, grad_scale=1.0):
+    pf = p.astype(jnp.float32)
+    gf = g.astype(jnp.float32) * grad_scale
+    m = b1 * m + (1 - b1) * gf
+    v = b2 * v + (1 - b2) * gf * gf
+    c1 = 1.0 / (1.0 - b1 ** step.astype(jnp.float32))
+    c2 = 1.0 / (1.0 - b2 ** step.astype(jnp.float32))
+    update = (m * c1) / (jnp.sqrt(v * c2) + eps) + wd * pf
+    return (pf - lr * update).astype(p.dtype), m, v
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def split_pipeline_ref(
+    chain_fn: Callable,
+    split_inputs: Sequence[jax.Array],
+    bcast_inputs: Sequence,
+    out_kinds: Sequence[tuple[str, str]],
+):
+    """Oracle for the split-pipeline kernel: run the chain on FULL arrays.
+
+    chain_fn sees (1, n)-shaped "blocks" so the same callable works for both
+    the kernel and the oracle.
+    """
+    n = split_inputs[0].shape[0]
+    blocks = [x.reshape(1, n) for x in split_inputs]
+    outs = chain_fn(blocks, list(bcast_inputs))
+    results = []
+    for (kind, op), o in zip(out_kinds, outs):
+        if kind == "concat":
+            results.append(o.reshape(n))
+        else:
+            red = {"add": jnp.sum, "mul": jnp.prod,
+                   "max": jnp.max, "min": jnp.min}[op]
+            results.append(red(o))
+    return results

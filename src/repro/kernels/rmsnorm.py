@@ -1,0 +1,57 @@
+"""Fused RMSNorm Pallas kernel.
+
+One grid step normalizes a block of rows: the row-reduction (mean square),
+rsqrt, and scale all happen on a VMEM-resident (ROWS, d) tile, so x is read
+once from HBM instead of three times (square-reduce, normalize, scale).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 256
+
+
+def _rmsnorm_kernel(eps: float, x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,          # (..., d)
+    w: jax.Array,          # (d,)
+    *,
+    eps: float = 1e-6,
+    row_block: int = ROW_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    import math
+    orig_shape = x.shape
+    d = x.shape[-1]
+    n = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    x2 = x.reshape(n, d)
+    rb = min(row_block, n)
+    n_pad = ((n + rb - 1) // rb) * rb
+    x2 = jnp.pad(x2, ((0, n_pad - n), (0, 0)))
+    grid = n_pad // rb
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        interpret=interpret,
+    )(x2, w.reshape(1, d))
+    return out[:n].reshape(orig_shape)

@@ -1,0 +1,155 @@
+"""Split-pipeline kernel: a Mozart stage as ONE VMEM-tiled Pallas kernel.
+
+This is the paper's core mechanism adapted to the TPU memory hierarchy.
+On CPU, Mozart keeps a chunk of every pipeline value resident in L2 while a
+driver loop calls each black-box function on it.  On TPU the analogous fast
+memory is VMEM: this kernel streams `(1, BLOCK)` tiles of every input from
+HBM into VMEM (double-buffered by the Pallas pipeline machinery), applies the
+*entire* stage chain while the tile is resident, and writes only the stage's
+escaping outputs back to HBM.  Intermediates never touch HBM at all — a
+strictly stronger guarantee than the CPU version (which still writes
+chunk-sized intermediates to cache-resident buffers).
+
+The stage chain is supplied as a traceable ``chain_fn`` built by
+``repro.core.pallas_exec`` from the planned stage, so ANY elementwise-
+annotated library function participates without modification.
+
+Layout: 1-D logical arrays are padded to a multiple of ``block_elems`` and
+viewed as ``(G, BLOCK)``; the grid walks G. BLOCK is a multiple of 1024
+(8 sublanes x 128 lanes) for hardware alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Reduction identities per merge op (used to mask tail padding).
+REDUCE_IDENTITY = {
+    "add": 0.0,
+    "mul": 1.0,
+    "max": -jnp.inf,
+    "min": jnp.inf,
+}
+
+LANES = 128
+SUBLANES = 8
+MIN_BLOCK = LANES * SUBLANES     # 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pipeline_kernel(
+    n_split: int,
+    n_bcast: int,
+    out_kinds: Sequence[tuple[str, str]],   # ("concat", _) | ("reduce", op)
+    chain_fn: Callable,
+    n_total: int,
+    block: int,
+    *refs,
+):
+    split_refs = refs[:n_split]
+    bcast_refs = refs[n_split:n_split + n_bcast]
+    out_refs = refs[n_split + n_bcast:]
+
+    i = pl.program_id(0)
+    blocks = [r[...] for r in split_refs]                 # (1, BLOCK) in VMEM
+    bcasts = [r[0, 0] for r in bcast_refs]                # scalars
+
+    outs = chain_fn(blocks, bcasts)                       # whole stage in VMEM
+
+    # Tail-padding mask for reductions.
+    idx = i * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    mask = idx < n_total
+
+    for (kind, op), o_ref, val in zip(out_kinds, out_refs, outs):
+        if kind == "concat":
+            o_ref[...] = val.astype(o_ref.dtype)
+        else:
+            ident = jnp.asarray(REDUCE_IDENTITY[op], val.dtype)
+            masked = jnp.where(mask, val, ident)
+            if op == "add":
+                part = jnp.sum(masked)
+            elif op == "mul":
+                part = jnp.prod(masked)
+            elif op == "max":
+                part = jnp.max(masked)
+            else:
+                part = jnp.min(masked)
+            o_ref[0, 0] = part.astype(o_ref.dtype)
+
+
+def split_pipeline_call(
+    chain_fn: Callable,
+    split_inputs: Sequence[jax.Array],
+    bcast_inputs: Sequence[Any],
+    out_kinds: Sequence[tuple[str, str]],
+    out_dtypes: Sequence[Any],
+    block_elems: int,
+    interpret: bool = True,
+):
+    """Run a Mozart stage as one Pallas kernel.
+
+    chain_fn(blocks, bcasts) -> list of escaping outputs (block-shaped for
+    concat outputs, scalar for reduce outputs).
+    """
+    n = int(split_inputs[0].shape[0])
+    block = max(MIN_BLOCK, _round_up(min(block_elems, max(n, 1)), MIN_BLOCK))
+    n_pad = _round_up(n, block)
+    grid = n_pad // block
+
+    def pad2d(x):
+        x = jnp.pad(x, (0, n_pad - n))
+        return x.reshape(grid, block)
+
+    split2d = [pad2d(x) for x in split_inputs]
+    bcast2d = [jnp.asarray(b, jnp.result_type(b)).reshape(1, 1) for b in bcast_inputs]
+
+    in_specs = (
+        [pl.BlockSpec((1, block), lambda i: (i, 0)) for _ in split2d]
+        + [pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in bcast2d]
+    )
+    out_specs = []
+    out_shapes = []
+    for (kind, _), dt in zip(out_kinds, out_dtypes):
+        if kind == "concat":
+            out_specs.append(pl.BlockSpec((1, block), lambda i: (i, 0)))
+            out_shapes.append(jax.ShapeDtypeStruct((grid, block), dt))
+        else:
+            out_specs.append(pl.BlockSpec((1, 1), lambda i: (i, 0)))
+            out_shapes.append(jax.ShapeDtypeStruct((grid, 1), dt))
+
+    kernel = functools.partial(
+        _pipeline_kernel, len(split2d), len(bcast2d), tuple(out_kinds),
+        chain_fn, n, block,
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*split2d, *bcast2d)
+
+    results = []
+    for (kind, op), o in zip(out_kinds, outs):
+        if kind == "concat":
+            results.append(o.reshape(n_pad)[:n])
+        else:
+            flat = o.reshape(grid)
+            if op == "add":
+                results.append(jnp.sum(flat))
+            elif op == "mul":
+                results.append(jnp.prod(flat))
+            elif op == "max":
+                results.append(jnp.max(flat))
+            else:
+                results.append(jnp.min(flat))
+    return results

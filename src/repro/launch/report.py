@@ -1,0 +1,99 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from results/."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.registry import ARCH_IDS
+from repro.configs.shapes import SHAPES
+
+
+def _load(path: Path) -> dict | None:
+    return json.loads(path.read_text()) if path.exists() else None
+
+
+def dryrun_table(dryrun_dir="results/dryrun") -> str:
+    d = Path(dryrun_dir)
+    lines = [
+        "| arch | shape | 16x16: status / peak GiB / compile s | 2x16x16: status / peak GiB |",
+        "|------|-------|----------------------------------|---------------------------|",
+    ]
+    n_ok_sp = n_ok_mp = n_skip = 0
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            sp = _load(d / f"{arch}__{shape}__sp.json")
+            mp = _load(d / f"{arch}__{shape}__mp.json")
+
+            def fmt(r, with_compile=False):
+                if r is None:
+                    return "—"
+                if r["status"] == "skipped":
+                    return "skip (sub-quadratic rule)"
+                if r["status"] != "ok":
+                    return f"ERROR {r.get('error','')[:40]}"
+                peak = r["memory"]["peak_bytes"] / 2**30
+                s = f"ok / {peak:.1f}"
+                if with_compile:
+                    s += f" / {r.get('compile_s', 0):.0f}s"
+                return s
+
+            if sp and sp["status"] == "ok":
+                n_ok_sp += 1
+            if sp and sp["status"] == "skipped":
+                n_skip += 1
+            if mp and mp["status"] == "ok":
+                n_ok_mp += 1
+            lines.append(f"| {arch} | {shape} | {fmt(sp, True)} | {fmt(mp)} |")
+    lines.append("")
+    lines.append(f"Single-pod: **{n_ok_sp} ok**, {n_skip} documented skips; "
+                 f"multi-pod: **{n_ok_mp} ok**.")
+    return "\n".join(lines)
+
+
+def roofline_table(roofline_dir="results/roofline") -> str:
+    d = Path(roofline_dir)
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant | useful FLOP ratio | roofline frac | peak GiB |",
+        "|------|-------|-----------|-----------|---------------|----------|-------------------|---------------|----------|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = _load(d / f"{arch}__{shape}.json")
+            if r is None:
+                continue
+            if "compute_s" not in r:
+                reason = r.get("reason", r.get("error", r.get("status", "")))
+                lines.append(f"| {arch} | {shape} | — | — | — | skip | — | — | — |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {r['compute_s']*1e3:.1f} | "
+                f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.2f} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+                f"{r['roofline_fraction']:.2f} | {r['memory_peak_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def collective_detail(roofline_dir="results/roofline", top=6) -> str:
+    d = Path(roofline_dir)
+    rows = []
+    for f in sorted(d.glob("*.json")):
+        r = _load(f)
+        if r and "collective_s" in r:
+            rows.append((r["collective_s"], r))
+    rows.sort(reverse=True, key=lambda t: t[0])
+    lines = ["Most collective-bound cells (per-device bytes by op):", ""]
+    for _, r in rows[:top]:
+        ops = {k: f"{v/2**30:.2f}GiB" for k, v in r["collective_by_op"].items()
+               if v > 2**20}
+        lines.append(f"* {r['arch']} × {r['shape']}: {ops}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())
+    print()
+    print(collective_detail())

@@ -1,0 +1,192 @@
+"""Sharding rules: DP/TP/EP/SP for every architecture (GSPMD partition specs).
+
+Rules are divisibility-guarded: a dimension shards over "model" only when the
+extent divides (e.g. granite's single KV head and hymba's 25 q-heads stay
+replicated while their MLP/SSM inner dims shard).  Optimizer moments
+additionally shard over the data axes on the first shardable dimension
+(ZeRO-1): GSPMD then renders the update as reduce-scatter(grad) -> sharded
+update -> all-gather(param).
+
+Decode KV caches are laid out (n_blk, blk, B, Hkv, hd) with n_blk == TP
+extent and sharded over "model": sequence-parallel decode (the LSE-combined
+attention in models/attention.py keeps the math exact).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes_of, dp_extent
+from repro.models.config import ModelConfig
+
+
+def _dp(mesh):
+    axes = data_axes_of(mesh)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _model_extent(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def _shard_if(mesh, dim_size: int) -> Any:
+    """'model' if divisible (and the axis exists), else None."""
+    me = _model_extent(mesh)
+    return "model" if me > 1 and dim_size % me == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _leaf_spec(path_names: tuple[str, ...], shape: tuple[int, ...], mesh) -> P:
+    name = path_names[-1]
+    nd = len(shape)
+    # A leading layer-stack axis exists when 'layers'/'enc_layers' is on the
+    # path AND the leaf has one more dim than its logical rank.
+    stacked = any(n in ("layers", "enc_layers") for n in path_names)
+
+    def wrap(*spec):
+        if stacked:
+            return P(None, *spec)
+        return P(*spec)
+
+    core = shape[1:] if stacked else shape
+    cnd = len(core)
+
+    if name == "embed":
+        return P(_shard_if(mesh, shape[0]), None)
+    if name == "lm_head":
+        return P(None, _shard_if(mesh, shape[1]))
+
+    # attention / general (in, out) matrices — shard the "wide" dim
+    if name in ("wq", "wk", "wv", "w_in", "w_gate", "w_r", "w_k", "w_v",
+                "w_g", "w_ck", "in_proj", "dt_proj", "x_proj_unused"):
+        if cnd == 2:
+            return wrap(None, _shard_if(mesh, core[1]))
+        if cnd == 3:     # MoE experts (E, D, F): TP on the expert FFN dim —
+            # composes with grouped dispatch (groups take the device axes)
+            return wrap(None, None, _shard_if(mesh, core[2]))
+    if name in ("wo", "w_out", "w_o", "w_cv", "out_proj", "x_proj"):
+        if cnd == 2:
+            return wrap(_shard_if(mesh, core[0]), None)
+        if cnd == 3:     # MoE (E, F, D)
+            return wrap(None, _shard_if(mesh, core[1]), None)
+    if name == "router":
+        return wrap(None, None)
+    if name in ("conv_w",):          # (W, d_in)
+        return wrap(None, _shard_if(mesh, core[1]))
+    if name in ("A_log",):           # (d_in, N)
+        return wrap(_shard_if(mesh, core[0]), None)
+    if name in ("dt_bias", "D_skip"):
+        return wrap(_shard_if(mesh, core[0]))
+    if name in ("decay_a",):         # (D, lora)
+        return wrap(None, None)
+    if name in ("decay_b",):
+        return wrap(None, None)
+    # norms, mu_*, biases, bonus: replicate
+    return wrap(*([None] * cnd))
+
+
+def _path_names(path) -> tuple[str, ...]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(str(e.idx))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(str(e.name))
+        else:
+            names.append(str(e))
+    return tuple(names)
+
+
+def param_specs(param_avals, mesh) -> Any:
+    def spec(path, leaf):
+        return _leaf_spec(_path_names(path), tuple(leaf.shape), mesh)
+    return jax.tree_util.tree_map_with_path(spec, param_avals)
+
+
+def zero1_specs(param_avals, mesh) -> Any:
+    """Optimizer-moment specs: param spec + data sharding on the first
+    still-unsharded, divisible dimension (ZeRO-1)."""
+    dpa = _dp(mesh)
+    dpe = dp_extent(mesh)
+    base = param_specs(param_avals, mesh)
+
+    def add_dp(leaf, spec):
+        if dpa is None or dpe <= 1:
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (s, dim) in enumerate(zip(parts, leaf.shape)):
+            if s is None and dim % dpe == 0 and dim >= dpe:
+                parts[i] = dpa
+                return P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map(add_dp, param_avals, base)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_avals, mesh) -> Any:
+    dpa = _dp(mesh)
+    dpe = dp_extent(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        if names[-1] == "positions":           # (3, B, S)
+            b = leaf.shape[1]
+            return P(None, dpa if b % dpe == 0 else None, None)
+        b = leaf.shape[0]
+        return P(dpa if b % dpe == 0 else None, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_avals)
+
+
+def cache_specs(cache_avals, mesh, cfg: ModelConfig) -> Any:
+    """Stacked (L, ...) decode state.  KV: (L, n_blk, blk, B, Hkv, hd)."""
+    dpa = _dp(mesh)
+    dpe = dp_extent(mesh)
+    me = _model_extent(mesh)
+
+    def dp_if(b):
+        return dpa if b % dpe == 0 else None
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        if names and names[-1] in ("k", "v") and nd == 6:
+            nblk, b = leaf.shape[1], leaf.shape[3]
+            return P(None, "model" if me > 1 and nblk % me == 0 else None,
+                     None, dp_if(b), None, None)
+        if names and names[-1] == "length":
+            return P(*([None] * nd))
+        if names and names[-1] == "h" and nd == 4:       # SSM (L,B,d_in,N)
+            return P(None, dp_if(leaf.shape[1]), _shard_if(mesh, leaf.shape[2]), None)
+        if names and names[-1] == "conv" and nd == 4:    # (L,B,W-1,d_in)
+            return P(None, dp_if(leaf.shape[1]), None, _shard_if(mesh, leaf.shape[3]))
+        if names and names[-1] == "wkv" and nd == 5:     # (L,B,H,hd,hd)
+            return P(None, dp_if(leaf.shape[1]), _shard_if(mesh, leaf.shape[2]), None, None)
+        if names and names[-1] in ("shift_t", "shift_c") and nd == 3:
+            return P(None, dp_if(leaf.shape[1]), None)
+        if nd >= 1:
+            return P(None, *([None] * (nd - 1)))
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, cache_avals)
+
+
+def named(tree_specs, mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), tree_specs)

@@ -1,0 +1,117 @@
+"""Shared building blocks: norms, embeddings, rotary position encodings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(ms + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int) -> jax.Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+def embed_tokens(embedding: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = embedding[tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    return x
+
+
+def unembed(x: jax.Array, head: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", x, head.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # (d/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,         # (3, B, S): t/h/w position streams
+    theta: float,
+    sections: tuple[int, ...],
+) -> jax.Array:
+    """Qwen2-VL multimodal rotary: frequency bands partitioned into (t,h,w)
+    sections, each rotated by its own position stream.  For pure text all
+    three streams are equal and M-RoPE reduces to standard RoPE."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                                  # (half,)
+    # section id per frequency: 0..len(sections)-1
+    sec_ids = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half)
+    # pos_per_freq: (B, S, half)
+    pos = jnp.take(positions, sec_ids, axis=0)                    # (half, B, S) -> via moveaxis
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)            # (B, S, half)
+    ang = pos[:, None, :, :] * freqs                              # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_scan(step, init, xs, chunk: int = 128):
+    """``lax.scan`` in two levels: an outer scan over sequence chunks whose
+    body is ``jax.checkpoint``-ed, an inner scan over steps.
+
+    Backward memory drops from O(S) saved carries to O(S/chunk + chunk):
+    essential for the recurrent families (RWKV's (B,H,hd,hd) state saved at
+    4096 steps is ~34 GiB; chunked it is ~0.8 GiB)."""
+    leaves = jax.tree_util.tree_leaves(xs)
+    S = leaves[0].shape[0]
+    if S <= chunk:
+        return jax.lax.scan(step, init, xs)
+    n = S // chunk
+    main = n * chunk
+    xs_main = jax.tree_util.tree_map(
+        lambda x: x[:main].reshape(n, chunk, *x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys_main = jax.lax.scan(chunk_body, init, xs_main)
+    ys = jax.tree_util.tree_map(
+        lambda y: y.reshape(main, *y.shape[2:]), ys_main)
+    if main < S:
+        xs_tail = jax.tree_util.tree_map(lambda x: x[main:], xs)
+        carry, ys_tail = jax.lax.scan(step, carry, xs_tail)
+        ys = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), ys, ys_tail)
+    return carry, ys
+
+
+def causal_mask(sq: int, sk: int, offset: int = 0, window: int | None = None) -> jax.Array:
+    """(sq, sk) bool mask; query i attends key j iff j <= i+offset (and within
+    the sliding window when given)."""
+    q_ids = jnp.arange(sq)[:, None] + offset
+    k_ids = jnp.arange(sk)[None, :]
+    m = q_ids >= k_ids
+    if window is not None:
+        m = m & (k_ids > q_ids - window)
+    return m

@@ -1,0 +1,120 @@
+"""Language-model training/serving entry points over the unified stack."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None, z_loss: float = 1e-4):
+    """Stable CE with optional z-loss.  logits (B,S,V), labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    zl = z_loss * jnp.square(lse)
+    loss = ce + zl
+    if mask is not None:
+        loss = loss * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = jnp.asarray(loss.size, jnp.float32)
+    return jnp.sum(loss) / denom
+
+
+def make_batch_views(batch: dict[str, Any], cfg: ModelConfig):
+    """Split a raw batch into model inputs + labels per family."""
+    kw: dict[str, Any] = {}
+    if cfg.encdec:
+        kw["enc_embeds"] = batch["enc_embeds"]
+        tokens = batch["tokens"]
+        kw["tokens"] = tokens[:, :-1]
+        labels = tokens[:, 1:]
+    elif "input_embeds" in batch:     # vlm/audio stub frontends
+        kw["input_embeds"] = batch["input_embeds"][:, :-1]
+        labels = batch["tokens"][:, 1:]
+        if "positions" in batch:
+            kw["positions"] = batch["positions"][..., :-1]
+    else:
+        tokens = batch["tokens"]
+        kw["tokens"] = tokens[:, :-1]
+        labels = tokens[:, 1:]
+    mask = batch.get("mask")
+    if mask is not None:
+        mask = mask[:, 1:]
+    return kw, labels, mask
+
+
+def chunked_cross_entropy(hidden, head, labels, mask=None, *,
+                          chunk: int = 512, z_loss: float = 1e-4,
+                          valid_vocab: int | None = None):
+    """CE computed in sequence chunks so the (B, S, V) logits tensor is never
+    materialized (vocab up to 262k x seq 4k would be tens of GB).  ``head``
+    is (D, V); gradients flow through ``lax.map``."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    main = n * chunk
+    V = head.shape[-1]
+
+    import functools
+
+    # backward recomputes per-chunk logits (they are never stored)
+    @functools.partial(jax.checkpoint, static_argnums=(2,))
+    def ce_of(h, l, valid_vocab=None):
+        from repro.models.shard_ctx import constrain_logits
+        logits = constrain_logits(
+            jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype)))
+        lf = logits.astype(jnp.float32)
+        if valid_vocab is not None and valid_vocab != V:
+            lf = jnp.where(jnp.arange(V) < valid_vocab, lf, -1e30)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, l[..., None], axis=-1)[..., 0]
+        return (lse - gold) + z_loss * jnp.square(lse)
+
+    hs = hidden[:, :main].reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels[:, :main].reshape(B, n, chunk).transpose(1, 0, 2)
+    losses = jax.lax.map(lambda hl: ce_of(hl[0], hl[1], valid_vocab),
+                         (hs, ls))                               # (n,B,chunk)
+    loss = losses.transpose(1, 0, 2).reshape(B, main)
+    if main < S:
+        loss = jnp.concatenate(
+            [loss, ce_of(hidden[:, main:], labels[:, main:], valid_vocab)],
+            axis=1)
+    if mask is not None:
+        loss = loss * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = jnp.asarray(loss.size, jnp.float32)
+    return jnp.sum(loss) / denom
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ce_chunk: int | None = None):
+    kw, labels, mask = make_batch_views(batch, cfg)
+    hidden, aux = tfm.forward_hidden(params, cfg, **kw)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return chunked_cross_entropy(hidden, head, labels, mask,
+                                 chunk=ce_chunk or cfg.ce_chunk,
+                                 valid_vocab=cfg.vocab_size) + aux
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
+                    max_new: int, max_len: int | None = None):
+    """Simple serving loop: prefill + greedy decode (CPU-scale demo)."""
+    B, S = prompt.shape
+    max_len = max_len or (S + max_new)
+    caches = tfm.init_caches(cfg, B, max_len)
+    logits, caches = tfm.prefill(params, cfg, tokens=prompt, caches=caches)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(prompt.dtype)
+    outs = [tok]
+    for _ in range(max_new - 1):
+        logits, caches = tfm.decode_step(params, cfg, tok, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(prompt.dtype)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

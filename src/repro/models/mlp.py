@@ -1,0 +1,265 @@
+"""MLP (gated / plain) and Mixture-of-Experts feed-forward layers.
+
+MoE is capacity-based Switch-style dispatch: top-k routing, per-expert token
+buffers of capacity C, scatter/gather combine.  Experts shard over the mesh
+``model`` axis (expert parallelism); the dispatch einsums let GSPMD place
+the all-to-all.  Shared experts (DeepSeekMoE) run densely for every token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in, scale_out = d ** -0.5, f ** -0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d, f)) * scale_in).astype(cfg.dtype),
+        "w_out": (jax.random.normal(k2, (f, d)) * scale_out).astype(cfg.dtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * scale_in).astype(cfg.dtype)
+    return p
+
+
+def mlp_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = x @ p["w_in"].astype(x.dtype)
+    if cfg.gated_mlp:
+        h = _act(x @ p["w_gate"].astype(x.dtype), cfg.activation) * h
+    else:
+        h = _act(h, cfg.activation)
+    return h @ p["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_expert, m.n_experts
+    keys = jax.random.split(key, 5)
+    scale_in, scale_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": (jax.random.normal(keys[0], (d, e)) * scale_in).astype(jnp.float32),
+        "w_in": (jax.random.normal(keys[1], (e, d, f)) * scale_in).astype(cfg.dtype),
+        "w_out": (jax.random.normal(keys[2], (e, f, d)) * scale_out).astype(cfg.dtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = (jax.random.normal(keys[3], (e, d, f)) * scale_in).astype(cfg.dtype)
+    if m.n_shared:
+        p["shared"] = {
+            "w_in": (jax.random.normal(keys[4], (d, f * m.n_shared)) * scale_in).astype(cfg.dtype),
+            "w_out": (jax.random.normal(keys[4], (f * m.n_shared, d)) * scale_out).astype(cfg.dtype),
+        }
+        if cfg.gated_mlp:
+            p["shared"]["w_gate"] = (
+                jax.random.normal(keys[4], (d, f * m.n_shared)) * scale_in
+            ).astype(cfg.dtype)
+    return p
+
+
+def _dispatch_one_group_sharded(xt, gate_vals, expert_idx, w_in, w_gate,
+                                w_out, cfg: ModelConfig, capacity: int,
+                                psum_axis):
+    """Dispatch for one device-local token group inside shard_map.
+
+    Expert weights arrive as their local TP shard (E, D, F/tp); the w_out
+    contraction therefore produces partial sums that are ``psum``-ed over
+    the model axis before the combine gather.
+    """
+    m = cfg.moe
+    T, D = xt.shape
+    E, k = m.n_experts, m.top_k
+    Tk = T * k
+
+    eidx = expert_idx.reshape(-1)
+    order = jnp.argsort(eidx)
+    sorted_tok = order // k
+    counts = jnp.zeros((E,), jnp.int32).at[eidx].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[eidx[order]]
+    pos = jnp.zeros((Tk,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < capacity
+
+    slotpos = starts[:, None] + jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    slot_valid = jnp.arange(capacity)[None, :] < counts[:, None]
+    src_tok = sorted_tok[jnp.clip(slotpos, 0, Tk - 1)]
+    buf = xt[src_tok] * slot_valid[..., None].astype(xt.dtype)    # (E, C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in.astype(xt.dtype))
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(xt.dtype))
+        h = _act(g, cfg.activation) * h
+    else:
+        h = _act(h, cfg.activation)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_out.astype(xt.dtype))
+    if psum_axis is not None:
+        out_buf = jax.lax.psum(out_buf, psum_axis)                # F shards
+
+    gathered = out_buf[eidx, jnp.clip(pos, 0, capacity - 1)]
+    gathered = gathered * keep[:, None].astype(xt.dtype)
+    weighted = gathered * gate_vals.reshape(-1, 1).astype(xt.dtype)
+    return jnp.sum(weighted.reshape(T, k, D), axis=1)
+
+
+def _dispatch_one_group(xt, gate_vals, expert_idx, p, cfg: ModelConfig,
+                        capacity: int):
+    """Capacity-based dispatch/compute/combine for ONE token group.
+
+    GATHER-based formulation: per-expert buffers are built by *gathering*
+    token rows (``xt[src_tok]``) rather than scatter-adding into them —
+    GSPMD partitions batched gathers on the group axis, while data-dependent
+    scatters fall back to replication (a 484 GiB lesson).  The ranking math
+    is sort-based: O(Tk log Tk) time, O(Tk) memory.
+    """
+    m = cfg.moe
+    T, D = xt.shape
+    E, k = m.n_experts, m.top_k
+    Tk = T * k
+
+    eidx = expert_idx.reshape(-1)                                 # (Tk,)
+    order = jnp.argsort(eidx)                                     # stable
+    sorted_tok = order // k                                       # token per slot
+    counts = jnp.zeros((E,), jnp.int32).at[eidx].add(1)
+    starts = jnp.cumsum(counts) - counts                          # (E,)
+    pos_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[eidx[order]]
+    pos = jnp.zeros((Tk,), jnp.int32).at[order].set(pos_sorted)   # per (t,k)
+    keep = pos < capacity
+
+    # Dispatch by gather: slot (e, c) holds sorted entry starts[e] + c.
+    slotpos = starts[:, None] + jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    slot_valid = jnp.arange(capacity)[None, :] < counts[:, None]  # (E, C)
+    src_tok = sorted_tok[jnp.clip(slotpos, 0, Tk - 1)]            # (E, C)
+    buf = xt[src_tok] * slot_valid[..., None].astype(xt.dtype)    # (E, C, D)
+
+    # Expert FFN: batched einsum over experts.
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(xt.dtype))
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(xt.dtype))
+        h = _act(g, cfg.activation) * h
+    else:
+        h = _act(h, cfg.activation)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(xt.dtype))
+
+    # Combine by gather: token t slot k reads out_buf[e(t,k), pos(t,k)].
+    gathered = out_buf[eidx, jnp.clip(pos, 0, capacity - 1)]      # (Tk, D)
+    gathered = gathered * keep[:, None].astype(xt.dtype)
+    weighted = gathered * gate_vals.reshape(-1, 1).astype(xt.dtype)
+    return jnp.sum(weighted.reshape(T, k, D), axis=1)
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Returns (out, aux_loss).  x: (B, S, D).
+
+    ``cfg.moe_groups`` > 1 splits tokens into independent dispatch groups
+    (one per mesh device): per-group buffers stay device-local and capacity
+    becomes per-group — the standard per-device-capacity EP approximation.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    xt = x.reshape(T, D)
+
+    from repro.models import shard_ctx
+    G = max(cfg.moe_groups, 1)
+    if T % G != 0:
+        G = 1
+
+    moe_sharding = shard_ctx._MOE_GROUPS
+    residual = shard_ctx._RESIDUAL
+    if G > 1 and moe_sharding is not None and residual is not None:
+        # EXPLICIT parallel dispatch: GSPMD replicates data-dependent
+        # gather dispatch (observed 484 GiB/device at 1M tokens), and
+        # resharding tokens into a separate group layout replicates the
+        # activations on multi-pod meshes.  So the shard_map consumes x in
+        # its NATIVE residual sharding (batch over data axes, seq over
+        # model) — zero boundary reshard — and the router, top-k, dispatch,
+        # expert FFN (local F shard) and combine all run device-locally,
+        # with one psum for the F contraction and one for the aux loss.
+        import functools
+        from jax.sharding import PartitionSpec as P
+        mesh = moe_sharding.mesh
+        model_axis = "model" if "model" in mesh.axis_names else None
+        xspec = P(residual.spec[0], model_axis, None)
+        wspec_in = P(None, None, model_axis)
+        wspec_out = P(None, model_axis, None)
+        all_axes = tuple(mesh.axis_names)
+        n_dev = int(mesh.devices.size)
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(xspec, P(None, None), wspec_in,
+                      wspec_in if cfg.gated_mlp else P(None, None, None),
+                      wspec_out),
+            out_specs=(xspec, P()), check_vma=False)
+        def grouped(x_l, router, w_in, w_gate, w_out):
+            Bl, Sl, _ = x_l.shape
+            Tl = Bl * Sl
+            xt_l = x_l.reshape(Tl, D)
+            logits = xt_l.astype(jnp.float32) @ router            # (Tl, E)
+            probs = jax.nn.softmax(logits, axis=-1)
+            gv, ei = jax.lax.top_k(probs, k)
+            gv = gv / jnp.maximum(jnp.sum(gv, axis=-1, keepdims=True), 1e-9)
+            # aux loss from global statistics (psum over the whole mesh)
+            me_l = jnp.sum(probs, axis=0)
+            ce_l = jnp.sum(jnp.sum(
+                jax.nn.one_hot(ei, E, dtype=jnp.float32), axis=1), axis=0)
+            me = jax.lax.psum(me_l, all_axes) / (Tl * n_dev)
+            ce = jax.lax.psum(ce_l, all_axes) / (Tl * n_dev)
+            aux_l = E * jnp.sum(me * ce) * m.aux_loss_weight
+            cap = int(max(1, (Tl * k * m.capacity_factor) // E))
+            out_l = _dispatch_one_group_sharded(
+                xt_l, gv, ei, w_in, w_gate, w_out, cfg, cap, model_axis)
+            return out_l.reshape(Bl, Sl, D), aux_l
+
+        w_gate = p.get("w_gate", p["w_in"])
+        out, aux = grouped(x, p["router"], p["w_in"], w_gate, p["w_out"])
+        out = out.reshape(T, D)
+    else:
+        logits = (xt.astype(jnp.float32) @ p["router"])           # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (T, k)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+        # Load-balance aux loss (Switch): E * sum_e f_e * p_e
+        me = jnp.mean(probs, axis=0)                              # (E,)
+        ce = jnp.mean(jnp.sum(
+            jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1), axis=0)
+        aux = E * jnp.sum(me * ce) * m.aux_loss_weight
+
+        Tg = T // G
+        capacity = int(max(1, (Tg * k * m.capacity_factor) // E))
+        xg = xt.reshape(G, Tg, D)
+        gg = gate_vals.reshape(G, Tg, k)
+        eg = expert_idx.reshape(G, Tg, k)
+        out = jax.vmap(_dispatch_one_group, in_axes=(0, 0, 0, None, None, None))(
+            xg, gg, eg, p, cfg, capacity)
+        out = out.reshape(T, D)
+
+    if m.n_shared:
+        sh = p["shared"]
+        h = xt @ sh["w_in"].astype(x.dtype)
+        if cfg.gated_mlp:
+            h = _act(xt @ sh["w_gate"].astype(x.dtype), cfg.activation) * h
+        else:
+            h = _act(h, cfg.activation)
+        out = out + h @ sh["w_out"].astype(x.dtype)
+
+    return out.reshape(B, S, D), aux

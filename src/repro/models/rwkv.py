@@ -1,0 +1,132 @@
+"""RWKV-6 ("Finch") — attention-free token mixing with data-dependent decay.
+
+Per layer: a time-mix block (the WKV matrix-state recurrence) and a
+channel-mix block.  The per-head state S in R^{hd x hd} carries ALL context:
+decode is O(1) per token regardless of history length, which is why rwkv6
+runs the long_500k shape.
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+w_t is data-dependent (low-rank on x_t) — the Finch contribution.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array        # (B, H, hd, hd)
+    shift_t: jax.Array    # (B, D) last token (time-mix shift)
+    shift_c: jax.Array    # (B, D) last token (channel-mix shift)
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim if cfg.rwkv else 64
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv(key, cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = _dims(cfg)
+    ks = jax.random.split(key, 10)
+    sc = D ** -0.5
+    lora = 64
+    return {
+        # time mix
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_v": jnp.full((D,), 0.5, jnp.float32),
+        "mu_g": jnp.full((D,), 0.5, jnp.float32),
+        "mu_w": jnp.full((D,), 0.5, jnp.float32),
+        "w_r": (jax.random.normal(ks[0], (D, D)) * sc).astype(cfg.dtype),
+        "w_k": (jax.random.normal(ks[1], (D, D)) * sc).astype(cfg.dtype),
+        "w_v": (jax.random.normal(ks[2], (D, D)) * sc).astype(cfg.dtype),
+        "w_g": (jax.random.normal(ks[3], (D, D)) * sc).astype(cfg.dtype),
+        "w_o": (jax.random.normal(ks[4], (D, D)) * sc).astype(cfg.dtype),
+        # data-dependent decay (low-rank) + base
+        "decay_base": jnp.full((D,), -6.0, jnp.float32),
+        "decay_a": (jax.random.normal(ks[5], (D, lora)) * sc).astype(cfg.dtype),
+        "decay_b": (jax.random.normal(ks[6], (lora, D)) * lora ** -0.5).astype(cfg.dtype),
+        "bonus_u": jnp.zeros((H, hd), jnp.float32),
+        "ln_x": jnp.ones((D,), jnp.float32),
+        # channel mix
+        "mu_ck": jnp.full((D,), 0.5, jnp.float32),
+        "w_ck": (jax.random.normal(ks[7], (D, F)) * sc).astype(cfg.dtype),
+        "w_cv": (jax.random.normal(ks[8], (F, D)) * F ** -0.5).astype(cfg.dtype),
+        "w_cr": (jax.random.normal(ks[9], (D, D)) * sc).astype(cfg.dtype),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    H, hd = _dims(cfg)
+    return RWKVState(
+        wkv=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        shift_t=jnp.zeros((batch, cfg.d_model), cfg.dtype),
+        shift_c=jnp.zeros((batch, cfg.d_model), cfg.dtype),
+    )
+
+
+def _shifted(x, last):
+    """token shift: concat(last, x[:-1]) along seq."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(p, x, cfg: ModelConfig, state: RWKVState):
+    B, S, D = x.shape
+    H, hd = _dims(cfg)
+    xprev = _shifted(x, state.shift_t)
+
+    def lerp(mu):
+        return x + (xprev - x) * mu.astype(x.dtype)
+
+    r = (lerp(p["mu_r"]) @ p["w_r"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (lerp(p["mu_k"]) @ p["w_k"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (lerp(p["mu_v"]) @ p["w_v"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"].astype(x.dtype))
+
+    # Finch: data-dependent decay in (0,1) per channel
+    dd = (lerp(p["mu_w"]).astype(jnp.float32) @ p["decay_a"].astype(jnp.float32)
+          ) @ p["decay_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["decay_base"] + dd))                  # (B,S,D)
+    w = w.reshape(B, S, H, hd)
+    u = p["bonus_u"]                                             # (H, hd)
+
+    def step(Sst, inp):
+        r_t, k_t, v_t, w_t = inp                                 # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)               # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, Sst + u[None, :, :, None] * kv)
+        Sst = w_t[..., None] * Sst + kv
+        return Sst, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (r, k, v, w))
+    from repro.models.layers import chunked_scan
+    ST, ys = chunked_scan(step, state.wkv, xs, chunk=128)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+
+    # per-head group norm
+    yh = y.reshape(B, S, H, hd)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    y = ((yh - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D)
+    y = y * p["ln_x"]
+    out = (y.astype(x.dtype) * g) @ p["w_o"].astype(x.dtype)
+    new_state = RWKVState(wkv=ST, shift_t=x[:, -1], shift_c=state.shift_c)
+    return out, new_state
+
+
+def channel_mix(p, x, cfg: ModelConfig, state: RWKVState):
+    xprev = _shifted(x, state.shift_c)
+    mk = x + (xprev - x) * p["mu_ck"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(mk @ p["w_ck"].astype(x.dtype)))
+    rr = jax.nn.sigmoid(mk @ p["w_cr"].astype(x.dtype))
+    out = rr * (kk @ p["w_cv"].astype(x.dtype))
+    return out, RWKVState(wkv=state.wkv, shift_t=state.shift_t, shift_c=x[:, -1])

@@ -1,0 +1,76 @@
+"""Activation-sharding context (sequence parallelism for the residual stream).
+
+The launcher installs NamedShardings here before lowering; model code calls
+``constrain_residual`` at layer boundaries.  With the residual stream
+sharded (batch over data axes, sequence over "model"), the per-layer scan
+carries saved for backward shrink by the TP extent — this is what lets the
+48/88-layer configs fit HBM at seq 4096/32768.  When nothing is installed
+(CPU tests) the calls are no-ops.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+_RESIDUAL: Any = None      # NamedSharding for (B, S, D) activations
+_CROSS_KV: Any = None      # NamedSharding for (L, B, Hkv, S, hd) enc-dec K/V
+_MOE_GROUPS: Any = None    # NamedSharding for (G, ...) MoE dispatch groups
+_LOGITS: Any = None        # NamedSharding for (B, S, V) logits chunks
+
+
+def set_residual(sharding) -> None:
+    global _RESIDUAL
+    _RESIDUAL = sharding
+
+
+def set_cross_kv(sharding) -> None:
+    global _CROSS_KV
+    _CROSS_KV = sharding
+
+
+def set_moe_groups(sharding) -> None:
+    global _MOE_GROUPS
+    _MOE_GROUPS = sharding
+
+
+def set_logits(sharding) -> None:
+    global _LOGITS
+    _LOGITS = sharding
+
+
+def clear() -> None:
+    set_residual(None)
+    set_cross_kv(None)
+    set_moe_groups(None)
+    set_logits(None)
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    if _RESIDUAL is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _RESIDUAL)
+
+
+def constrain_cross_kv(x: jax.Array) -> jax.Array:
+    if _CROSS_KV is None or x.ndim != 5:
+        return x
+    return jax.lax.with_sharding_constraint(x, _CROSS_KV)
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    if _LOGITS is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _LOGITS)
+
+
+def constrain_moe_groups(x: jax.Array) -> jax.Array:
+    """Shard the leading group axis of (G, ...) MoE dispatch tensors."""
+    if _MOE_GROUPS is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    base = _MOE_GROUPS
+    spec = P(base.spec[0], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(base.mesh, spec))

@@ -1,0 +1,115 @@
+"""Selective state-space sub-layer (Mamba-style), used by Hymba's parallel
+attention+SSM heads.
+
+The recurrence h_t = dA_t * h_{t-1} + dB_t x_t ; y_t = C_t . h_t runs as a
+``lax.scan`` over the sequence (train/prefill) or a single fused step
+(decode, O(1) state — this is what makes the hybrid arch eligible for the
+long_500k shape).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class SSMState(NamedTuple):
+    h: jax.Array          # (B, d_in, N)
+    conv: jax.Array       # (B, conv_width-1, d_in) rolling input window
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.state_dim, s.conv_width
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, N, W = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    sc = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_in)) * sc).astype(cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (W, d_in)) * 0.2).astype(cfg.dtype),
+        "x_proj": (jax.random.normal(ks[2], (d_in, dt_rank + 2 * N)) * d_in ** -0.5).astype(cfg.dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, d_in)) * dt_rank ** -0.5).astype(cfg.dtype),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (d_in, 1))),
+        "D_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (d_in, d)) * d_in ** -0.5).astype(cfg.dtype),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    d_in, _, N, W = _dims(cfg)
+    return SSMState(
+        h=jnp.zeros((batch, d_in, N), jnp.float32),
+        conv=jnp.zeros((batch, W - 1, d_in), cfg.dtype),
+    )
+
+
+def _ssm_core(p, xc, z, cfg: ModelConfig, h0):
+    """xc: (B, S, d_in) post-conv activations; returns (y, hT)."""
+    d_in, dt_rank, N, _ = _dims(cfg)
+    A = -jnp.exp(p["A_log"])                                     # (d_in, N)
+    proj = xc.astype(jnp.float32) @ p["x_proj"].astype(jnp.float32)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                                # (B,d_in) etc.
+        dA = jnp.exp(dt_t[..., None] * A)                        # (B,d_in,N)
+        dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]          # (B,d_in,N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+    )
+    from repro.models.layers import chunked_scan
+    hT, ys = chunked_scan(step, h0, xs, chunk=128)
+    y = jnp.moveaxis(ys, 0, 1)                                   # (B,S,d_in)
+    y = y + xc.astype(jnp.float32) * p["D_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y, hT
+
+
+def ssm_block(p, x, cfg: ModelConfig, state: SSMState | None = None,
+              mode: str = "train"):
+    """x: (B, S, D) -> (out, new_state).  decode: S == 1, O(1) step."""
+    d_in, _, N, W = _dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                            # (B,S,d_in)
+
+    if mode == "decode":
+        assert state is not None and S == 1
+        win = jnp.concatenate([state.conv, xs], axis=1)          # (B,W,d_in)
+        xc = jnp.einsum("bwd,wd->bd", win.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32))[:, None]
+        xc = jax.nn.silu(xc)
+        y, hT = _ssm_core(p, xc, z, cfg, state.h)
+        new_state = SSMState(h=hT, conv=win[:, 1:].astype(state.conv.dtype))
+        return (y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)), new_state
+
+    # train / prefill: causal depthwise conv via padding
+    pad = jnp.zeros((B, W - 1, d_in), xs.dtype) if state is None else state.conv
+    xpad = jnp.concatenate([pad, xs], axis=1)                    # (B,S+W-1,d_in)
+    stacked = jnp.stack([xpad[:, i:i + S] for i in range(W)], axis=0)
+    xc = jnp.einsum("wbsd,wd->bsd", stacked.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc)
+    h0 = jnp.zeros((B, d_in, N), jnp.float32) if state is None else state.h
+    y, hT = _ssm_core(p, xc, z, cfg, h0)
+    new_state = SSMState(h=hT, conv=xpad[:, -(W - 1):].astype(cfg.dtype))
+    return (y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)), new_state

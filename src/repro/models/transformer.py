@@ -1,0 +1,441 @@
+"""Unified transformer covering all 10 assigned architectures.
+
+Design:
+* one homogeneous per-layer block per family, stacked along a leading L axis
+  and driven by ``lax.scan`` (bounded HLO for 88-layer configs) with
+  ``jax.checkpoint`` remat per layer;
+* layer heterogeneity that varies *within* a stack (gemma3's 5:1
+  local:global pattern, hymba's window) is expressed as traced per-layer
+  scalars (effective window length) fed through the scan, so the stack stays
+  homogeneous;
+* MoE stacks with leading dense layers (DeepSeekMoE) put the dense layers in
+  an unscanned prefix.
+
+Decode state is a pytree of stacked per-layer caches (KV blocks / SSM
+states / RWKV states) driven through the same scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_tokens, init_rms_norm, rms_norm, unembed
+
+BIG_WINDOW = 1 << 30      # "global attention" encoded as a huge window
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": init_rms_norm(d), "ln2": init_rms_norm(d)}
+    if kind == "rwkv":
+        p["rwkv"] = rwkv_mod.init_rwkv(ks[0], cfg)
+        return p
+    p["attn"] = attn_mod.init_attn(ks[0], cfg)
+    if kind == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg)
+    if kind == "moe":
+        p["moe"] = mlp_mod.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(ks[3], cfg)
+    if kind == "cross":               # enc-dec decoder block
+        p["cross"] = attn_mod.init_attn(ks[4], cfg)
+        p["ln3"] = init_rms_norm(d)
+    return p
+
+
+def _stack_layers(key, cfg: ModelConfig, n: int, kind: str) -> dict:
+    keys = jax.random.split(key, n)
+    per = [_init_block(k, cfg, kind) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+
+
+def layer_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "rwkv"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.moe is not None:
+        return "moe"
+    if cfg.encdec:
+        return "cross"
+    return "dense"
+
+
+def layer_windows(cfg: ModelConfig) -> jax.Array:
+    """Per-layer effective attention window (traced through the scan)."""
+    L = cfg.n_layers
+    a = cfg.attn
+    if a is None:
+        return jnp.full((L,), BIG_WINDOW, jnp.int32)
+    if a.pattern_period and a.window:
+        idx = jnp.arange(L)
+        is_global = (idx % a.pattern_period) == (a.pattern_period - 1)
+        return jnp.where(is_global, BIG_WINDOW, a.window).astype(jnp.int32)
+    if a.window:
+        return jnp.full((L,), a.window, jnp.int32)
+    return jnp.full((L,), BIG_WINDOW, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.padded_vocab
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (V, D)) * 0.02).astype(jnp.float32),
+        "final_norm": init_rms_norm(D),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(ks[1], (D, V)) * D ** -0.5
+                             ).astype(cfg.dtype)
+    kind = layer_kind(cfg)
+    n_scan = cfg.n_layers
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        kd = cfg.moe.first_k_dense
+        pre = [_init_block(k, cfg, "dense")
+               for k in jax.random.split(ks[2], kd)]
+        params["pre_layers"] = pre
+        n_scan = cfg.n_layers - kd
+    params["layers"] = _stack_layers(ks[3], cfg, n_scan, kind)
+    if cfg.encdec:
+        params["enc_layers"] = _stack_layers(ks[4], cfg, cfg.n_encoder_layers,
+                                             "dense")
+        params["enc_norm"] = init_rms_norm(D)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+class BlockIO(NamedTuple):
+    cache: Any            # KVCache | SSMState+KVCache | RWKVState | None
+    window: jax.Array     # () int32 effective window
+    cross_kv: Any         # (k, v) for enc-dec decoders | None
+
+
+def _apply_block(p, x, cfg: ModelConfig, io: BlockIO, *, kind: str,
+                 mode: str, causal: bool, positions):
+    from repro.models.shard_ctx import constrain_residual
+    x = constrain_residual(x)
+    new_cache = io.cache
+    if kind == "rwkv":
+        st = io.cache if io.cache is not None else rwkv_mod.init_rwkv_state(
+            cfg, x.shape[0])
+        tm, st = rwkv_mod.time_mix(p["rwkv"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                   cfg, st)
+        x = x + tm
+        cm, st = rwkv_mod.channel_mix(p["rwkv"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                                      cfg, st)
+        return x + cm, st, jnp.float32(0.0)
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    kv_cache = io.cache["kv"] if isinstance(io.cache, dict) else io.cache
+    a_out, kv_new, _ = attn_mod.attention_block(
+        p["attn"], h, cfg, positions=positions, causal=causal,
+        window=io.window, cache=kv_cache, mode=mode)
+    if kind == "hybrid":
+        ssm_state = io.cache["ssm"] if isinstance(io.cache, dict) else None
+        s_out, ssm_new = ssm_mod.ssm_block(p["ssm"], h, cfg, ssm_state,
+                                           mode=mode)
+        a_out = 0.5 * (a_out + s_out)           # parallel heads, mean combine
+        new_cache = {"kv": kv_new, "ssm": ssm_new}
+    else:
+        new_cache = kv_new
+    x = x + a_out
+
+    if kind == "cross" and io.cross_kv is not None:
+        c = rms_norm(x, p["ln3"], cfg.norm_eps)
+        c_out, _, _ = attn_mod.attention_block(
+            p["cross"], c, cfg, cross_kv=io.cross_kv, mode="train")
+        x = x + c_out
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if kind == "moe":
+        m_out, aux = mlp_mod.moe_block(p["moe"], h2, cfg)
+    else:
+        m_out = mlp_mod.mlp_block(p["mlp"], h2, cfg)
+    return x + m_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack driver (scan over layers)
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv_per_layer(params, enc_out, cfg: ModelConfig):
+    """Precompute each decoder layer's cross-attention K/V from enc output."""
+    a = cfg.attn
+
+    def one(pl):
+        k = enc_out @ pl["cross"]["wk"].astype(enc_out.dtype)
+        v = enc_out @ pl["cross"]["wv"].astype(enc_out.dtype)
+        B, S, _ = enc_out.shape
+        k = k.reshape(B, S, a.n_kv_heads, a.head_dim).transpose(0, 2, 1, 3)
+        v = v.reshape(B, S, a.n_kv_heads, a.head_dim).transpose(0, 2, 1, 3)
+        return k, v
+
+    from repro.models.shard_ctx import constrain_cross_kv
+    k, v = jax.vmap(one)(params["layers"])      # (L, B, Hkv, S, D) pair
+    return constrain_cross_kv(k), constrain_cross_kv(v)
+
+
+def _scan_inner_size(cfg: ModelConfig, L: int) -> int:
+    """Inner chunk for the nested (sqrt-depth) layer scan: the largest
+    divisor of L not exceeding ~sqrt(L)*1.5 (0 disables nesting)."""
+    if getattr(cfg, "layer_scan_inner", 0) == 1 or L < 8:
+        return 1
+    explicit = getattr(cfg, "layer_scan_inner", 0)
+    if explicit > 1:
+        return explicit if L % explicit == 0 else 1
+    target = int((L ** 0.5) * 1.5)
+    for k in range(min(target, L), 1, -1):
+        if L % k == 0:
+            return k
+    return 1
+
+
+def run_stack(params, x, cfg: ModelConfig, *, caches=None, mode="train",
+              causal=True, positions=None, cross_kv=None):
+    """Run the (optionally pre-staged +) scanned layer stack.
+
+    Returns (x, new_caches, aux_sum).  ``caches`` is a stacked pytree with
+    leading L axis (or None in train mode).
+    """
+    kind = layer_kind(cfg)
+    aux_total = jnp.float32(0.0)
+
+    if "pre_layers" in params:
+        for i, pl in enumerate(params["pre_layers"]):
+            io = BlockIO(
+                cache=None if caches is None else jax.tree_util.tree_map(
+                    lambda c: c[i], caches["pre"]),
+                window=jnp.int32(BIG_WINDOW), cross_kv=None)
+            x, new_c, aux = _apply_block(pl, x, cfg, io, kind="dense",
+                                         mode=mode, causal=causal,
+                                         positions=positions)
+            aux_total = aux_total + aux
+            if caches is not None:
+                caches = dict(caches)
+                caches["pre"] = jax.tree_util.tree_map(
+                    lambda full, new, ii=i: full.at[ii].set(new),
+                    caches["pre"], new_c)
+
+    windows = layer_windows(cfg)
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        windows = windows[cfg.moe.first_k_dense:]
+
+    scan_caches = caches["stack"] if isinstance(caches, dict) and "stack" in caches else caches
+
+    has_cache = scan_caches is not None
+
+    def body(carry, inp):
+        # caches travel in the CARRY (not xs->ys): the per-layer
+        # dynamic-update-slice then updates the stacked cache IN PLACE,
+        # instead of paying a full copy from the read-only xs buffer into
+        # the freshly-allocated ys buffer every step.
+        x, cache_stack, li = carry
+        if cross_kv is not None:
+            layer_p, win, ckv = inp
+        else:
+            layer_p, win = inp
+            ckv = None
+        cache_l = (None if not has_cache else jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
+            cache_stack))
+        io = BlockIO(cache=cache_l, window=win, cross_kv=ckv)
+        x, new_cache, aux = _apply_block(layer_p, x, cfg, io, kind=kind,
+                                         mode=mode, causal=causal,
+                                         positions=positions)
+        if has_cache:
+            cache_stack = jax.tree_util.tree_map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype) if hasattr(n, "dtype") else n, li, 0),
+                cache_stack, new_cache)
+        return (x, cache_stack, li + 1), aux
+
+    if cfg.remat:
+        # prevent_cse=False: inside scan the CSE barrier is unnecessary and
+        # its optimization-barrier copies double the saved-carry memory.
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    xs = (params["layers"], windows)
+    if cross_kv is not None:
+        xs = xs + (cross_kv,)
+    carry0 = (x, scan_caches, jnp.int32(0))
+    n_stack = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+    if cfg.scan_layers:
+        inner = _scan_inner_size(cfg, n_stack)
+        if inner > 1 and n_stack % inner == 0 and mode == "train":
+            # sqrt-depth nesting: saved layer carries drop from O(L) to
+            # O(L/inner + inner) (granite-34b: 88 -> ~19 saved carries)
+            outer = n_stack // inner
+            xs2 = jax.tree_util.tree_map(
+                lambda a: a.reshape((outer, inner) + a.shape[1:]), xs)
+
+            def outer_body(c, xin):
+                return jax.lax.scan(body, c, xin)
+
+            if cfg.remat:
+                outer_body = jax.checkpoint(
+                    outer_body,
+                    policy=jax.checkpoint_policies.nothing_saveable,
+                    prevent_cse=False)
+            (x, new_caches, _), auxes = jax.lax.scan(outer_body, carry0, xs2)
+            aux_total = aux_total + jnp.sum(auxes)
+        else:
+            (x, new_caches, _), auxes = jax.lax.scan(body, carry0, xs)
+            aux_total = aux_total + jnp.sum(auxes)
+    else:
+        # unrolled path: every layer appears in the HLO (used by the roofline
+        # cost variants, where scan bodies would be cost-counted only once)
+        carry = carry0
+        for i in range(n_stack):
+            inp = jax.tree_util.tree_map(lambda a, i=i: a[i], xs)
+            carry, aux = body(carry, inp)
+            aux_total = aux_total + aux
+        x, new_caches, _ = carry
+
+    if isinstance(caches, dict) and "stack" in caches:
+        out_caches = dict(caches)
+        out_caches["stack"] = new_caches
+    else:
+        out_caches = new_caches
+    return x, out_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Public model API
+# ---------------------------------------------------------------------------
+
+
+def encode(params, enc_embeds, cfg: ModelConfig):
+    """Encoder stack (seamless): bidirectional, no cache."""
+    x = enc_embeds.astype(cfg.dtype)
+    windows = jnp.full((cfg.n_encoder_layers,), BIG_WINDOW, jnp.int32)
+
+    def body(carry, inp):
+        layer_p, win = inp
+        io = BlockIO(cache=None, window=win, cross_kv=None)
+        x, _, _ = _apply_block(layer_p, carry, cfg, io, kind="dense",
+                               mode="train", causal=False, positions=None)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["enc_layers"], windows))
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _inputs_to_embeds(params, cfg, tokens=None, input_embeds=None):
+    if input_embeds is not None:
+        return input_embeds.astype(cfg.dtype)
+    return embed_tokens(params["embed"], tokens, cfg)
+
+
+def logits_from_hidden(params, x, cfg: ModelConfig):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head)
+    if cfg.padded_vocab != cfg.vocab_size:      # mask the TP padding columns
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens=None, input_embeds=None,
+                   enc_embeds=None, positions=None):
+    """Teacher-forced forward up to the final norm: (hidden, aux_loss)."""
+    x = _inputs_to_embeds(params, cfg, tokens, input_embeds)
+    cross_kv = None
+    if cfg.encdec:
+        enc_out = encode(params, enc_embeds, cfg)
+        cross_kv = _cross_kv_per_layer(params, enc_out, cfg)
+    x, _, aux = run_stack(params, x, cfg, caches=None, mode="train",
+                          causal=True, positions=positions, cross_kv=cross_kv)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def forward_train(params, cfg: ModelConfig, tokens=None, input_embeds=None,
+                  enc_embeds=None, positions=None):
+    """Teacher-forced forward: returns (logits, aux_loss)."""
+    hidden, aux = forward_hidden(params, cfg, tokens=tokens,
+                                 input_embeds=input_embeds,
+                                 enc_embeds=enc_embeds, positions=positions)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return unembed(hidden, head), aux
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    kind = layer_kind(cfg)
+    L = cfg.n_layers
+    n_scan = L - (cfg.moe.first_k_dense if cfg.moe else 0)
+
+    def stacked(make_one, n):
+        one = make_one()
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (n,) + l.shape).copy(), one)
+
+    if kind == "rwkv":
+        return stacked(lambda: rwkv_mod.init_rwkv_state(cfg, batch), n_scan)
+    kv = lambda: attn_mod.init_kv_cache(cfg, batch, max_len)
+    if kind == "hybrid":
+        return stacked(lambda: {"kv": kv(), "ssm": ssm_mod.init_ssm_state(cfg, batch)}, n_scan)
+    caches = stacked(kv, n_scan)
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        return {"stack": caches,
+                "pre": stacked(kv, cfg.moe.first_k_dense)}
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, input_embeds=None,
+            enc_embeds=None, caches=None, positions=None):
+    """Process the prompt, fill caches, return logits of the LAST position."""
+    x = _inputs_to_embeds(params, cfg, tokens, input_embeds)
+    cross_kv = None
+    if cfg.encdec:
+        enc_out = encode(params, enc_embeds, cfg)
+        cross_kv = _cross_kv_per_layer(params, enc_out, cfg)
+    x, caches, _ = run_stack(params, x, cfg, caches=caches, mode="prefill",
+                             causal=True, positions=positions,
+                             cross_kv=cross_kv)
+    return logits_from_hidden(params, x[:, -1:], cfg), caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, enc_out=None,
+                positions=None):
+    """One decode step.  token: (B, 1) int32.  Returns (logits, caches)."""
+    x = embed_tokens(params["embed"], token, cfg)
+    cross_kv = _cross_kv_per_layer(params, enc_out, cfg) if (
+        cfg.encdec and enc_out is not None) else None
+    x, caches, _ = run_stack(params, x, cfg, caches=caches, mode="decode",
+                             causal=True, positions=positions,
+                             cross_kv=cross_kv)
+    return logits_from_hidden(params, x, cfg), caches

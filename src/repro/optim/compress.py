@@ -1,0 +1,70 @@
+"""Gradient compression with error feedback (int8 quantization).
+
+For cross-pod data parallelism the gradient all-reduce crosses the slow
+inter-pod links; 4x compression (f32->int8 blocks with per-block scales)
+cuts that term of the roofline directly.  Error feedback keeps the residual
+so compression error does not bias convergence (it is re-added next step).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+class CompressState(NamedTuple):
+    residual: Any          # pytree like grads, f32
+
+
+def init(grads_like) -> CompressState:
+    return CompressState(residual=jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _quantize(x: jax.Array):
+    """(N,) f32 -> (int8 codes, per-block f32 scales)."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    xp = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(xp / safe), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _dequantize(codes, scale, n):
+    return (codes.astype(jnp.float32) * scale).reshape(-1)[:n]
+
+
+def compress_decompress(g: jax.Array, residual: jax.Array):
+    """One error-feedback round-trip for a single tensor.  Returns
+    (decompressed gradient actually applied, new residual)."""
+    flat = g.astype(jnp.float32).reshape(-1) + residual.reshape(-1)
+    codes, scale = _quantize(flat)
+    deq = _dequantize(codes, scale, flat.shape[0])
+    new_res = (flat - deq).reshape(g.shape)
+    return deq.reshape(g.shape), new_res
+
+
+def apply(grads, state: CompressState):
+    """Compress+decompress every leaf (the all-reduce would move the int8
+    codes; here we model the numerics and count the bytes)."""
+    outs = jax.tree_util.tree_map(compress_decompress, grads, state.residual)
+    new_g = jax.tree_util.tree_map(lambda o: o[0], outs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree_util.tree_map(lambda o: o[1], outs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, CompressState(residual=new_r)
+
+
+def compressed_bytes(grads) -> int:
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size
+        blocks = -(-n // BLOCK)
+        total += n + blocks * 4          # int8 codes + f32 scales
+    return total

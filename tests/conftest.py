@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS / device-count overrides are deliberately
+NOT set here — smoke tests and benchmarks must see the real (1-device) CPU.
+Multi-device tests spawn subprocesses with their own XLA_FLAGS."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

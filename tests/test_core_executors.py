@@ -1,0 +1,143 @@
+"""Executor equivalence: every Mozart executor must produce the library's
+un-annotated (eager) results.  Property-tested over random op pipelines."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import mozart
+from repro.core import annotated_numpy as anp
+from repro.core.executor import PedanticError
+
+EXECUTORS = ["eager", "pipelined", "fused", "scan", "pallas"]
+
+UNARY = ["exp", "log1p", "sqrt", "abs", "square", "tanh"]
+BINARY = ["add", "subtract", "multiply", "maximum"]
+
+NP_REF = {
+    "exp": np.exp, "log1p": np.log1p, "sqrt": np.sqrt, "abs": np.abs,
+    "square": np.square, "tanh": np.tanh, "add": np.add,
+    "subtract": np.subtract, "multiply": np.multiply, "maximum": np.maximum,
+}
+
+
+def run_pipeline(ops, x, executor, batch):
+    with mozart.session(executor=executor, batch_elements=batch) as ctx:
+        cur = anp.abs(x)
+        for op in ops:
+            if op in UNARY:
+                cur = getattr(anp, op)(cur)
+            else:
+                cur = getattr(anp, op)(cur, x)
+        out = np.asarray(cur)
+    return out, ctx
+
+
+def ref_pipeline(ops, x):
+    x = np.asarray(x)
+    cur = np.abs(x)
+    for op in ops:
+        cur = NP_REF[op](cur) if op in UNARY else NP_REF[op](cur, x)
+    return cur
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@given(
+    ops=hst.lists(hst.sampled_from(UNARY + BINARY), min_size=1, max_size=6),
+    n=hst.integers(3, 257),
+    batch=hst.integers(1, 64),
+)
+@settings(max_examples=15, deadline=None)
+def test_pipeline_matches_reference(executor, ops, n, batch):
+    x = jnp.linspace(0.1, 2.0, n, dtype=jnp.float32)
+    got, _ = run_pipeline(ops, x, executor, batch)
+    want = ref_pipeline(ops, np.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("executor", ["pipelined", "fused", "scan"])
+def test_reduction_across_chunks(executor):
+    x = jnp.arange(1000.0, dtype=jnp.float32)
+    with mozart.session(executor=executor, batch_elements=77) as ctx:
+        s = anp.sum(anp.multiply(x, 2.0))
+        m = anp.max(anp.multiply(x, 2.0))
+        assert np.isclose(float(s), np.arange(1000.0).sum() * 2)
+        assert np.isclose(float(m), 999.0 * 2)
+    assert ctx.stats["chunks"] > 2     # actually chunked
+
+
+def test_batch_size_heuristic_used():
+    """Without an override, batch = C*fastmem/sum(elem_bytes) (paper §5.2)."""
+    from repro import hardware
+    x = jnp.zeros(int(2e6), jnp.float32)
+    with mozart.session(executor="fused", chip=hardware.CPU_HOST) as ctx:
+        y = anp.add(anp.exp(x), x)
+        _ = y.value
+    # stage has: input x (4B), exp out (4B), add out (4B) -> 12 B/element
+    expect = int(hardware.CPU_HOST.mozart_c * hardware.CPU_HOST.vmem_bytes / 12)
+    expect_chunks = int(np.ceil(2e6 / expect))
+    assert ctx.stats["chunks"] == expect_chunks
+
+
+def test_mixed_shapes_raise_pedantic():
+    x = jnp.zeros(10)
+    y = jnp.zeros(11)
+    with pytest.raises(Exception):
+        with mozart.session(executor="pipelined", pedantic=True) as ctx:
+            a = anp.add(x, x)
+            b = anp.add(y, y)
+            c = anp.add(a, b)    # 10 vs 11: broadcast error or pedantic
+            _ = c.value
+
+
+def test_broadcast_scalar_args():
+    x = jnp.arange(100.0)
+    for ex in EXECUTORS:
+        with mozart.session(executor=ex, batch_elements=13):
+            y = anp.power(anp.add(x, 1.0), 2.0)
+            np.testing.assert_allclose(
+                np.asarray(y), (np.arange(100.0) + 1) ** 2, rtol=1e-5)
+
+
+def test_future_dunder_ops_stay_lazy():
+    x = jnp.arange(32.0)
+    with mozart.session(executor="fused", batch_elements=8) as ctx:
+        a = anp.exp(x)
+        b = a + 1.0
+        c = b * 2.0
+        stages = ctx.last_plan()
+        assert len(stages) == 1 and len(stages[0].nodes) == 3
+        np.testing.assert_allclose(
+            np.asarray(c), (np.exp(np.arange(32.0)) + 1) * 2, rtol=1e-5)
+
+
+def test_annotated_fn_transparent_inside_jit():
+    """Inside someone else's jit, annotated fns run raw (no laziness)."""
+    import jax
+
+    @jax.jit
+    def f(x):
+        return anp.add(anp.exp(x), x)
+
+    x = jnp.arange(8.0)
+    out = f(x)
+    assert not isinstance(out, object.__class__) or hasattr(out, "shape")
+    np.testing.assert_allclose(np.asarray(out), np.exp(np.arange(8.0)) + np.arange(8.0), rtol=1e-5)
+
+
+def test_eager_context_executes_immediately():
+    x = jnp.arange(8.0)
+    with mozart.session(lazy=False):
+        out = anp.exp(x)
+        assert hasattr(out, "shape") and not hasattr(out, "_node")
+
+
+def test_2d_split_axis1_scan():
+    m = jnp.arange(64.0, dtype=jnp.float32).reshape(4, 16)
+    with mozart.session(executor="scan", batch_elements=3) as ctx:
+        r = anp.normalize_axis(m, axis=0)   # split along axis 1
+        out = np.asarray(r)
+    ref = np.asarray(m)
+    ref = (ref - ref.mean(axis=0, keepdims=True)) / (ref.std(axis=0, keepdims=True) + 1e-9)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,147 @@
+"""Planner tests: stage formation = split-type compatibility (paper §5.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mozart
+from repro.core import annotated_numpy as anp
+
+
+def names(stages):
+    return [[n.fn.name for n in s.nodes] for s in stages]
+
+
+def test_elementwise_chain_single_stage():
+    x = jnp.arange(64.0)
+    with mozart.session() as ctx:
+        a = anp.exp(x)
+        b = anp.add(a, x)
+        c = anp.sqrt(b)
+        stages = ctx.last_plan()
+        assert names(stages) == [["exp", "add", "sqrt"]]
+        _ = c.value
+
+
+def test_reduction_joins_stage_as_partials():
+    x = jnp.arange(64.0)
+    with mozart.session() as ctx:
+        s = anp.sum(anp.exp(x))
+        stages = ctx.last_plan()
+        assert names(stages) == [["exp", "sum"]]
+        _ = s.value
+
+
+def test_axis_mismatch_breaks_stage():
+    m = jnp.arange(24.0).reshape(6, 4)
+    with mozart.session() as ctx:
+        r1 = anp.normalize_axis(m, axis=1)
+        r2 = anp.normalize_axis(r1, axis=0)
+        stages = ctx.last_plan()
+        assert len(stages) == 2
+        tin1 = list(stages[0].inputs.values())[0].split_type
+        tin2 = list(stages[1].inputs.values())[0].split_type
+        assert tin1 != tin2
+        _ = r2.value
+
+
+def test_same_value_two_split_axes_breaks_stage():
+    """One value consumed with two different split types in one stage -> break."""
+    m = jnp.arange(24.0).reshape(6, 4)
+    with mozart.session() as ctx:
+        a = anp.normalize_axis(m, axis=1)   # wants m split along rows
+        b = anp.normalize_axis(m, axis=0)   # wants m split along cols
+        stages = ctx.last_plan()
+        assert len(stages) == 2
+        _ = a.value, b.value
+
+
+def test_unknown_does_not_pipe_with_unknown():
+    x = jnp.arange(64.0)
+    with mozart.session() as ctx:
+        k1 = anp.compress(anp.greater(x, 5.0), x)
+        k2 = anp.compress(anp.greater(x, 5.0), x)
+        s = anp.add(k1, k2)
+        stages = ctx.last_plan()
+        # add consumes two distinct unknowns -> own stage
+        assert names(stages)[-1] == ["add"]
+        out = np.asarray(s)
+    want = np.arange(64.0)[np.arange(64.0) > 5] * 2
+    np.testing.assert_allclose(out, want)
+
+
+def test_unknown_pipes_into_generic():
+    x = jnp.arange(64.0)
+    with mozart.session() as ctx:
+        k = anp.compress(anp.greater(x, 5.0), x)
+        y = anp.multiply(k, 3.0)
+        stages = ctx.last_plan()
+        assert names(stages) == [["greater", "compress", "multiply"]]
+        out = np.asarray(y)
+    want = np.arange(64.0)[np.arange(64.0) > 5] * 3
+    np.testing.assert_allclose(out, want)
+
+
+def test_generic_inference_propagates_along_edges():
+    """exp is (S)->S; consuming an ArraySplit value pins S by inference."""
+    x = jnp.arange(64.0).reshape(16, 4)
+    with mozart.session() as ctx:
+        a = anp.matvec(x, jnp.ones(4))     # ret Along(0) (concrete)
+        b = anp.exp(a)                      # generic in/out
+        stages = ctx.last_plan()
+        assert names(stages) == [["matvec", "exp"]]
+        t = stages[0].out_types[stages[0].nodes[1].id]
+        assert t.name == "ArraySplit"
+        _ = b.value
+
+
+def test_unconstrained_generic_falls_back_to_default():
+    x = jnp.arange(64.0)
+    with mozart.session() as ctx:
+        a = anp.exp(x)                      # all-generic stage
+        stages = ctx.last_plan()
+        si = list(stages[0].inputs.values())[0]
+        assert si.split_type.name == "ArraySplit"   # default: axis-0 split
+        _ = a.value
+
+
+def test_matmul_panel_split():
+    a = jnp.arange(32.0).reshape(8, 4)
+    b = jnp.arange(12.0).reshape(4, 3)
+    with mozart.session(batch_elements=3) as ctx:
+        c = anp.matmul(a, b)
+        d = anp.exp(c)
+        stages = ctx.last_plan()
+        assert names(stages) == [["matmul", "exp"]]
+        out = np.asarray(d)
+    np.testing.assert_allclose(out, np.exp(np.asarray(a) @ np.asarray(b)), rtol=1e-5)
+
+
+def test_plans_do_not_recompute_done_nodes():
+    x = jnp.arange(16.0)
+    with mozart.session() as ctx:
+        a = anp.exp(x)
+        _ = a.value
+        evals_before = ctx.stats["evaluations"]
+        b = anp.add(a, x)        # uses an already-materialized future
+        _ = b.value
+        assert ctx.stats["evaluations"] == evals_before + 1
+
+
+def test_whole_array_source_is_stage_boundary():
+    """A node whose inputs are all "_" but whose output is splittable (e.g.
+    Shallow Water's `roll`) computes on whole arrays: it must form its own
+    stage so downstream chunked consumers re-split its materialized output."""
+    from benchmarks.workloads import roll
+    m = jnp.arange(64.0, dtype=jnp.float32).reshape(8, 8)
+    with mozart.session(executor="pipelined", batch_elements=3) as ctx:
+        shifted = roll(m, 1, 0)
+        diff = anp.subtract(shifted, m)       # chunked elementwise stage
+        total = anp.sum(diff)
+        stages = ctx.last_plan()
+        assert names(stages)[0] == ["roll"]
+        assert "subtract" in names(stages)[1]
+        got = np.asarray(diff)
+        tot = float(total)
+    want = np.roll(np.asarray(m), 1, 0) - np.asarray(m)
+    np.testing.assert_allclose(got, want)
+    assert np.isclose(tot, want.sum())

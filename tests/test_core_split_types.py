@@ -1,0 +1,126 @@
+"""Unit + property tests for the split-type algebra (paper §3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import split_types as st
+
+
+class TestIdentity:
+    def test_equality_is_name_plus_params(self):
+        assert st.ArraySplit((10,), 0) == st.ArraySplit((10,), 0)
+        assert st.ArraySplit((10,), 0) != st.ArraySplit((20,), 0)
+        assert st.ArraySplit((4, 6), 0) != st.ArraySplit((4, 6), 1)
+        assert st.ReduceSplit("add") == st.ReduceSplit("add")
+        assert st.ReduceSplit("add") != st.ReduceSplit("max")
+
+    def test_unknown_is_unique(self):
+        a, b = st.UnknownSplit(), st.UnknownSplit()
+        assert a != b and a == a
+
+    def test_broadcast_all_equal(self):
+        assert st.ScalarSplit() == st.BROADCAST
+
+    def test_hashable(self):
+        assert len({st.ArraySplit((3,), 0), st.ArraySplit((3,), 0)}) == 1
+
+
+class TestSplitMergeRoundTrip:
+    @given(
+        n=hst.integers(1, 200),
+        batch=hst.integers(1, 64),
+        axis=hst.integers(0, 1),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_array_split_roundtrip(self, n, batch, axis):
+        x = jnp.arange(n * 3, dtype=jnp.float32).reshape(n, 3)
+        if axis == 1:
+            x = x.T
+        t = st.ArraySplit(x.shape, axis)
+        pieces = [t.split(x, s, min(s + batch, n)) for s in range(0, n, batch)]
+        merged = t.merge(pieces)
+        np.testing.assert_array_equal(np.asarray(merged), np.asarray(x))
+
+    @given(n=hst.integers(1, 100), batch=hst.integers(1, 32))
+    @settings(max_examples=30, deadline=None)
+    def test_reduce_merge_associative(self, n, batch):
+        x = np.random.RandomState(n).randn(n).astype(np.float32)
+        t = st.ArraySplit(x.shape, 0)
+        r = st.ReduceSplit("add")
+        partials = [
+            jnp.sum(t.split(jnp.asarray(x), s, min(s + batch, n)))
+            for s in range(0, n, batch)
+        ]
+        assert np.isclose(float(r.merge(partials)), x.sum(), rtol=1e-4)
+
+    def test_pytree_split(self):
+        tree = {"a": jnp.arange(12.0).reshape(6, 2), "b": jnp.arange(6.0)}
+        leaves, td = jax.tree_util.tree_flatten(tree)
+        t = st.PytreeSplit(str(td), 6, 0)
+        pieces = [t.split(tree, s, s + 2) for s in range(0, 6, 2)]
+        merged = t.merge(pieces)
+        np.testing.assert_array_equal(np.asarray(merged["a"]), np.asarray(tree["a"]))
+        np.testing.assert_array_equal(np.asarray(merged["b"]), np.asarray(tree["b"]))
+
+    def test_info(self):
+        x = jnp.zeros((8, 4), jnp.float32)
+        t = st.ArraySplit((8, 4), 0)
+        info = t.info(x)
+        assert info.num_elements == 8
+        assert info.elem_bytes == 4 * 4
+
+
+class TestUnification:
+    def test_var_binds_concrete(self):
+        env = st.TypeEnv()
+        v = st.GenericVar("S")
+        env.unify(v, st.ArraySplit((10,), 0))
+        assert env.resolve(v) == st.ArraySplit((10,), 0)
+
+    def test_var_var_then_concrete(self):
+        env = st.TypeEnv()
+        a, b = st.GenericVar("S"), st.GenericVar("T")
+        env.unify(a, b)
+        env.unify(b, st.ArraySplit((5,), 0))
+        assert env.resolve(a) == st.ArraySplit((5,), 0)
+
+    def test_concrete_mismatch_raises(self):
+        env = st.TypeEnv()
+        with pytest.raises(st.UnificationError):
+            env.unify(st.ArraySplit((5,), 0), st.ArraySplit((6,), 0))
+
+    def test_var_binds_unknown_but_unknowns_conflict(self):
+        env = st.TypeEnv()
+        v = st.GenericVar("S")
+        u1, u2 = st.UnknownSplit(), st.UnknownSplit()
+        env.unify(v, u1)
+        with pytest.raises(st.UnificationError):
+            env.unify(v, u2)
+
+    def test_snapshot_restore(self):
+        env = st.TypeEnv()
+        v = st.GenericVar("S")
+        snap = env.snapshot()
+        env.unify(v, st.ArraySplit((5,), 0))
+        env.restore(snap)
+        assert isinstance(env.resolve(v), st.GenericVar)
+
+    @given(hst.lists(hst.integers(0, 4), min_size=2, max_size=8))
+    @settings(max_examples=30, deadline=None)
+    def test_transitive_unification(self, chain):
+        """Property: unifying a chain of vars then binding one end binds all."""
+        env = st.TypeEnv()
+        vars_ = [st.GenericVar(f"v{i}") for i in range(len(chain))]
+        for a, b in zip(vars_, vars_[1:]):
+            env.unify(a, b)
+        t = st.ArraySplit((7,), 0)
+        env.unify(vars_[chain[0] % len(vars_)], t)
+        assert all(env.resolve(v) == t for v in vars_)
+
+
+def test_default_split_type():
+    assert st.default_split_type(jnp.zeros((4, 2))) == st.ArraySplit((4, 2), 0)
+    assert st.default_split_type(jnp.float32(3.0)) == st.BROADCAST

@@ -1,0 +1,169 @@
+"""Tests for the Pandas / ImageMagick analogue integrations (paper §7)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import mozart
+from repro.core import annotated_numpy as anp
+from repro.core import annotated_table as tb
+from repro.core import annotated_image as img
+
+
+def make_table(n=100, seed=0):
+    r = np.random.RandomState(seed)
+    return tb.Table({
+        "city": r.randint(0, 7, n).astype(np.int64),
+        "pop": r.randint(1, 1000, n).astype(np.float64),
+        "crime": r.rand(n).astype(np.float64) * 10,
+    })
+
+
+class TestTable:
+    @pytest.mark.parametrize("executor", ["eager", "pipelined"])
+    def test_col_then_vector_math_pipelines(self, executor):
+        t = make_table()
+        with mozart.session(executor=executor, batch_elements=17) as ctx:
+            pop = tb.col(t, "pop")
+            crime = tb.col(t, "crime")
+            idx = anp.divide(anp.multiply(crime, 100.0), pop)
+            s = anp.sum(idx)
+            stages = ctx.last_plan()
+            assert len(stages) == 1                  # all in one stage
+            got = float(s)
+        want = float((t.cols["crime"] * 100 / t.cols["pop"]).sum())
+        assert np.isclose(got, want, rtol=1e-6)
+
+    def test_filter_pipeline(self):
+        t = make_table()
+        with mozart.session(executor="pipelined", batch_elements=13) as ctx:
+            mask = anp.greater(tb.col(t, "pop"), 500.0)
+            kept = tb.filter_rows(t, mask)
+            stages = ctx.last_plan()
+            assert len(stages) == 1
+            out = kept.value
+        m = t.cols["pop"] > 500
+        assert out.nrows == int(m.sum())
+        np.testing.assert_allclose(np.asarray(out.cols["crime"]), t.cols["crime"][m])
+
+    @pytest.mark.parametrize("op", ["sum", "count", "mean", "max", "min"])
+    def test_groupby_partials_reaggregate(self, op):
+        t = make_table(n=173)
+        with mozart.session(executor="pipelined", batch_elements=10) as ctx:
+            g = tb.groupby_agg(t, key="city", val="pop", op=op)
+            res = g.value
+            assert ctx.stats["chunks"] > 10          # really chunked
+        if op == "mean":
+            res = tb.finalize_mean(res, "city")
+        keys = np.asarray(res.cols["city"])
+        vals = np.asarray(res.cols[op])
+        for k, v in zip(keys, vals):
+            rows = t.cols["pop"][t.cols["city"] == k]
+            want = dict(sum=rows.sum(), count=len(rows), mean=rows.mean(),
+                        max=rows.max(), min=rows.min())[op]
+            assert np.isclose(v, want), (op, k, v, want)
+
+    def test_join_splits_left_broadcasts_right(self):
+        left = make_table(n=64)
+        right = tb.Table({
+            "city": np.arange(7, dtype=np.int64),
+            "name_len": np.arange(7, dtype=np.float64) + 3,
+        })
+        with mozart.session(executor="pipelined", batch_elements=9) as ctx:
+            j = tb.join_inner(left, right, on="city")
+            out = j.value
+        assert out.nrows == left.nrows               # every key matches
+        np.testing.assert_allclose(
+            np.asarray(out.cols["name_len"]),
+            left.cols["city"].astype(np.float64) + 3)
+
+    @given(n=hst.integers(2, 300), batch=hst.integers(1, 64), seed=hst.integers(0, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_groupby_chunking_invariant(self, n, batch, seed):
+        """Property: partial aggregation + re-aggregation == one-shot."""
+        t = make_table(n=n, seed=seed)
+        with mozart.session(executor="pipelined", batch_elements=batch):
+            g = tb.groupby_agg(t, key="city", val="crime", op="sum").value
+        whole = tb._group_reduce(t, "city", "crime", "sum")
+        np.testing.assert_allclose(
+            np.asarray(g.cols["sum"]), np.asarray(whole.cols["sum"]), rtol=1e-9)
+
+
+class TestImage:
+    def _image(self, h=32, w=16, seed=0):
+        return jnp.asarray(np.random.RandomState(seed).rand(h, w, 3), jnp.float32)
+
+    def test_hsv_roundtrip(self):
+        im = self._image()
+        rt = img._hsv_to_rgb(img._rgb_to_hsv(im))
+        np.testing.assert_allclose(np.asarray(rt), np.asarray(im), atol=1e-5)
+
+    @pytest.mark.parametrize("executor", ["eager", "pipelined", "fused", "scan"])
+    def test_filter_pipeline_matches_eager(self, executor):
+        im = self._image(h=40)
+        def pipeline():
+            a = img.colortone(im, (0.2, 0.2, 0.6), 0.3, True)
+            b = img.gamma(a, 1.2)
+            c = img.modulate(b, 110.0, 140.0, 100.0)
+            d = img.contrast(c, 1.1)
+            return d
+        with mozart.session(executor="eager") as ctx:
+            want = np.asarray(pipeline())
+        with mozart.session(executor=executor, batch_elements=7) as ctx:
+            got_f = pipeline()
+            stages = ctx.last_plan()
+            assert len(stages) == 1                  # whole filter = 1 stage
+            got = np.asarray(got_f)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_histogram_reduction(self):
+        im = self._image(h=64)
+        with mozart.session(executor="pipelined", batch_elements=5):
+            h = img.brightness_histogram(im).value
+        assert int(np.asarray(h).sum()) == 64 * 16
+
+    def test_blur_not_annotated(self):
+        from repro.core.annotation import AnnotatedFn
+        assert not isinstance(img.blur, AnnotatedFn)
+        im = self._image()
+        out = img.blur(im, radius=1)
+        assert out.shape == im.shape
+
+
+class TestNLP:
+    """spaCy-analogue integration (paper §7: minibatch split + pipeline)."""
+
+    def test_speech_tag_pipeline(self):
+        from repro.core import annotated_nlp as nlp
+        import jax
+        corpus = nlp.make_corpus(50, max_len=32, vocab=200, seed=0)
+        emb = jax.random.normal(jax.random.PRNGKey(0), (200, 16))
+        head = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        with mozart.session(executor="eager") as ctx:
+            want_tags = np.asarray(nlp.pos_tag(
+                nlp.normalize_case(corpus, 200), emb, head))
+            want_count = int(nlp.token_counts(corpus).value)
+        with mozart.session(executor="pipelined", batch_elements=7) as ctx:
+            normalized = nlp.normalize_case(corpus, 200)
+            tags = nlp.pos_tag(normalized, emb, head)
+            count = nlp.token_counts(corpus)
+            stages = ctx.last_plan()
+            # normalize -> tag pipelines (same CorpusSplit)
+            names = [[n.fn.name for n in s.nodes] for s in stages]
+            assert any("normalize_case" in st_ and "pos_tag" in st_
+                       for st_ in names), names
+            got_tags = np.asarray(tags)
+            got_count = int(count)
+        np.testing.assert_array_equal(got_tags, want_tags)
+        assert got_count == want_count
+        assert ctx.stats["chunks"] > 2
+
+    def test_corpus_split_roundtrip(self):
+        from repro.core import annotated_nlp as nlp
+        c = nlp.make_corpus(17, max_len=8, vocab=50)
+        t = nlp.CorpusSplit(17)
+        pieces = [t.split(c, s, min(s + 5, 17)) for s in range(0, 17, 5)]
+        merged = t.merge(pieces)
+        np.testing.assert_array_equal(np.asarray(merged.tokens),
+                                      np.asarray(c.tokens))

@@ -1,0 +1,151 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in interpret mode on CPU (the kernel body executes in
+Python), so these are true executions of the TPU kernel logic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.kernels import ops, ref
+
+
+def rand(shape, dtype, seed=0, scale=1.0):
+    r = np.random.RandomState(seed)
+    return jnp.asarray(r.randn(*shape) * scale, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,Hq,Hkv,S,D,block",
+        [
+            (1, 2, 2, 128, 64, 64),     # MHA
+            (2, 4, 2, 256, 64, 128),    # GQA group 2
+            (1, 8, 1, 128, 128, 64),    # MQA (granite-style kv=1)
+            (1, 2, 2, 256, 256, 128),   # gemma-style head_dim 256
+        ],
+    )
+    def test_vs_ref_causal(self, B, Hq, Hkv, S, D, block, dtype):
+        q = rand((B, Hq, S, D), dtype, 1)
+        k = rand((B, Hkv, S, D), dtype, 2)
+        v = rand((B, Hkv, S, D), dtype, 3)
+        got = ops.flash_attention(q, k, v, causal=True, block_q=block, block_k=block)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype])
+
+    def test_non_causal(self):
+        q, k, v = (rand((1, 2, 128, 64), jnp.float32, i) for i in range(3))
+        got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+        want = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_sliding_window(self, window):
+        q, k, v = (rand((1, 2, 256, 64), jnp.float32, i) for i in range(3))
+        got = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  block_q=64, block_k=64)
+        want = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_cross_attention_kv_longer(self):
+        q = rand((1, 2, 64, 64), jnp.float32, 1)
+        k = rand((1, 2, 256, 64), jnp.float32, 2)
+        v = rand((1, 2, 256, 64), jnp.float32, 3)
+        got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+        want = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+class TestFusedAdamW:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n", [1000, 4096, 70001])
+    def test_vs_ref(self, n, dtype):
+        p = rand((n,), dtype, 0)
+        g = rand((n,), dtype, 1)
+        m = rand((n,), jnp.float32, 2, 0.01)
+        v = jnp.abs(rand((n,), jnp.float32, 3, 0.01))
+        kw = dict(lr=jnp.float32(1e-3), b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+                  step=jnp.int32(7), grad_scale=0.5)
+        po, mo, vo = ops.fused_adamw(p, g, m, v, block=4096, **kw)
+        pr, mr, vr = ref.adamw_ref(p, g, m, v, **kw)
+        np.testing.assert_allclose(np.asarray(po, np.float32),
+                                   np.asarray(pr, np.float32), **TOL[dtype])
+        np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vo), np.asarray(vr), rtol=1e-5, atol=1e-6)
+
+    @given(n=hst.integers(1, 3000), step=hst.integers(1, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_property_sweep(self, n, step):
+        p = rand((n,), jnp.float32, n % 17)
+        g = rand((n,), jnp.float32, n % 13)
+        m = jnp.zeros((n,), jnp.float32)
+        v = jnp.zeros((n,), jnp.float32)
+        kw = dict(lr=jnp.float32(3e-4), b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
+                  step=jnp.int32(step))
+        po, _, _ = ops.fused_adamw(p, g, m, v, block=1024, **kw)
+        pr, _, _ = ref.adamw_ref(p, g, m, v, **kw)
+        np.testing.assert_allclose(np.asarray(po), np.asarray(pr), rtol=3e-5, atol=3e-6)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(8, 128), (3, 512), (2, 5, 256), (300, 1024)])
+    def test_vs_ref(self, shape, dtype):
+        x = rand(shape, dtype, 0)
+        w = rand(shape[-1:], jnp.float32, 1) + 1.0
+        got = ops.rmsnorm(x, w, row_block=64)
+        want = ref.rmsnorm_ref(x, w)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **TOL[dtype])
+
+
+class TestSplitPipeline:
+    @given(n=hst.integers(1, 5000), block=hst.sampled_from([1024, 2048, 4096]))
+    @settings(max_examples=10, deadline=None)
+    def test_chain_vs_ref(self, n, block):
+        x = rand((n,), jnp.float32, 0)
+        y = rand((n,), jnp.float32, 1)
+
+        def chain(blocks, bcasts):
+            # contract: reduce outputs are PRE-reduction blocks; the kernel
+            # (and the oracle) apply the masked reduction.
+            a, b = blocks
+            (c,) = bcasts
+            t = jnp.exp(a * 0.1) + b
+            u = jnp.maximum(t, c)
+            return [u, u]
+
+        kinds = [("concat", ""), ("reduce", "add")]
+        got = ops.split_pipeline(chain, [x, y], [jnp.float32(0.5)], kinds,
+                                 [jnp.float32, jnp.float32], block_elems=block)
+        want = ref.split_pipeline_ref(chain, [x, y], [jnp.float32(0.5)], kinds)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                                   rtol=1e-4)
+
+    @pytest.mark.parametrize("op", ["add", "max", "min", "mul"])
+    def test_reduce_ops_with_padding(self, op):
+        n = 1500                      # forces tail padding at block 1024
+        x = jnp.asarray(np.random.RandomState(0).rand(n) + 0.5, jnp.float32)
+
+        def chain(blocks, bcasts):
+            return [blocks[0]]
+
+        kinds = [("reduce", op)]
+        got = ops.split_pipeline(chain, [x], [], kinds, [jnp.float32],
+                                 block_elems=1024)[0]
+        want = {"add": np.sum, "max": np.max, "min": np.min, "mul": np.prod}[op](
+            np.asarray(x, np.float64))
+        rtol = 1e-3 if op == "mul" else 1e-5
+        assert np.isclose(float(got), float(want), rtol=rtol), (op, got, want)

@@ -1,0 +1,232 @@
+"""Tests: data pipeline, checkpointing (atomic/async/elastic), fault
+tolerance (retries, stragglers, restart loop), optimizer paths, compression."""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import DataPipeline
+from repro.models import transformer as tfm
+from repro.optim import adamw, compress
+from repro.optim.mozart_adamw import mozart_adamw_update
+from repro.runtime import fault
+
+
+class TestDataPipeline:
+    def test_deterministic_and_resumable(self):
+        cfg = get_smoke_config("gemma-7b")
+        p1 = DataPipeline(cfg, batch=4, seq=16, seed=3)
+        p2 = DataPipeline(cfg, batch=4, seq=16, seed=3)
+        b5a = p1.batch_for_step(5)
+        b5b = p2.batch_for_step(5)          # resume at step 5: identical batch
+        np.testing.assert_array_equal(np.asarray(b5a["tokens"]),
+                                      np.asarray(b5b["tokens"]))
+        assert b5a["tokens"].shape == (4, 17)
+        assert int(jnp.max(b5a["tokens"])) < cfg.vocab_size
+
+    def test_prefetch_iterator_order(self):
+        cfg = get_smoke_config("rwkv6-1.6b")
+        p = DataPipeline(cfg, batch=2, seq=8, seed=0, prefetch=3)
+        seen = []
+        for step, batch in p.iterate(start_step=7):
+            seen.append(step)
+            if len(seen) == 5:
+                break
+        p.stop()
+        assert seen == [7, 8, 9, 10, 11]
+
+    def test_mozart_preprocessing_matches_plain(self):
+        cfg = get_smoke_config("gemma-7b")
+        pm = DataPipeline(cfg, batch=2, seq=8, seed=1, use_mozart=True)
+        pp = DataPipeline(cfg, batch=2, seq=8, seed=1, use_mozart=False)
+        np.testing.assert_array_equal(
+            np.asarray(pm.batch_for_step(2)["tokens"]),
+            np.asarray(pp.batch_for_step(2)["tokens"]))
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {"a": jax.random.normal(k, (8, 4)),
+                "nested": {"b": jnp.arange(6.0), "c": jnp.int32(7)}}
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        t = self._tree()
+        ckpt.save(tmp_path, 10, t)
+        assert ckpt.latest_step(tmp_path) == 10
+        avals = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        r = ckpt.restore(tmp_path, 10, avals)
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_incomplete_checkpoint_ignored(self, tmp_path):
+        ckpt.save(tmp_path, 5, self._tree())
+        # simulate a crash mid-write: dir exists but no _COMPLETE marker
+        bad = tmp_path / "step_00000009"
+        bad.mkdir()
+        (bad / "arrays.npz").write_bytes(b"junk")
+        assert ckpt.latest_step(tmp_path) == 5
+
+    def test_async_and_gc(self, tmp_path):
+        saver = ckpt.AsyncCheckpointer(tmp_path, keep_last=2)
+        for s in (1, 2, 3, 4):
+            saver.save_async(s, self._tree(s))
+        saver.wait()
+        assert ckpt.all_steps(tmp_path) == [3, 4]
+
+    def test_elastic_restore_on_host(self, tmp_path):
+        """Restore with explicit shardings (single-device 'mesh')."""
+        t = self._tree()
+        ckpt.save(tmp_path, 1, t)
+        mesh = jax.make_mesh((1,), ("data",))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sh = jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), t)
+        avals = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        r = ckpt.restore(tmp_path, 1, avals, sh)
+        np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t["a"]))
+
+
+class TestFault:
+    def test_retry_then_success(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("transient")
+            return 42
+
+        assert fault.with_retries(flaky, retries=3) == 42
+        assert calls["n"] == 3
+
+    def test_retry_exhaustion_raises(self):
+        def always():
+            raise RuntimeError("nope")
+        with pytest.raises(fault.StepFailure):
+            fault.with_retries(always, retries=2)
+
+    def test_straggler_detection(self):
+        t = fault.StepTimer(fault.FaultConfig(min_steps_for_baseline=3,
+                                              straggler_factor=2.0))
+        for i in range(6):
+            t.record(i, 0.1)
+        assert t.record(6, 0.5) is True
+        assert 6 in t.stragglers
+        assert t.record(7, 0.11) is False
+
+    def test_restart_loop_resumes_from_checkpoint(self, tmp_path):
+        """Crash at step 7, checkpoint at 5 -> restart resumes from 5."""
+        state_log = []
+
+        def make_state(step):
+            start = step if step is not None else 0
+            return {"x": start}, start
+
+        crashes = {"n": 0}
+
+        def run_from(state, start):
+            for s in range(start, 10):
+                if s == 5:
+                    ckpt.save(tmp_path, 5, {"x": jnp.int32(5)})
+                if s == 7 and crashes["n"] == 0:
+                    crashes["n"] += 1
+                    raise RuntimeError("host died")
+                state_log.append(s)
+            return "done"
+
+        out = fault.run_with_restarts(
+            make_state, run_from, fault_cfg=fault.FaultConfig(),
+            latest_step=lambda: ckpt.latest_step(tmp_path))
+        assert out == "done"
+        assert 5 in state_log and 9 in state_log
+        # resumed from 5, not 0, after the crash
+        assert state_log.count(0) == 1 and state_log.count(5) == 2
+
+
+class TestOptim:
+    def _setup(self, n=1000, seed=0):
+        k = jax.random.PRNGKey(seed)
+        params = {"w": jax.random.normal(k, (n,)),
+                  "b": jax.random.normal(k, (16, 8))}
+        grads = jax.tree_util.tree_map(
+            lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape), params)
+        return params, grads, adamw.init(params)
+
+    def test_jnp_vs_kernel_paths_agree(self):
+        params, grads, st = self._setup()
+        cfg = adamw.AdamWConfig()
+        p1, s1, _ = adamw.update(params, grads, st, cfg, path="jnp")
+        p2, s2, _ = adamw.update(params, grads, st, cfg, path="kernel")
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-5, atol=3e-6)
+
+    def test_mozart_path_agrees(self):
+        params, grads, st = self._setup(n=3000)
+        cfg = adamw.AdamWConfig()
+        p1, s1, _ = adamw.update(params, grads, st, cfg, path="jnp")
+        p2, s2, _ = mozart_adamw_update(params, grads, st, cfg,
+                                        executor="scan", batch_elements=700)
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-5, atol=3e-6)
+        np.testing.assert_allclose(np.asarray(s1.m["w"]), np.asarray(s2.m["w"]),
+                                   rtol=1e-5, atol=1e-7)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+        assert float(adamw.schedule(cfg, jnp.int32(0))) == 0.0
+        assert float(adamw.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+        assert float(adamw.schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+class TestCompression:
+    @given(n=hst.integers(10, 9000), seed=hst.integers(0, 10))
+    @settings(max_examples=10, deadline=None)
+    def test_error_feedback_preserves_sum(self, n, seed):
+        """Property: residual carries exactly what compression dropped."""
+        g = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+        res = jnp.zeros((n,))
+        deq, new_res = compress.compress_decompress(g, res)
+        np.testing.assert_allclose(np.asarray(deq + new_res), np.asarray(g),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_compression_ratio(self):
+        g = {"w": jnp.zeros((100_000,))}
+        raw = 100_000 * 4
+        comp = compress.compressed_bytes(g)
+        assert comp < raw / 3.5          # ~4x minus scale overhead
+
+    def test_quantization_bounded_error(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (8192,))
+        deq, res = compress.compress_decompress(g, jnp.zeros((8192,)))
+        block_max = float(jnp.max(jnp.abs(g)))
+        assert float(jnp.max(jnp.abs(res))) <= block_max / 127.0 + 1e-6
+
+
+class TestTrainDriver:
+    def test_train_and_resume(self, tmp_path):
+        from repro.launch.train import train
+        cfg = get_smoke_config("qwen2-vl-2b").with_runtime(dtype=jnp.float32)
+        out1 = train(cfg, steps=6, batch=2, seq=16, ckpt_dir=str(tmp_path),
+                     ckpt_every=3, log_every=100)
+        assert np.isfinite(out1["losses"]).all()
+        assert ckpt.latest_step(tmp_path) == 6
+        # resume continues from the checkpoint, not from scratch
+        out2 = train(cfg, steps=8, batch=2, seq=16, ckpt_dir=str(tmp_path),
+                     ckpt_every=3, log_every=100)
+        assert len(out2["losses"]) == 2          # only steps 6,7 run

@@ -1,0 +1,101 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full loop: annotate unmodified functions -> lazy capture -> plan ->
+pipelined execution -> results identical to the un-annotated library, on a
+real workload (the paper's Black Scholes); plus the training-stack
+integration (Mozart-pipelined AdamW inside a convergent train loop) and
+validation of the dry-run artifacts when present.
+"""
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import workloads as w
+from repro import hardware
+from repro.core import mozart
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+@pytest.mark.parametrize("executor", ["pipelined", "fused", "scan", "pallas"])
+def test_black_scholes_end_to_end(executor):
+    """The paper's motivating workload: 30+ annotated vector ops, one stage,
+    chunk-pipelined, numerically identical to the un-annotated library."""
+    d = w.black_scholes_data(50_000)
+    ref_call, ref_put = w.black_scholes_np(d)
+    with mozart.session(executor=executor, chip=hardware.CPU_HOST) as ctx:
+        call, put = w.black_scholes(**d)
+        stages = ctx.last_plan()
+        # every op pipelines into ONE stage (the paper's headline behaviour)
+        assert len(stages) == 1
+        got_call, got_put = np.asarray(call), np.asarray(put)
+    np.testing.assert_allclose(got_call, ref_call, rtol=2e-3, atol=1e-3)
+    np.testing.assert_allclose(got_put, ref_put, rtol=2e-3, atol=1e-3)
+    assert ctx.stats["chunks"] + ctx.stats["pallas_stages"] >= 1
+
+
+def test_shallow_water_stage_boundaries():
+    """Stencil rolls are whole-array ops: they bound stages but the
+    elementwise body still pipelines (paper §8.2, Shallow Water)."""
+    r = np.random.RandomState(0)
+    eta = jnp.asarray(1.0 + 0.1 * r.randn(128, 128), jnp.float32)
+    u = jnp.zeros((128, 128), jnp.float32)
+    v = jnp.zeros((128, 128), jnp.float32)
+    ref = w.shallow_water_np(eta, u, v)
+    with mozart.session(executor="fused", chip=hardware.CPU_HOST) as ctx:
+        outs = w.shallow_water_step(eta, u, v)
+        stages = ctx.last_plan()
+        assert len(stages) > 1              # rolls force boundaries
+        got = [np.asarray(o) for o in outs]
+    for g, rr in zip(got, ref):
+        np.testing.assert_allclose(g, rr, rtol=1e-3, atol=1e-4)
+
+
+def test_training_with_mozart_optimizer_converges():
+    """The paper's technique inside the training loop: the AdamW update runs
+    as a Mozart pipeline and the loss still goes down."""
+    import jax
+    from repro.configs.registry import get_smoke_config
+    from repro.data.pipeline import DataPipeline
+    from repro.models import lm, transformer as tfm
+    from repro.optim.adamw import AdamWConfig, init
+    from repro.optim.mozart_adamw import mozart_adamw_update
+
+    cfg = get_smoke_config("gemma-7b").with_runtime(dtype=jnp.float32)
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    opt = init(params)
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=12)
+    pipe = DataPipeline(cfg, batch=4, seq=32, seed=0)
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, b: lm.loss_fn(p, b, cfg)))
+    losses = []
+    for step in range(8):
+        batch = pipe.batch_for_step(0)      # overfit one batch
+        loss, grads = grad_fn(params, batch)
+        params, opt, _ = mozart_adamw_update(params, grads, opt, ocfg,
+                                             executor="scan")
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_dryrun_artifacts_are_coherent():
+    """When the dry-run has produced results, validate the deliverable:
+    every compiled cell fits HBM and reports positive flops/collectives."""
+    d = RESULTS / "dryrun"
+    if not d.exists() or not list(d.glob("*__sp.json")):
+        pytest.skip("dry-run results not present")
+    n_ok = 0
+    for f in d.glob("*__sp.json"):
+        r = json.loads(f.read_text())
+        if r["status"] == "skipped":
+            assert "sub-quadratic" in r["reason"] or "encoder" in r["reason"]
+            continue
+        assert r["status"] == "ok", (f.name, r.get("error"))
+        assert r["memory"]["peak_bytes"] < 16 * 2**30, f.name
+        assert r["flops"] > 0
+        assert r["n_devices"] in (256, 512)
+        n_ok += 1
+    assert n_ok >= 30
