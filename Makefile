@@ -1,0 +1,25 @@
+# Repro build/test entry points.  PYTHONPATH is exported so every target can
+# be run straight from a fresh checkout: `make test`.
+
+PYTHON ?= python
+export PYTHONPATH := src
+
+.PHONY: test test-slow bench-smoke bench help
+
+help:
+	@echo "test        tier-1: fast, dependency-light suite (pytest -m 'not slow')"
+	@echo "test-slow   full suite including @slow (multi-device subprocesses, train loops)"
+	@echo "bench-smoke executor-parity + plan-cache smoke; exits nonzero on mismatch"
+	@echo "bench       full benchmark harness at --quick sizes"
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-slow:
+	$(PYTHON) -m pytest -q -m "slow or not slow"
+
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --smoke
+
+bench:
+	$(PYTHON) -m benchmarks.run --quick

@@ -26,7 +26,8 @@ def bench_crime_index(n=2_000_000, iters=3):
     ref = w.crime_index_np(t)
     for ex in ("eager", "pipelined"):
         def once():
-            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST,
+                                plan_cache=False):
                 return float(w.crime_index(t))
         us = time_fn(once, iters=iters)
         assert np.isclose(once(), ref, rtol=1e-6)
@@ -41,7 +42,8 @@ def bench_data_cleaning(n=2_000_000, iters=3):
     ref = w.data_cleaning_np(t)
     for ex in ("eager", "pipelined", "scan"):
         def once():
-            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST,
+                                plan_cache=False):
                 valid, total = w.data_cleaning(t)
                 return float(valid), float(total)
         us = time_fn(once, iters=iters)
@@ -59,7 +61,8 @@ def bench_birth_analysis(n=2_000_000, iters=3):
     ref = tb._group_reduce(t, "year", "births", "sum")
     for ex in ("eager", "pipelined"):
         def once():
-            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST,
+                                plan_cache=False):
                 return w.birth_analysis(t).value
         us = time_fn(once, iters=iters)
         got = once()
@@ -80,7 +83,8 @@ def bench_movielens(n=1_000_000, n_movies=4000, iters=3):
     })
     for ex in ("eager", "pipelined"):
         def once():
-            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST,
+                                plan_cache=False):
                 return w.movielens(ratings, movies).value
         us = time_fn(once, iters=iters)
         record(f"fig4/movielens/{ex}", us, f"n={n}")

@@ -21,7 +21,8 @@ def bench_filter(name, pipeline, h=2000, wd=1500, iters=3):
     base = None
     for ex in ("eager", "pipelined", "fused", "scan"):
         def once():
-            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST,
+                                plan_cache=False):
                 return np.asarray(pipeline(im))
         us = time_fn(once, iters=iters)
         got = once()

@@ -23,7 +23,8 @@ def _run(name, build, check, n_label, executors=EXECUTORS, iters=3):
     base_us = None
     for ex in executors:
         def once():
-            with mozart.session(executor=ex, chip=hardware.CPU_HOST):
+            with mozart.session(executor=ex, chip=hardware.CPU_HOST,
+                                plan_cache=False):
                 outs = build()
                 return [np.asarray(o) for o in outs]
         us = time_fn(once, warmup=1, iters=iters)

@@ -1,4 +1,5 @@
-"""Fig 6: effect of batch (chunk) size; Mozart's heuristic vs a sweep."""
+"""Fig 6: effect of batch (chunk) size; Mozart's heuristic vs a sweep,
+plus the plan-cache auto-tuner landing on (or beating) the sweep's best."""
 
 from __future__ import annotations
 
@@ -7,7 +8,7 @@ import numpy as np
 from benchmarks import workloads as w
 from benchmarks.common import record, time_fn
 from repro import hardware
-from repro.core import mozart
+from repro.core import mozart, plan_cache
 
 
 def main(quick=False):
@@ -16,8 +17,10 @@ def main(quick=False):
 
     def run(batch):
         def once():
+            # plan_cache off: each sweep point must measure the raw chunk
+            # loop, not cache instantiation or tuner re-runs.
             with mozart.session(executor="scan", chip=hardware.CPU_HOST,
-                                batch_elements=batch):
+                                batch_elements=batch, plan_cache=False):
                 call, put = w.black_scholes(**d)
                 return np.asarray(call), np.asarray(put)
         return time_fn(once, iters=3)
@@ -28,20 +31,37 @@ def main(quick=False):
         record(f"fig6/black_scholes/batch_{b}", us, "")
 
     # the heuristic's choice (paper: C * L2 / sum(elem bytes))
-    with mozart.session(executor="scan", chip=hardware.CPU_HOST) as ctx:
+    with mozart.session(executor="scan", chip=hardware.CPU_HOST,
+                        plan_cache=False) as ctx:
         call, put = w.black_scholes(**d)
         _ = np.asarray(call)
         heur_chunks = ctx.stats["chunks"]
     heur_batch = int(np.ceil(n / heur_chunks))
-    heur_us = run(None) if False else time_fn(lambda: _heur_once(d))
+    heur_us = time_fn(lambda: _once(d, plan_cache_on=False))
     best_b = min(results, key=results.get)
     record("fig6/black_scholes/heuristic", heur_us,
            f"batch~{heur_batch};best_batch={best_b};"
            f"within={heur_us / results[best_b]:.2f}x_of_best")
 
+    # plan cache + auto-tuner: call 1 plans, call 2 measures candidates
+    # around the heuristic and pins the fastest, call 3+ reuse both.
+    plan_cache.clear()
+    first_us = time_fn(lambda: _once(d), warmup=0, iters=1)   # miss: plan+estimate
+    tune_us = time_fn(lambda: _once(d), warmup=0, iters=1)    # first hit: tuner trials
+    # pinned steady state: same median-of-3 protocol as the sweep rows above
+    tuned_us = time_fn(lambda: _once(d), warmup=0, iters=3)
+    tuned = plan_cache.tuned_batches()
+    info = plan_cache.cache_info()
+    record("fig6/black_scholes/autotuned", tuned_us,
+           f"pinned={sorted(tuned.values())};first_call={first_us:.0f};"
+           f"tuning_call={tune_us:.0f};vs_heuristic={heur_us / tuned_us:.2f}x;"
+           f"vs_sweep_best={tuned_us / results[best_b]:.2f}x;"
+           f"cache_hits={info.get('hits', 0)};planner_runs={info.get('misses', 0)}")
 
-def _heur_once(d):
-    with mozart.session(executor="scan", chip=hardware.CPU_HOST):
+
+def _once(d, plan_cache_on=True):
+    with mozart.session(executor="scan", chip=hardware.CPU_HOST,
+                        plan_cache=plan_cache_on):
         call, put = w.black_scholes(**d)
         return np.asarray(call), np.asarray(put)
 

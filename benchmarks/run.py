@@ -1,8 +1,14 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,...]
+    PYTHONPATH=src python -m benchmarks.run --smoke
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+
+``--smoke`` is the CI gate (`make bench-smoke`): it runs the Black–Scholes
+pipeline under every registered StageExecutor, checks numerical parity with
+the un-annotated "eager" oracle, exercises the plan cache + auto-tuner with
+a repeated run, and exits nonzero on any mismatch.
 """
 
 from __future__ import annotations
@@ -12,7 +18,7 @@ import importlib
 import sys
 import traceback
 
-from benchmarks.common import header
+from benchmarks.common import header, record
 
 MODULES = {
     "fig4_pipelines": "benchmarks.fig4_pipelines",     # Fig 4 a-d, j-m
@@ -27,16 +33,74 @@ MODULES = {
 }
 
 
+def smoke() -> int:
+    """Executor-parity + plan-cache smoke check.  Returns a process exit code."""
+    import jax
+    import numpy as np
+
+    from benchmarks import workloads as w
+    from repro.core import mozart, plan_cache
+    from repro.core.stage_exec import available_executors
+
+    d = w.black_scholes_data(20_000)
+    plan_cache.clear()
+    with mozart.session(executor="eager"):
+        call, put = w.black_scholes(**d)
+        want = (np.asarray(call), np.asarray(put))
+
+    failures: list[str] = []
+    for name in available_executors():
+        kwargs = {}
+        if name == "sharded":
+            kwargs["mesh"] = jax.make_mesh((1,), ("data",))
+
+        def once():
+            with mozart.session(executor=name, **kwargs):
+                c, p = w.black_scholes(**d)
+                return np.asarray(c), np.asarray(p)
+
+        try:
+            # Three runs: plan (miss), tune (first hit), pinned (later hit) —
+            # parity must hold through every phase of the plan-cache lifecycle.
+            for i in range(3):
+                got = once()
+                for g, expect, label in zip(got, want, ("call", "put")):
+                    np.testing.assert_allclose(
+                        g, expect, rtol=2e-4, atol=1e-5,
+                        err_msg=f"{name} run{i} {label}")
+            record(f"smoke/parity/{name}", 0.0, "ok")
+        except Exception as e:  # noqa: BLE001 — report every executor
+            traceback.print_exc()
+            failures.append(name)
+            record(f"smoke/parity/{name}", 0.0, f"MISMATCH:{type(e).__name__}")
+
+    info = plan_cache.cache_info()
+    record("smoke/plan_cache", 0.0,
+           f"entries={info.get('entries', 0)};hits={info.get('hits', 0)};"
+           f"misses={info.get('misses', 0)};tuned={plan_cache.tuned_batches()}")
+    if failures:
+        print(f"SMOKE FAILED: executor parity mismatch in {failures}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI-friendly)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="executor-parity + plan-cache check; "
+                         "nonzero exit on mismatch")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(MODULES))
     args = ap.parse_args()
 
-    names = list(MODULES) if not args.only else args.only.split(",")
     header()
+    if args.smoke:
+        sys.exit(smoke())
+
+    names = list(MODULES) if not args.only else args.only.split(",")
     failures = []
     for name in names:
         try:

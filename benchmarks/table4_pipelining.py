@@ -34,7 +34,8 @@ def bench(name, build, iters=3):
     base_us = None
     for vname, kw in variants:
         def once():
-            with mozart.session(chip=hardware.CPU_HOST, **kw) as ctx:
+            with mozart.session(chip=hardware.CPU_HOST, plan_cache=False,
+                                **kw) as ctx:
                 outs = build()
                 vals = [np.asarray(o) for o in outs]
             return vals, ctx

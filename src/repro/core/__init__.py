@@ -19,6 +19,8 @@ from repro.core.split_types import (
     Along,
     ArraySplit,
     Broadcast,
+    Concat,
+    ConcatSplit,
     Custom,
     Generic,
     GenericVar,
@@ -37,11 +39,19 @@ from repro.core.split_types import (
     default_split_type,
     _,
 )
+from repro.core.stage_exec import (
+    StageExecutor,
+    available_executors,
+    get_executor,
+    register_executor,
+)
 
 __all__ = [
     "mozart", "SA", "AnnotatedFn", "annotate", "splittable", "Future",
-    "BROADCAST", "Along", "ArraySplit", "Broadcast", "Custom", "Generic",
-    "GenericVar", "Pytree", "PytreeSplit", "Reduce", "ReduceSplit",
-    "RuntimeInfo", "ScalarSplit", "SplitSpec", "SplitType", "TypeEnv",
-    "UnificationError", "Unknown", "UnknownSplit", "default_split_type", "_",
+    "BROADCAST", "Along", "ArraySplit", "Broadcast", "Concat", "ConcatSplit",
+    "Custom", "Generic", "GenericVar", "Pytree", "PytreeSplit", "Reduce",
+    "ReduceSplit", "RuntimeInfo", "ScalarSplit", "SplitSpec", "SplitType",
+    "TypeEnv", "UnificationError", "Unknown", "UnknownSplit",
+    "default_split_type", "_",
+    "StageExecutor", "available_executors", "get_executor", "register_executor",
 ]

@@ -32,6 +32,11 @@ class Corpus:
     def n_docs(self) -> int:
         return int(self.tokens.shape[0])
 
+    def mozart_fingerprint(self) -> tuple:
+        """Plan-cache identity: token matrix geometry, never values."""
+        return ("corpus", tuple(self.tokens.shape), str(self.tokens.dtype),
+                tuple(self.lengths.shape), str(self.lengths.dtype))
+
 
 def _corpus_flatten(c: Corpus):
     return [c.tokens, c.lengths], None

@@ -53,6 +53,12 @@ class Table:
     def to_numpy(self) -> dict[str, np.ndarray]:
         return {k: np.asarray(v) for k, v in self.cols.items()}
 
+    def mozart_fingerprint(self) -> tuple:
+        """Plan-cache identity: column names + shapes/dtypes, never values."""
+        return ("table", tuple(
+            (k, tuple(v.shape), str(v.dtype)) for k, v in sorted(self.cols.items())
+        ))
+
 
 def _table_flatten(t: Table):
     keys = sorted(t.cols)

@@ -1,11 +1,12 @@
-"""The Mozart execution engine (paper §5.2).
+"""Built-in Mozart executor strategies (paper §5.2) as ``StageExecutor``s.
 
 Per stage: (1) discover runtime parameters — the batch size is chosen so one
 batch of *every* live pipeline value fits in fast memory (L2 on the paper's
-CPUs, VMEM on our TPU target); (2) split inputs and drive each batch through
-the whole function chain; (3) merge partial results associatively.
+CPUs, VMEM on our TPU target), or taken from the plan cache's auto-tuner;
+(2) split inputs and drive each batch through the whole function chain;
+(3) merge partial results associatively.
 
-Executor strategies (``MozartContext.executor``):
+Strategies registered here (see ``core/stage_exec.py`` for the registry):
 
 * ``"eager"``      — no splitting: each function runs whole.  This is the
                      un-annotated library baseline.
@@ -17,304 +18,219 @@ Executor strategies (``MozartContext.executor``):
 * ``"scan"``       — beyond-paper: equal-size chunks are stacked and the
                      fused chain is driven by ``lax.map`` so the chunk loop
                      itself compiles to a single streaming XLA loop.
-* ``"sharded"``    — splits become mesh shards (see ``core/sharded.py``).
-* ``"pallas"``     — elementwise stages lower onto the split-pipeline TPU
-                     kernel (see ``core/pallas_exec.py``).
+
+``"sharded"`` (mesh scale-out) and ``"pallas"`` (TPU split-pipeline kernel)
+live in ``core/sharded.py`` / ``core/pallas_exec.py``.
 """
 
 from __future__ import annotations
 
-import math
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro import hardware
-from repro.core import split_types as st
-from repro.core.graph import DataflowGraph, Node, NodeRef
-from repro.core.planner import Stage, _value_key
+from repro.core.planner import Stage
+from repro.core.stage_exec import (
+    PedanticError,
+    StageExecutor,
+    batch_ranges,
+    chunk_env_for,
+    finish_stage,
+    get_executor,
+    has_dynamic,
+    node_kwargs,
+    register_executor,
+    run_chain,
+    split_axis_of,
+    stage_num_elements,
+)
+
+__all__ = [
+    "PedanticError", "EagerExecutor", "PipelinedExecutor",
+    "FusedExecutor", "ScanExecutor",
+]
 
 
-class PedanticError(RuntimeError):
-    pass
+@register_executor("eager")
+class EagerExecutor(StageExecutor):
+    """The un-annotated library baseline: every function runs whole."""
 
+    tunable = False
 
-# ---------------------------------------------------------------------------
-# Runtime parameter discovery (paper §5.2 step 1)
-# ---------------------------------------------------------------------------
-
-
-def stage_num_elements(stage: Stage, concrete: dict[tuple, Any], pedantic: bool) -> int:
-    counts = set()
-    for key, si in stage.inputs.items():
-        if not si.split_type.splittable:
-            continue
-        info = si.split_type.info(concrete[key])
-        if info is not None:
-            counts.add(info.num_elements)
-    if len(counts) > 1:
-        raise PedanticError(f"stage {stage.id}: inputs disagree on element count: {counts}")
-    return counts.pop() if counts else 1
-
-
-def stage_elem_bytes(stage: Stage, concrete: dict[tuple, Any], n: int) -> int:
-    """Σ sizeof(element) over live pipeline values (inputs + outputs)."""
-    total = 0
-    for key, si in stage.inputs.items():
-        if not si.split_type.splittable:
-            continue
-        info = si.split_type.info(concrete[key])
-        if info is not None:
-            total += info.elem_bytes
-    for node in stage.nodes:
-        t = stage.out_types[node.id]
-        if t.splittable and node.out_aval is not None:
-            leaves = jax.tree_util.tree_leaves(node.out_aval)
-            nb = sum(st.nbytes_of(l) for l in leaves)
-            total += max(nb // max(n, 1), 1)
-    return total
-
-
-def batch_ranges(n: int, batch: int) -> list[tuple[int, int]]:
-    return [(s, min(s + batch, n)) for s in range(0, n, batch)]
-
-
-# ---------------------------------------------------------------------------
-# Per-chunk chain driving
-# ---------------------------------------------------------------------------
-
-
-def _chunk_env_for(stage: Stage, concrete: dict[tuple, Any], s: int, e: int,
-                   pedantic: bool) -> dict[tuple, Any]:
-    env: dict[tuple, Any] = {}
-    for key, si in stage.inputs.items():
-        v = concrete[key]
-        if si.split_type.splittable:
-            piece = si.split_type.split(v, s, e)
-            if pedantic and hasattr(piece, "shape") and 0 in piece.shape:
-                raise PedanticError(f"empty split for {key} range [{s},{e})")
-            env[key] = piece
-        else:
-            env[key] = v                      # "_" values: pointer copy
-    return env
-
-
-def _node_kwargs(node: Node, stage: Stage, env: dict[tuple, Any]) -> dict[str, Any]:
-    kw: dict[str, Any] = {}
-    for name, v in node.bound.items():
-        if name in node.fn.sa.static:
-            kw[name] = v
-        elif isinstance(v, NodeRef) and ("node", v.node_id) in env:
-            kw[name] = env[("node", v.node_id)]
-        else:
-            kw[name] = env[_value_key(v)]
-    return kw
-
-
-def run_chain(stage: Stage, env: dict[tuple, Any], jit_each: bool) -> dict[int, Any]:
-    """Drive one chunk through every function of the stage in order."""
-    outs: dict[int, Any] = {}
-    for node in stage.nodes:
-        kw = _node_kwargs(node, stage, env)
-        if getattr(node.fn.sa, "dynamic", False) or node.out_aval is None:
-            res = node.fn.call_raw(kw)
-        elif jit_each:
-            res = node.fn.jitted(**kw)        # black-box library call
-        else:
-            res = node.fn.fn(**kw)            # traced into enclosing jit
-        env[("node", node.id)] = res
-        outs[node.id] = res
-    return outs
-
-
-# ---------------------------------------------------------------------------
-# Executors
-# ---------------------------------------------------------------------------
-
-
-def _has_dynamic(stage: Stage) -> bool:
-    return any(
-        getattr(n.fn.sa, "dynamic", False) or n.out_aval is None
-        for n in stage.nodes
-    )
-
-
-def execute_stage(stage: Stage, graph: DataflowGraph, ctx) -> None:
-    concrete = {key: graph.resolve(si.value) for key, si in stage.inputs.items()}
-    executor = ctx.executor
-
-    if executor == "eager":
-        _execute_eager(stage, concrete, ctx)
-    elif executor == "sharded":
-        from repro.core.sharded import execute_stage_sharded
-        execute_stage_sharded(stage, concrete, ctx)
-    elif executor == "pallas":
-        from repro.core.pallas_exec import try_execute_stage_pallas
-        if not try_execute_stage_pallas(stage, concrete, ctx):
-            _execute_chunked(stage, concrete, ctx, mode="fused")
-    elif executor in ("pipelined", "fused"):
-        mode = executor
-        if _has_dynamic(stage):
-            mode = "pipelined"           # dynamic-shape fns cannot be traced
-        _execute_chunked(stage, concrete, ctx, mode=mode)
-    elif executor == "scan":
-        if _has_dynamic(stage):
-            _execute_chunked(stage, concrete, ctx, mode="pipelined")
-        else:
-            _execute_scan(stage, concrete, ctx)
-    else:
-        raise ValueError(f"unknown executor {executor!r}")
-
-    ctx.stats["stages"] += 1
-    for node in stage.nodes:
-        node.done = True
-
-
-def _finish(stage: Stage, partials: dict[int, list[Any]]) -> None:
-    for node in stage.nodes:
-        if node.id in partials:
-            node.result = stage.out_types[node.id].merge(partials[node.id])
-        node.done = True
-
-
-def _execute_eager(stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
-    env = dict(concrete)
-    for node in stage.nodes:
-        kw = _node_kwargs(node, stage, env)
-        if getattr(node.fn.sa, "dynamic", False) or node.out_aval is None:
-            res = node.fn.call_raw(kw)
-        else:
-            res = node.fn.jitted(**kw)
-        env[("node", node.id)] = res
-        node.result = res
-        node.done = True
-        ctx.stats["calls"] += 1
-
-
-def _execute_chunked(stage: Stage, concrete: dict[tuple, Any], ctx,
-                     mode: str) -> None:
-    n = stage_num_elements(stage, concrete, ctx.pedantic)
-    elem_bytes = stage_elem_bytes(stage, concrete, n)
-    batch = ctx.batch_elements or hardware.mozart_batch_elements(elem_bytes, ctx.chip)
-    batch = min(batch, n)
-    ranges = batch_ranges(n, batch)
-    ctx.stats["chunks"] += len(ranges)
-
-    fused_fn: Callable | None = None
-    if mode == "fused":
-        def fused_fn_impl(env):
-            run_chain(stage, env, jit_each=False)
-            return {nid: env[("node", nid)] for nid in stage.escaping}
-        fused_fn = jax.jit(fused_fn_impl)
-
-    partials: dict[int, list[Any]] = {nid: [] for nid in stage.escaping}
-    for (s, e) in ranges:
-        env = _chunk_env_for(stage, concrete, s, e, ctx.pedantic)
-        if mode == "pipelined":
-            run_chain(stage, env, jit_each=True)
-            ctx.stats["calls"] += len(stage.nodes)
-            outs = {nid: env[("node", nid)] for nid in stage.escaping}
-        else:
-            outs = fused_fn(env)
+    def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
+        env = dict(concrete)
+        for node in stage.nodes:
+            kw = node_kwargs(node, stage, env)
+            if getattr(node.fn.sa, "dynamic", False) or node.out_aval is None:
+                res = node.fn.call_raw(kw)
+            else:
+                res = node.fn.jitted(**kw)
+            env[("node", node.id)] = res
+            node.result = res
+            node.done = True
             ctx.stats["calls"] += 1
-        for nid, v in outs.items():
-            partials[nid].append(v)
-        if ctx.log:
-            print(f"[mozart] stage {stage.id} chunk [{s},{e}) done")
-    _finish(stage, partials)
 
 
-def _split_axis_of(t: st.SplitType) -> int | None:
-    if isinstance(t, st.ArraySplit):
-        return t.axis
-    if isinstance(t, st.PytreeSplit):
-        return t.axis
-    return None
+def _stage_cached_jit(stage: Stage, key: str, build: Callable) -> Callable:
+    """One jitted driver per Stage instance: repeated executions of the same
+    stage (auto-tuner candidates, warmup-then-time) hit jax's compile cache
+    instead of retracing a fresh closure every call."""
+    cache = getattr(stage, "_jit_cache", None)
+    if cache is None:
+        cache = stage._jit_cache = {}
+    fn = cache.get(key)
+    if fn is None:
+        fn = cache[key] = jax.jit(build())
+    return fn
 
 
-def _execute_scan(stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
+class ChunkedExecutor(StageExecutor):
+    """Shared Python-driver chunk loop; ``mode`` picks the per-chunk style."""
+
+    tunable = True
+    mode = "pipelined"
+
+    def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
+        mode = self.mode
+        if has_dynamic(stage):
+            mode = "pipelined"           # dynamic-shape fns cannot be traced
+        n = stage_num_elements(stage, concrete, ctx.pedantic)
+        batch = self.choose_batch(stage, concrete, ctx, n)
+        ranges = batch_ranges(n, batch)
+        ctx.stats["chunks"] += len(ranges)
+
+        fused_fn: Callable | None = None
+        if mode == "fused":
+            def build():
+                def fused_fn_impl(env):
+                    run_chain(stage, env, jit_each=False)
+                    return {nid: env[("node", nid)] for nid in stage.escaping}
+                return fused_fn_impl
+            fused_fn = _stage_cached_jit(stage, "fused", build)
+
+        partials: dict[int, list[Any]] = {nid: [] for nid in stage.escaping}
+        for (s, e) in ranges:
+            env = chunk_env_for(stage, concrete, s, e, ctx.pedantic)
+            if mode == "pipelined":
+                run_chain(stage, env, jit_each=True)
+                ctx.stats["calls"] += len(stage.nodes)
+                outs = {nid: env[("node", nid)] for nid in stage.escaping}
+            else:
+                outs = fused_fn(env)
+                ctx.stats["calls"] += 1
+            for nid, v in outs.items():
+                partials[nid].append(v)
+            if ctx.log:
+                print(f"[mozart] stage {stage.id} chunk [{s},{e}) done")
+        finish_stage(stage, partials)
+
+
+@register_executor("pipelined")
+class PipelinedExecutor(ChunkedExecutor):
+    """Paper-faithful driver: separately jitted black-box calls per chunk."""
+
+    mode = "pipelined"
+
+
+@register_executor("fused")
+class FusedExecutor(ChunkedExecutor):
+    """Whole per-chunk chain traced into one jitted function."""
+
+    mode = "fused"
+
+
+@register_executor("scan")
+class ScanExecutor(StageExecutor):
     """Stack equal-size chunks and drive the fused chain with ``lax.map``.
 
     The chunk loop compiles into a single XLA while-loop whose body touches
     one fast-memory-sized batch at a time — the TPU-native rendering of the
     paper's driver loop.  The ragged tail chunk is handled separately.
     """
-    n = stage_num_elements(stage, concrete, ctx.pedantic)
-    elem_bytes = stage_elem_bytes(stage, concrete, n)
-    batch = ctx.batch_elements or hardware.mozart_batch_elements(elem_bytes, ctx.chip)
-    batch = min(batch, n)
-    n_main = (n // batch) * batch
-    n_chunks = n_main // batch
 
-    # Outputs whose split axis we know get stacked; everything else falls
-    # back to the fused python driver.
-    for nid in stage.escaping:
-        if _split_axis_of(stage.out_types[nid]) is None and stage.out_types[nid].splittable:
-            return _execute_chunked(stage, concrete, ctx, mode="fused")
+    tunable = True
 
-    split_keys = [k for k, si in stage.inputs.items() if si.split_type.splittable]
-    if not split_keys or any(
-        _split_axis_of(stage.inputs[k].split_type) is None for k in split_keys
-    ):
-        return _execute_chunked(stage, concrete, ctx, mode="fused")
+    def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
+        if has_dynamic(stage):
+            return get_executor("pipelined").execute(stage, concrete, ctx)
 
-    def stacked(key):
-        si = stage.inputs[key]
-        ax = _split_axis_of(si.split_type)
-        v = concrete[key]
+        n = stage_num_elements(stage, concrete, ctx.pedantic)
+        batch = self.choose_batch(stage, concrete, ctx, n)
+        n_main = (n // batch) * batch
+        n_chunks = n_main // batch
 
-        def stack_leaf(leaf):
-            lead = jnp.moveaxis(leaf, ax, 0) if ax else leaf
-            main = lead[:n_main].reshape((n_chunks, batch) + lead.shape[1:])
-            return main
-        return jax.tree_util.tree_map(stack_leaf, v)
-
-    stacked_inputs = {key: stacked(key) for key in split_keys}
-    bcast_inputs = {k: concrete[k] for k, si in stage.inputs.items()
-                    if not si.split_type.splittable}
-
-    def chain_fn(split_vals: dict):
-        env = dict(bcast_inputs)
-        for key, v in split_vals.items():
-            ax = _split_axis_of(stage.inputs[key].split_type)
-            env[key] = jax.tree_util.tree_map(
-                lambda l: jnp.moveaxis(l, 0, ax) if ax else l, v)
-        run_chain(stage, env, jit_each=False)
-        outs = {}
+        # Outputs whose split axis we know get stacked; everything else falls
+        # back to the fused python driver.
         for nid in stage.escaping:
-            ax = _split_axis_of(stage.out_types[nid])
-            o = env[("node", nid)]
-            if ax is not None:
-                o = jax.tree_util.tree_map(lambda l: jnp.moveaxis(l, ax, 0) if ax else l, o)
-            outs[nid] = o
-        return outs
+            if split_axis_of(stage.out_types[nid]) is None and stage.out_types[nid].splittable:
+                return get_executor("fused").execute(stage, concrete, ctx)
 
-    @jax.jit
-    def driver(stacked_inputs):
-        return jax.lax.map(chain_fn, stacked_inputs)
+        split_keys = [k for k, si in stage.inputs.items() if si.split_type.splittable]
+        if not split_keys or any(
+            split_axis_of(stage.inputs[k].split_type) is None for k in split_keys
+        ):
+            return get_executor("fused").execute(stage, concrete, ctx)
 
-    stacked_outs = driver(stacked_inputs) if n_chunks else {nid: None for nid in stage.escaping}
-    ctx.stats["chunks"] += n_chunks + (1 if n_main < n else 0)
-    ctx.stats["calls"] += 1
+        def stacked(key):
+            si = stage.inputs[key]
+            ax = split_axis_of(si.split_type)
+            v = concrete[key]
 
-    partials: dict[int, list[Any]] = {nid: [] for nid in stage.escaping}
-    for nid in stage.escaping:
-        t = stage.out_types[nid]
-        ax = _split_axis_of(t)
-        if n_chunks:
-            so = stacked_outs[nid]
-            if ax is not None:
-                def unstack(l):
-                    flat = l.reshape((n_chunks * batch,) + l.shape[2:])
-                    return jnp.moveaxis(flat, 0, ax) if ax else flat
-                partials[nid].append(jax.tree_util.tree_map(unstack, so))
-            else:  # ReduceSplit etc.: merge over the stacked leading dim
-                pieces = [jax.tree_util.tree_map(lambda l: l[i], so) for i in range(n_chunks)]
-                partials[nid].extend(pieces)
-    if n_main < n:  # ragged tail
-        env = _chunk_env_for(stage, concrete, n_main, n, ctx.pedantic)
-        run_chain(stage, env, jit_each=False)
+            def stack_leaf(leaf):
+                lead = jnp.moveaxis(leaf, ax, 0) if ax else leaf
+                main = lead[:n_main].reshape((n_chunks, batch) + lead.shape[1:])
+                return main
+            return jax.tree_util.tree_map(stack_leaf, v)
+
+        stacked_inputs = {key: stacked(key) for key in split_keys}
+        bcast_inputs = {k: concrete[k] for k, si in stage.inputs.items()
+                        if not si.split_type.splittable}
+
+        def build():
+            def chain_fn(split_vals: dict):
+                env = dict(bcast_inputs)
+                for key, v in split_vals.items():
+                    ax = split_axis_of(stage.inputs[key].split_type)
+                    env[key] = jax.tree_util.tree_map(
+                        lambda l: jnp.moveaxis(l, 0, ax) if ax else l, v)
+                run_chain(stage, env, jit_each=False)
+                outs = {}
+                for nid in stage.escaping:
+                    ax = split_axis_of(stage.out_types[nid])
+                    o = env[("node", nid)]
+                    if ax is not None:
+                        o = jax.tree_util.tree_map(lambda l: jnp.moveaxis(l, ax, 0) if ax else l, o)
+                    outs[nid] = o
+                return outs
+
+            def driver(stacked_inputs):
+                return jax.lax.map(chain_fn, stacked_inputs)
+            return driver
+
+        driver = _stage_cached_jit(stage, "scan", build)
+
+        stacked_outs = driver(stacked_inputs) if n_chunks else {nid: None for nid in stage.escaping}
+        ctx.stats["chunks"] += n_chunks + (1 if n_main < n else 0)
+        ctx.stats["calls"] += 1
+
+        partials: dict[int, list[Any]] = {nid: [] for nid in stage.escaping}
         for nid in stage.escaping:
-            partials[nid].append(env[("node", nid)])
-    _finish(stage, partials)
+            t = stage.out_types[nid]
+            ax = split_axis_of(t)
+            if n_chunks:
+                so = stacked_outs[nid]
+                if ax is not None:
+                    def unstack(l):
+                        flat = l.reshape((n_chunks * batch,) + l.shape[2:])
+                        return jnp.moveaxis(flat, 0, ax) if ax else flat
+                    partials[nid].append(jax.tree_util.tree_map(unstack, so))
+                else:  # ReduceSplit etc.: merge over the stacked leading dim
+                    pieces = [jax.tree_util.tree_map(lambda l: l[i], so) for i in range(n_chunks)]
+                    partials[nid].extend(pieces)
+        if n_main < n:  # ragged tail
+            env = chunk_env_for(stage, concrete, n_main, n, ctx.pedantic)
+            run_chain(stage, env, jit_each=False)
+            for nid in stage.escaping:
+                partials[nid].append(env[("node", nid)])
+        finish_stage(stage, partials)

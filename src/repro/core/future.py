@@ -57,6 +57,12 @@ class Future:
     def done(self) -> bool:
         return self._node.done
 
+    @property
+    def split_type(self):
+        """Split type the producing call constructed for this value (may be a
+        generic var until the planner resolves it) — inspection/EXPLAIN aid."""
+        return self._node.out_type
+
     # -- forcing ------------------------------------------------------------
     @property
     def value(self) -> Any:

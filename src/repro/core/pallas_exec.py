@@ -18,13 +18,28 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
-from repro import hardware
 from repro.core import split_types as st
-from repro.core.executor import stage_elem_bytes, stage_num_elements
 from repro.core.graph import NodeRef
 from repro.core.planner import Stage, _value_key
+from repro.core.stage_exec import (
+    StageExecutor,
+    get_executor,
+    register_executor,
+    stage_num_elements,
+)
+
+
+@register_executor("pallas")
+class PallasExecutor(StageExecutor):
+    """Lower eligible elementwise stages onto the split-pipeline TPU kernel;
+    anything the kernel cannot express falls back to the fused driver."""
+
+    tunable = True
+
+    def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
+        if not try_execute_stage_pallas(stage, concrete, ctx, self):
+            get_executor("fused").execute(stage, concrete, ctx)
 
 
 def _eligible(stage: Stage, concrete: dict[tuple, Any]) -> bool:
@@ -56,7 +71,8 @@ def _eligible(stage: Stage, concrete: dict[tuple, Any]) -> bool:
     return True
 
 
-def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx) -> bool:
+def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
+                             executor: StageExecutor | None = None) -> bool:
     from repro.kernels.split_pipeline import split_pipeline_call
 
     if not _eligible(stage, concrete):
@@ -67,9 +83,9 @@ def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx) -> b
     if not split_keys:
         return False
 
+    executor = executor or get_executor("pallas")
     n = stage_num_elements(stage, concrete, ctx.pedantic)
-    elem_bytes = stage_elem_bytes(stage, concrete, n)
-    batch = ctx.batch_elements or hardware.mozart_batch_elements(elem_bytes, ctx.chip)
+    batch = executor.choose_batch(stage, concrete, ctx, n)
 
     escape_ids = sorted(stage.escaping)
     out_kinds = []

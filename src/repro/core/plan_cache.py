@@ -1,0 +1,374 @@
+"""Plan cache + auto-tuner state: skip the planner for repeated pipelines.
+
+The paper's Mozart re-plans every ``evaluate()``.  Weld-style lazy systems
+show that the cross-call win comes from *caching* the materialized plan: the
+second execution of an identical pipeline should touch neither the planner
+nor the split-type unifier.  This module provides that cache.
+
+**Key.**  A pipeline is identified by a structural fingerprint of the
+pending dataflow graph: per node, the annotated function's identity, the
+aliasing pattern of its arguments (which argument is which external value /
+which earlier node), static argument values, the *constructed* split types
+(with SA-local generics normalized and ``unknown`` uids erased), and the
+shapes/dtypes of every external input and abstract output.  Context knobs
+that change planning or batch sizing (``executor``, ``chip``, ``pipeline``)
+are part of the key; concrete array *values* are not — calling the same
+pipeline on fresh data of the same shape is a hit.
+
+**Template.**  A hit does not reuse ``Stage`` objects (they reference the
+prior call's nodes); it re-instantiates them from a symbolic template that
+names values by (node position, argument name).  Escaping-output sets are
+recomputed per instantiation because they depend on which ``Future`` handles
+are still alive *this* call.
+
+**Auto-tuner.**  Each cache entry owns ``tuned_batch``: on the first
+execution of a cached plan, ``StageExecutor._tune`` measures 2–3 candidate
+chunk sizes around the §5.2 VMEM-derived estimate and pins the fastest here;
+later hits reuse the pinned size via ``StageExecutor.choose_batch``.
+
+Values that cannot be fingerprinted (no shape/dtype, no
+``mozart_fingerprint()`` hook) make a pipeline *uncacheable* — it is planned
+from scratch every time, which is always correct, merely slower.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+
+from repro.core import split_types as st
+from repro.core.graph import DataflowGraph, Node, NodeRef
+from repro.core.planner import Stage, StageInput, _value_key, plan
+
+_MAX_ENTRIES = 256
+
+#: process-global cache statistics (benchmarks report these).
+stats: collections.Counter = collections.Counter()
+
+_lock = threading.Lock()
+_entries: "collections.OrderedDict[tuple, PlanEntry]" = collections.OrderedDict()
+
+
+def clear() -> None:
+    """Drop every cached plan and reset the global counters (tests)."""
+    with _lock:
+        _entries.clear()
+        stats.clear()
+
+
+def cache_info() -> dict[str, int]:
+    with _lock:
+        return {"entries": len(_entries), **stats}
+
+
+def entries() -> list["PlanEntry"]:
+    with _lock:
+        return list(_entries.values())
+
+
+def tuned_batches() -> dict[tuple[int, int], int]:
+    """(entry uid, stage_id) -> pinned chunk size (diagnostics).  Stage ids
+    restart at 0 per plan, so the stable per-entry uid (not the LRU position,
+    which reshuffles on every hit) keeps pipelines distinct."""
+    out: dict[tuple[int, int], int] = {}
+    for e in entries():
+        for sid, batch in dict(e.tuned_batch).items():
+            out[(e.uid, sid)] = batch
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fingerprinting
+# ---------------------------------------------------------------------------
+
+
+def value_fingerprint(v: Any, with_value: bool = False) -> tuple | None:
+    """Shape/dtype-level identity of an external value; None = uncacheable.
+
+    Numeric scalars are keyed by *type only* unless ``with_value`` (static
+    arguments): a pipeline driven with a changing rate/step scalar must still
+    hit the cache — any plan-relevant effect of the value already shows up in
+    the constructed split types and output avals, which the key captures, and
+    instantiation rebinds the current call's values.  Custom containers
+    (tables, corpora) opt in via a ``mozart_fingerprint()`` method returning
+    a hashable tuple of their leaves' shapes/dtypes.
+    """
+    hook = getattr(v, "mozart_fingerprint", None)
+    if callable(hook):
+        return hook()
+    if isinstance(v, (bool, int, float, complex)):
+        return ("py", type(v).__name__, v) if with_value else ("py", type(v).__name__)
+    if isinstance(v, (str, bytes, type(None))):
+        return ("py", type(v).__name__, v)
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        return ("arr", tuple(v.shape), str(v.dtype))
+    if isinstance(v, (tuple, list)):
+        parts = tuple(value_fingerprint(x, with_value) for x in v)
+        if any(p is None for p in parts):
+            return None
+        return ("seq", type(v).__name__, parts)
+    if isinstance(v, dict):
+        items = []
+        for k in sorted(v, key=repr):
+            p = value_fingerprint(v[k], with_value)
+            if p is None:
+                return None
+            items.append((repr(k), p))
+        return ("map", tuple(items))
+    return None
+
+
+def _aval_fingerprint(aval: Any) -> tuple | None:
+    if aval is None:
+        return ("dynamic",)
+    leaves, treedef = jax.tree_util.tree_flatten(aval)
+    leaf_fps = []
+    for l in leaves:
+        shape = getattr(l, "shape", None)
+        dtype = getattr(l, "dtype", None)
+        if shape is None or dtype is None:
+            return None
+        leaf_fps.append((tuple(shape), str(dtype)))
+    return (str(treedef), tuple(leaf_fps))
+
+
+def _type_fingerprint(t: Any, varmap: dict[int, int]) -> tuple | None:
+    if isinstance(t, st.GenericVar):
+        return ("var", varmap.setdefault(t.uid, len(varmap)))
+    if isinstance(t, st.UnknownSplit):
+        return ("unknown", t.axis)       # uid erased: unknowns are structural here
+    if not isinstance(t, st.SplitType):
+        return None
+    try:
+        hash(t.params)
+    except TypeError:
+        return None
+    return ("T", t.name, t.params)
+
+
+def fingerprint(pending: list[Node], graph: DataflowGraph, ctx) -> tuple | None:
+    """Structural key of the pending graph, or None if uncacheable."""
+    pos = {n.id: i for i, n in enumerate(pending)}
+    ext_index: dict[int, int] = {}       # id(value) -> alias slot
+    done_index: dict[int, int] = {}      # done node_id -> alias slot
+    node_fps = []
+    for n in pending:
+        varmap: dict[int, int] = {}      # generics are fresh per call/node
+        arg_fps = []
+        for name, v in n.bound.items():
+            if name in n.fn.sa.static:
+                f = value_fingerprint(v, with_value=True)   # baked into jit
+                if f is None:
+                    return None
+                arg_fps.append(("static", name, f))
+            elif isinstance(v, NodeRef):
+                if v.node_id in pos:
+                    arg_fps.append(("ref", name, pos[v.node_id]))
+                else:
+                    src = graph.nodes.get(v.node_id)
+                    f = _aval_fingerprint(src.out_aval) if src is not None else None
+                    if f is None:
+                        return None
+                    slot = done_index.setdefault(v.node_id, len(done_index))
+                    arg_fps.append(("done", name, slot, f))
+            else:
+                f = value_fingerprint(v)
+                if f is None:
+                    return None
+                # alias slot: add(x, x) and add(x, y) must key differently
+                slot = ext_index.setdefault(id(v), len(ext_index))
+                arg_fps.append(("ext", name, slot, f))
+        type_fps = []
+        for name in n.bound:
+            if name in n.fn.sa.static:
+                continue
+            f = _type_fingerprint(n.arg_types[name], varmap)
+            if f is None:
+                return None
+            type_fps.append((name, f))
+        out_fp = _type_fingerprint(n.out_type, varmap)
+        if out_fp is None:
+            return None
+        aval_fp = _aval_fingerprint(n.out_aval)
+        if aval_fp is None:
+            return None
+        node_fps.append((n.fn.name, tuple(arg_fps), tuple(type_fps), out_fp, aval_fp))
+    return (ctx.executor, ctx.chip.name, bool(ctx.pipeline), tuple(node_fps))
+
+
+# ---------------------------------------------------------------------------
+# Plan templates
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _StageTemplate:
+    positions: list[int]                             # indices into pending list
+    inputs: list[tuple[tuple, st.SplitType]]          # (desc, resolved split type)
+    out_types: dict[int, st.SplitType]                # position -> resolved type
+    arg_types: dict[tuple[int, str], st.SplitType]    # (position, argname) -> type
+
+
+_entry_uids = iter(range(1 << 62))
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    key: tuple
+    stage_templates: list[_StageTemplate]
+    fns: tuple                                       # per-node AnnotatedFn identity
+    uid: int = dataclasses.field(default_factory=lambda: next(_entry_uids))
+    tuned_batch: dict[int, int] = dataclasses.field(default_factory=dict)
+    trials: dict[int, list[tuple[int, float]]] = dataclasses.field(default_factory=dict)
+    hits: int = 0
+    _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    _tuning: set = dataclasses.field(default_factory=set)
+
+    def matches(self, pending: list[Node]) -> bool:
+        """Guard against hash collisions / interpreter id() reuse: the cached
+        plan applies only if every node still calls the same function object."""
+        return len(pending) == len(self.fns) and all(
+            n.fn is f for n, f in zip(pending, self.fns)
+        )
+
+    def try_claim_tuning(self, stage_id: int) -> bool:
+        """Exactly one session tunes a stage; racers run with the estimate."""
+        with self._lock:
+            if stage_id in self.tuned_batch or stage_id in self._tuning:
+                return False
+            self._tuning.add(stage_id)
+            return True
+
+    def release_tuning(self, stage_id: int) -> None:
+        with self._lock:
+            self._tuning.discard(stage_id)
+
+    def pin(self, stage_id: int, batch: int) -> None:
+        with self._lock:
+            self.tuned_batch[stage_id] = int(batch)
+            self._tuning.discard(stage_id)
+
+    def record_trial(self, stage_id: int, batch: int, seconds: float) -> None:
+        with self._lock:
+            self.trials.setdefault(stage_id, []).append((int(batch), seconds))
+
+
+def _make_templates(stages: list[Stage], pending: list[Node]) -> list[_StageTemplate] | None:
+    pos = {n.id: i for i, n in enumerate(pending)}
+    templates = []
+    for s in stages:
+        inputs: list[tuple[tuple, st.SplitType]] = []
+        for key, si in s.inputs.items():
+            v = si.value
+            if isinstance(v, NodeRef) and v.node_id in pos:
+                desc: tuple = ("node", pos[v.node_id])
+            else:
+                # name the value symbolically: "arg <name> of node <position>"
+                desc = ()
+                for n in s.nodes:
+                    for name, bv in n.bound.items():
+                        if name not in n.fn.sa.static and _value_key(bv) == key:
+                            desc = ("arg", pos[n.id], name)
+                            break
+                    if desc:
+                        break
+                if not desc:
+                    return None          # value not reachable from bound args
+            inputs.append((desc, si.split_type))
+        templates.append(_StageTemplate(
+            positions=[pos[n.id] for n in s.nodes],
+            inputs=inputs,
+            out_types={pos[nid]: t for nid, t in s.out_types.items()},
+            arg_types={(pos[nid], name): t for (nid, name), t in s.arg_types.items()},
+        ))
+    return templates
+
+
+def _instantiate(entry: PlanEntry, pending: list[Node],
+                 graph: DataflowGraph) -> list[Stage]:
+    consumers = graph.consumers()
+    stages: list[Stage] = []
+    for sid, tm in enumerate(entry.stage_templates):
+        nodes = [pending[p] for p in tm.positions]
+        node_ids = {n.id for n in nodes}
+        inputs: dict[tuple, StageInput] = {}
+        for desc, t in tm.inputs:
+            if desc[0] == "node":
+                val: Any = NodeRef(pending[desc[1]].id)
+            else:
+                val = pending[desc[1]].bound[desc[2]]
+            key = _value_key(val)
+            inputs[key] = StageInput(key, val, t)
+        out_types = {pending[p].id: t for p, t in tm.out_types.items()}
+        # Escaping outputs depend on which Futures are alive *this* call.
+        escaping: set[int] = set()
+        for n in nodes:
+            ext = any(c not in node_ids for c in consumers.get(n.id, []))
+            if ext or n.future_alive():
+                escaping.add(n.id)
+            n.stage_id = sid
+        arg_types = {(pending[p].id, name): t
+                     for (p, name), t in tm.arg_types.items()}
+        stages.append(Stage(sid, nodes, inputs, out_types, escaping, arg_types))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# Lookup
+# ---------------------------------------------------------------------------
+
+
+def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
+                   ctx) -> tuple[list[Stage], PlanEntry | None]:
+    """Return (stages, cache entry or None).  Counts live in ``ctx.stats``:
+    ``planner_calls`` increments only when the planner actually runs."""
+    max_nodes = None if ctx.pipeline else 1
+    if not getattr(ctx, "plan_cache", True):
+        ctx.stats["planner_calls"] += 1
+        return plan(pending, graph, max_stage_nodes=max_nodes), None
+
+    key = fingerprint(pending, graph, ctx)
+    if key is None:
+        with _lock:
+            stats["uncacheable"] += 1
+        ctx.stats["plan_cache_uncacheable"] += 1
+        ctx.stats["planner_calls"] += 1
+        return plan(pending, graph, max_stage_nodes=max_nodes), None
+
+    with _lock:
+        entry = _entries.get(key)
+        hit = entry is not None and entry.matches(pending)
+        if hit:
+            _entries.move_to_end(key)
+            entry.hits += 1
+            stats["hits"] += 1
+        else:
+            stats["misses"] += 1
+    if hit:
+        ctx.stats["plan_cache_hits"] += 1
+        # O(graph) template instantiation happens outside the global lock so
+        # concurrent sessions on different pipelines don't serialize here.
+        return _instantiate(entry, pending, graph), entry
+    ctx.stats["plan_cache_misses"] += 1
+    ctx.stats["planner_calls"] += 1
+    stages = plan(pending, graph, max_stage_nodes=max_nodes)
+    templates = _make_templates(stages, pending)
+    if templates is None:
+        with _lock:
+            stats["uncacheable"] += 1
+        return stages, None
+    with _lock:
+        existing = _entries.get(key)
+        if existing is not None and existing.matches(pending):
+            entry = existing        # concurrent miss: keep the winner's tuner state
+        else:
+            entry = PlanEntry(key=key, stage_templates=templates,
+                              fns=tuple(n.fn for n in pending))
+            _entries[key] = entry
+            while len(_entries) > _MAX_ENTRIES:
+                _entries.popitem(last=False)
+    return stages, entry

@@ -156,6 +156,12 @@ def _resolve(env: st.TypeEnv, t: Any, aval_like: Any) -> st.SplitType:
     return r
 
 
+#: process-global count of actual planner invocations.  The plan cache's
+#: "second identical run performs zero planner calls" guarantee is asserted
+#: against this counter (tests/test_stage_exec.py).
+N_CALLS = 0
+
+
 def plan(nodes: list[Node], graph: DataflowGraph,
          max_stage_nodes: int | None = None) -> list[Stage]:
     """Greedy consecutive grouping in topological (= program) order.
@@ -163,6 +169,8 @@ def plan(nodes: list[Node], graph: DataflowGraph,
     ``max_stage_nodes=1`` disables cross-function pipelining (each function
     still splits + parallelizes alone) — the paper's Table 4 "-pipe" ablation.
     """
+    global N_CALLS
+    N_CALLS += 1
     open_stages: list[_OpenStage] = []
     cur: _OpenStage | None = None
     for node in nodes:

@@ -23,7 +23,7 @@ from repro.core import split_types as st
 from repro.core.future import Future
 from repro.core.graph import DataflowGraph, NodeRef
 from repro.core.planner import plan
-from repro.core.executor import execute_stage
+from repro.core.stage_exec import get_executor
 
 
 class MozartContext:
@@ -39,6 +39,8 @@ class MozartContext:
         log: bool = False,
         inner_executor: str = "fused",
         pipeline: bool = True,
+        plan_cache: bool = True,
+        autotune: bool = True,
     ):
         self.executor = executor
         self.chip = chip
@@ -50,8 +52,12 @@ class MozartContext:
         self.log = log
         self.inner_executor = inner_executor    # per-shard strategy for "sharded"
         self.pipeline = pipeline                 # False: Table-4 "-pipe" ablation
+        self.plan_cache = plan_cache             # reuse plans across evaluations
+        self.autotune = autotune                 # measure+pin chunk sizes on cached plans
         self.graph = DataflowGraph()
         self.stats: collections.Counter = collections.Counter()
+        self._plan_entry = None                  # active plan_cache.PlanEntry
+        self._batch_override: int | None = None  # set by the auto-tuner only
 
     # -- libmozart register() -------------------------------------------------
     def register_call(self, fn, bound: dict[str, Any]) -> Future:
@@ -87,16 +93,25 @@ class MozartContext:
         pending = self.graph.pending()
         if not pending:
             return
-        stages = plan(pending, self.graph,
-                      max_stage_nodes=None if self.pipeline else 1)
+        from repro.core.plan_cache import lookup_or_plan
+        stages, entry = lookup_or_plan(pending, self.graph, self)
         self.stats["evaluations"] += 1
         if self.log:
             for s in stages:
                 names = ",".join(n.fn.name for n in s.nodes)
                 print(f"[mozart] stage {s.id}: [{names}] inputs="
                       f"{[str(si.split_type) for si in s.inputs.values()]}")
-        for s in stages:
-            execute_stage(s, self.graph, self)
+        executor = get_executor(self.executor)
+        # Save/restore (not clear): a dynamic node forcing a Future of this
+        # same session re-enters evaluate(), and the outer plan's entry must
+        # survive the nested call.
+        prev_entry = self._plan_entry
+        self._plan_entry = entry
+        try:
+            for s in stages:
+                executor.run(s, self.graph, self)
+        finally:
+            self._plan_entry = prev_entry
         self.graph.prune()
 
     def last_plan(self):

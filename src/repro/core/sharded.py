@@ -14,26 +14,51 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import hardware
 from repro.core import split_types as st
-from repro.core.executor import (
+from repro.core.planner import Stage
+from repro.core.stage_exec import (
     PedanticError,
-    _node_kwargs,
-    _split_axis_of,
+    StageExecutor,
     batch_ranges,
+    register_executor,
     run_chain,
+    split_axis_of,
     stage_elem_bytes,
     stage_num_elements,
-    _finish,
 )
-from repro.core.planner import Stage
+
+
+@register_executor("sharded")
+class ShardedExecutor(StageExecutor):
+    """Splits = mesh shards; per-device chunk loop handles the VMEM tier."""
+
+    tunable = False          # batch feeds the inner per-shard loop only
+
+    def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
+        execute_stage_sharded(stage, concrete, ctx)
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map across jax versions: top-level ``jax.shard_map`` with
+    ``check_vma`` (new) vs ``jax.experimental.shard_map`` with ``check_rep``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    except TypeError:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
 
 
 def _pspec_for(split_type: st.SplitType, ndim: int, axes: tuple[str, ...]):
-    ax = _split_axis_of(split_type)
+    ax = split_axis_of(split_type)
     if ax is None:
         return P()
     spec = [None] * ndim
@@ -77,7 +102,7 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None
     for nid in out_ids:
         t = stage.out_types[nid]
         aval = _aval_of_node(stage, nid)
-        if _split_axis_of(t) is not None:
+        if split_axis_of(t) is not None:
             out_specs.append(jax.tree_util.tree_map(
                 lambda l: _pspec_for(t, len(l.shape), axes), aval))
         else:
@@ -111,7 +136,7 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None
         for nid in out_ids:
             t = stage.out_types[nid]
             merged = t.merge(chunk_outs[nid])
-            if _split_axis_of(t) is None:
+            if split_axis_of(t) is None:
                 # ReduceSplit & friends: combine partials across shards.
                 if isinstance(t, st.ReduceSplit):
                     merged = _psum_like(t, merged, axis_name)
@@ -119,12 +144,11 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None
         return tuple(outs)
 
     shard_fn = jax.jit(
-        jax.shard_map(
+        _shard_map(
             local_fn,
             mesh=mesh,
             in_specs=tuple(in_specs),
             out_specs=tuple(out_specs),
-            check_vma=False,
         )
     )
     results = shard_fn(*[concrete[k] for k in in_keys])

@@ -187,6 +187,42 @@ class ReduceSplit(SplitType):
         return out
 
 
+class ConcatSplit(SplitType):
+    """Output-only split type whose merge is concatenation (paper Ex. 4).
+
+    For functions that *produce* fresh data per piece (one output row per
+    input chunk, encoded blocks, per-batch records): pieces are new values
+    whose total element count is unknowable before the merge, so the value
+    cannot be re-split — but unlike ``unknown`` the type is *shared* by
+    every producer with the same ``tag``, so equal-tagged outputs may be
+    pipelined together.  Identity: ``(tag, axis)``.
+    """
+
+    name = "ConcatSplit"
+
+    def __init__(self, tag: str = "", axis: int = 0):
+        super().__init__(str(tag), int(axis))
+        self.tag = str(tag)
+        self.axis = int(axis)
+
+    @property
+    def splittable(self) -> bool:
+        return False                     # piece boundaries vanish at merge
+
+    def info(self, value: Any) -> None:
+        return None
+
+    def split(self, value: Any, start: int, end: int) -> Any:
+        raise TypeError("ConcatSplit values are fresh outputs; merge first")
+
+    def merge(self, pieces: Sequence[Any]) -> Any:
+        if len(pieces) == 1:
+            return pieces[0]
+        return jax.tree_util.tree_map(
+            lambda *ls: jnp.concatenate(ls, axis=self.axis), *pieces
+        )
+
+
 _unknown_uid = itertools.count()
 
 
@@ -389,6 +425,17 @@ class Reduce(SplitSpec):
 
     def construct(self, value, bound, generics):
         return ReduceSplit(self.op_name, self.extra)
+
+
+class Concat(SplitSpec):
+    """Spec form of ``ConcatSplit`` for annotators (see class docstring)."""
+
+    def __init__(self, tag: str = "", axis: int = 0):
+        self.tag = tag
+        self.axis = axis
+
+    def construct(self, value, bound, generics):
+        return ConcatSplit(self.tag, self.axis)
 
 
 class Custom(SplitSpec):

@@ -1,0 +1,325 @@
+"""The StageExecutor subsystem: shared split → drive → merge machinery.
+
+Every Mozart execution strategy follows the same three-phase shape from the
+paper (§5.2): split the stage inputs into fast-memory-sized batches, drive
+each batch through the unmodified library functions, and merge the partial
+results associatively.  This module extracts that machinery into one base
+class and a registry so that strategies are *pluggable*:
+
+    @register_executor("my-strategy")
+    class MyExecutor(StageExecutor):
+        def execute(self, stage, concrete, ctx):
+            ...split / drive / merge using the shared helpers...
+
+``runtime.MozartContext.evaluate`` dispatches through ``get_executor`` — no
+string ``if/elif`` chains.  The built-in strategies live in
+``core/executor.py`` ("eager", "pipelined", "fused", "scan"),
+``core/sharded.py`` ("sharded") and ``core/pallas_exec.py`` ("pallas") and
+are registered as a side effect of importing those modules.
+
+Batch sizing goes through ``StageExecutor.choose_batch`` which layers, in
+priority order: an explicit per-context override (``batch_elements``), the
+auto-tuner's pinned size for a cached plan (``core/plan_cache.py``), and the
+paper's §5.2 fast-memory estimate (``hardware.mozart_batch_elements``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro import hardware
+from repro.core import split_types as st
+from repro.core.graph import DataflowGraph, Node, NodeRef
+from repro.core.planner import Stage, _value_key
+
+
+class PedanticError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type["StageExecutor"]] = {}
+_INSTANCES: dict[str, "StageExecutor"] = {}
+
+
+def register_executor(name: str) -> Callable[[type], type]:
+    """Class decorator: make a StageExecutor reachable as ``executor=name``."""
+
+    def deco(cls: type) -> type:
+        cls.name = name
+        _REGISTRY[name] = cls
+        _INSTANCES.pop(name, None)
+        return cls
+
+    return deco
+
+
+def _ensure_builtin_executors() -> None:
+    # Importing these modules registers their executor classes.
+    import repro.core.executor      # noqa: F401  (eager/pipelined/fused/scan)
+    import repro.core.pallas_exec   # noqa: F401  (pallas)
+    import repro.core.sharded       # noqa: F401  (sharded)
+
+
+def get_executor(name: str) -> "StageExecutor":
+    if name not in _REGISTRY:
+        _ensure_builtin_executors()
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+    inst = _INSTANCES.get(name)
+    if inst is None or type(inst) is not cls:
+        inst = _INSTANCES[name] = cls()
+    return inst
+
+
+def available_executors() -> tuple[str, ...]:
+    _ensure_builtin_executors()
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Runtime parameter discovery (paper §5.2 step 1)
+# ---------------------------------------------------------------------------
+
+
+def stage_num_elements(stage: Stage, concrete: dict[tuple, Any], pedantic: bool) -> int:
+    counts = set()
+    for key, si in stage.inputs.items():
+        if not si.split_type.splittable:
+            continue
+        info = si.split_type.info(concrete[key])
+        if info is not None:
+            counts.add(info.num_elements)
+    if len(counts) > 1:
+        raise PedanticError(f"stage {stage.id}: inputs disagree on element count: {counts}")
+    return counts.pop() if counts else 1
+
+
+def stage_elem_bytes(stage: Stage, concrete: dict[tuple, Any], n: int) -> int:
+    """Σ sizeof(element) over live pipeline values (inputs + outputs)."""
+    total = 0
+    for key, si in stage.inputs.items():
+        if not si.split_type.splittable:
+            continue
+        info = si.split_type.info(concrete[key])
+        if info is not None:
+            total += info.elem_bytes
+    for node in stage.nodes:
+        t = stage.out_types[node.id]
+        if t.splittable and node.out_aval is not None:
+            leaves = jax.tree_util.tree_leaves(node.out_aval)
+            nb = sum(st.nbytes_of(l) for l in leaves)
+            total += max(nb // max(n, 1), 1)
+    return total
+
+
+def batch_ranges(n: int, batch: int) -> list[tuple[int, int]]:
+    return [(s, min(s + batch, n)) for s in range(0, n, batch)]
+
+
+# ---------------------------------------------------------------------------
+# Per-chunk chain driving
+# ---------------------------------------------------------------------------
+
+
+def chunk_env_for(stage: Stage, concrete: dict[tuple, Any], s: int, e: int,
+                  pedantic: bool) -> dict[tuple, Any]:
+    env: dict[tuple, Any] = {}
+    for key, si in stage.inputs.items():
+        v = concrete[key]
+        if si.split_type.splittable:
+            piece = si.split_type.split(v, s, e)
+            if pedantic and hasattr(piece, "shape") and 0 in piece.shape:
+                raise PedanticError(f"empty split for {key} range [{s},{e})")
+            env[key] = piece
+        else:
+            env[key] = v                      # "_" values: pointer copy
+    return env
+
+
+def node_kwargs(node: Node, stage: Stage, env: dict[tuple, Any]) -> dict[str, Any]:
+    kw: dict[str, Any] = {}
+    for name, v in node.bound.items():
+        if name in node.fn.sa.static:
+            kw[name] = v
+        elif isinstance(v, NodeRef) and ("node", v.node_id) in env:
+            kw[name] = env[("node", v.node_id)]
+        else:
+            kw[name] = env[_value_key(v)]
+    return kw
+
+
+def run_chain(stage: Stage, env: dict[tuple, Any], jit_each: bool) -> dict[int, Any]:
+    """Drive one chunk through every function of the stage in order."""
+    outs: dict[int, Any] = {}
+    for node in stage.nodes:
+        kw = node_kwargs(node, stage, env)
+        if getattr(node.fn.sa, "dynamic", False) or node.out_aval is None:
+            res = node.fn.call_raw(kw)
+        elif jit_each:
+            res = node.fn.jitted(**kw)        # black-box library call
+        else:
+            res = node.fn.fn(**kw)            # traced into enclosing jit
+        env[("node", node.id)] = res
+        outs[node.id] = res
+    return outs
+
+
+def finish_stage(stage: Stage, partials: dict[int, list[Any]]) -> None:
+    for node in stage.nodes:
+        if node.id in partials:
+            node.result = stage.out_types[node.id].merge(partials[node.id])
+        node.done = True
+
+
+def has_dynamic(stage: Stage) -> bool:
+    return any(
+        getattr(n.fn.sa, "dynamic", False) or n.out_aval is None
+        for n in stage.nodes
+    )
+
+
+def split_axis_of(t: st.SplitType) -> int | None:
+    if isinstance(t, st.ArraySplit):
+        return t.axis
+    if isinstance(t, st.PytreeSplit):
+        return t.axis
+    return None
+
+
+def _block_stage_outputs(stage: Stage) -> None:
+    """Best-effort device sync so tuner timings measure real work."""
+    for node in stage.nodes:
+        if node.id in stage.escaping and node.result is not None:
+            try:
+                jax.block_until_ready(node.result)
+            except Exception:
+                pass  # non-array results (tables, corpora): nothing async
+
+
+def candidate_batches(est: int, n: int) -> list[int]:
+    """2–3 chunk sizes around the §5.2 fast-memory estimate."""
+    est = max(1, min(est, n))
+    if est >= n:
+        return [n]                    # one chunk: nothing to tune
+    cands = {max(1, est // 2), est, min(est * 2, n)}
+    return sorted(cands)
+
+
+# ---------------------------------------------------------------------------
+# Base class
+# ---------------------------------------------------------------------------
+
+
+class StageExecutor:
+    """One execution strategy: split inputs → drive chunks → merge partials.
+
+    Subclasses implement ``execute``; ``run`` is the template method the
+    runtime calls per stage.  It resolves concrete inputs, optionally runs
+    the chunk-size auto-tuner (first execution of a *cached* plan), and does
+    the done/stats bookkeeping shared by every strategy.
+    """
+
+    name: str = "abstract"
+    #: whether ``choose_batch`` output meaningfully affects this strategy —
+    #: only tunable executors participate in chunk-size auto-tuning.
+    tunable: bool = False
+
+    # -- template method ----------------------------------------------------
+    def run(self, stage: Stage, graph: DataflowGraph, ctx) -> None:
+        concrete = {key: graph.resolve(si.value) for key, si in stage.inputs.items()}
+        entry = getattr(ctx, "_plan_entry", None)
+        if self._should_tune(stage, ctx, entry):
+            self._tune(stage, concrete, ctx, entry)
+        else:
+            self.execute(stage, concrete, ctx)
+        ctx.stats["stages"] += 1
+        for node in stage.nodes:
+            node.done = True
+
+    def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
+        raise NotImplementedError
+
+    # -- batch sizing (paper §5.2 + auto-tuner) -----------------------------
+    def estimate_batch(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                       n: int) -> int:
+        elem_bytes = stage_elem_bytes(stage, concrete, n)
+        return hardware.mozart_batch_elements(elem_bytes, ctx.chip)
+
+    def choose_batch(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                     n: int) -> int:
+        override = getattr(ctx, "_batch_override", None)
+        if override is not None:
+            return max(1, min(override, n))
+        if ctx.batch_elements:
+            return max(1, min(ctx.batch_elements, n))
+        entry = getattr(ctx, "_plan_entry", None)
+        if entry is not None:
+            pinned = entry.tuned_batch.get(stage.id)
+            if pinned:
+                return max(1, min(pinned, n))
+        return max(1, min(self.estimate_batch(stage, concrete, ctx, n), n))
+
+    # -- auto-tuner ---------------------------------------------------------
+    def _should_tune(self, stage: Stage, ctx, entry) -> bool:
+        return (
+            self.tunable
+            and entry is not None
+            and entry.hits > 0                      # first execution of a CACHED plan
+            and getattr(ctx, "autotune", True)
+            and not ctx.batch_elements
+            and getattr(ctx, "_batch_override", None) is None
+            and stage.id not in entry.tuned_batch
+            # dynamic (call_raw) functions may carry side effects and their
+            # runtime is value-dependent: never re-execute them to time them
+            and not has_dynamic(stage)
+            # claim atomically so concurrent sessions never tune in duplicate
+            and entry.try_claim_tuning(stage.id)
+        )
+
+    def _tune(self, stage: Stage, concrete: dict[tuple, Any], ctx, entry) -> None:
+        pinned = False
+        try:
+            n = stage_num_elements(stage, concrete, ctx.pedantic)
+            est = self.estimate_batch(stage, concrete, ctx, n)
+            cands = candidate_batches(est, n)
+            if len(cands) == 1:
+                entry.pin(stage.id, cands[0])
+                pinned = True
+                self.execute(stage, concrete, ctx)
+                return
+            best, best_dt = None, None
+            for b in cands:
+                ctx._batch_override = b
+                try:
+                    # Warmup run absorbs per-chunk-shape jit compilation so the
+                    # timed run measures steady-state throughput, not tracing.
+                    self.execute(stage, concrete, ctx)
+                    _block_stage_outputs(stage)
+                    t0 = time.perf_counter()
+                    self.execute(stage, concrete, ctx)
+                    _block_stage_outputs(stage)
+                    dt = time.perf_counter() - t0
+                finally:
+                    ctx._batch_override = None
+                entry.record_trial(stage.id, b, dt)
+                if best_dt is None or dt < best_dt:
+                    best, best_dt = b, dt
+            # All candidates computed the same values (merges are associative),
+            # so the last run's results stand; only the pinned size differs.
+            entry.pin(stage.id, best)
+            pinned = True
+            ctx.stats["autotuned_stages"] += 1
+        finally:
+            if not pinned:
+                entry.release_tuning(stage.id)

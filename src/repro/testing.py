@@ -1,0 +1,115 @@
+"""Hypothesis-optional property testing for the dependency-light test tier.
+
+The test suite states its invariants as property tests.  When ``hypothesis``
+is installed, ``given``/``settings``/``hst`` are re-exported unchanged and
+the full shrinking machinery applies.  When it is not (the CI container is
+dependency-light by design), the same decorated tests run as *deterministic
+seeded loops*: each strategy draws ``max_examples`` pseudo-random samples
+from a per-test seed derived from the test's qualified name, so failures are
+reproducible run-to-run without any third-party package.
+
+Usage (identical either way):
+
+    from repro.testing import given, settings, hst
+
+    @given(n=hst.integers(1, 200), batch=hst.integers(1, 64))
+    @settings(max_examples=40, deadline=None)
+    def test_roundtrip(n, batch): ...
+
+Only the strategy surface the suite uses is mirrored by the fallback:
+``integers``, ``sampled_from``, ``lists``, ``floats``, ``booleans``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, Sequence
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function over a ``random.Random`` source."""
+
+        def __init__(self, draw: Callable[[random.Random], Any]):
+            self._draw = draw
+
+        def example(self, rng: random.Random) -> Any:
+            return self._draw(rng)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements: Sequence[Any]) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            return _Strategy(lambda r: [
+                elements.example(r)
+                for _ in range(r.randint(min_size, max_size))
+            ])
+
+    hst = _strategies
+
+    def settings(*, max_examples: int = 20, **_ignored) -> Callable:
+        """Record ``max_examples``; other hypothesis knobs are meaningless
+        for the seeded fallback and accepted for source compatibility."""
+
+        def deco(fn: Callable) -> Callable:
+            fn._pc_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*pos_strats: _Strategy, **kw_strats: _Strategy) -> Callable:
+        def deco(fn: Callable) -> Callable:
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            # hypothesis fills positional strategies from the right of the
+            # signature; mirror that so both code paths accept either style.
+            pos_names = names[len(names) - len(pos_strats):] if pos_strats else []
+            strats = dict(zip(pos_names, pos_strats))
+            strats.update(kw_strats)
+
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                n = (getattr(run, "_pc_max_examples", None)
+                     or getattr(fn, "_pc_max_examples", 20))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # pytest introspects the signature for fixtures: hide the
+            # strategy-drawn parameters (and the wrapped original).
+            remaining = [p for name, p in sig.parameters.items()
+                         if name not in strats]
+            run.__signature__ = sig.replace(parameters=remaining)
+            if hasattr(run, "__wrapped__"):
+                del run.__wrapped__
+            return run
+
+        return deco

@@ -13,3 +13,13 @@ warnings.filterwarnings("ignore", category=DeprecationWarning)
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    """Each test starts with an empty plan cache so cache hits / tuner runs
+    never leak between tests (chunk-count assertions stay exact)."""
+    from repro.core import plan_cache
+
+    plan_cache.clear()
+    yield

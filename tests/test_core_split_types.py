@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from repro.testing import given, hst, settings  # hypothesis-optional
 
 from repro.core import split_types as st
 
@@ -71,6 +71,81 @@ class TestSplitMergeRoundTrip:
         info = t.info(x)
         assert info.num_elements == 8
         assert info.elem_bytes == 4 * 4
+
+
+def _chunk(xs, batch):
+    return [xs[s:s + batch] for s in range(0, len(xs), batch)]
+
+
+class TestMergeAssociativity:
+    """merge must be associative (paper §3.2): Mozart may merge partials in
+    any grouping — pairwise trees, left folds, or all at once."""
+
+    @given(n=hst.integers(2, 120), batch=hst.integers(1, 16),
+           cut=hst.integers(1, 119))
+    @settings(max_examples=25, deadline=None)
+    def test_array_split_grouped_merge(self, n, batch, cut):
+        x = jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2)
+        t = st.ArraySplit(x.shape, 0)
+        pieces = [t.split(x, s, min(s + batch, n)) for s in range(0, n, batch)]
+        cut = 1 + cut % max(len(pieces) - 1, 1) if len(pieces) > 1 else 1
+        flat = t.merge(pieces)
+        grouped = t.merge([t.merge(pieces[:cut]), t.merge(pieces[cut:])]) \
+            if len(pieces) > 1 else flat
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(grouped))
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(x))
+
+    @given(n=hst.integers(2, 200), batch=hst.integers(1, 32),
+           op=hst.sampled_from(["add", "max", "min", "mul"]))
+    @settings(max_examples=25, deadline=None)
+    def test_reduce_split_grouped_merge(self, n, batch, op):
+        r = st.ReduceSplit(op)
+        vals = np.random.RandomState(n).rand(n).astype(np.float32) + 0.5
+        partials = [jnp.asarray(p.sum()) for p in _chunk(vals, batch)]
+        flat = float(r.merge(partials))
+        if len(partials) > 1:
+            for cut in {1, len(partials) // 2, len(partials) - 1}:
+                grouped = float(r.merge([r.merge(partials[:cut]),
+                                         r.merge(partials[cut:])]))
+                rtol = 1e-3 if op == "mul" else 1e-5
+                assert np.isclose(flat, grouped, rtol=rtol), (op, cut)
+
+    @given(n=hst.integers(1, 150), batch=hst.integers(1, 24))
+    @settings(max_examples=25, deadline=None)
+    def test_concat_split_merge_is_concatenation(self, n, batch):
+        x = np.arange(n, dtype=np.float32)
+        t = st.ConcatSplit("rows", 0)
+        pieces = [jnp.asarray(p) for p in _chunk(x, batch)]
+        merged = t.merge(pieces)
+        np.testing.assert_array_equal(np.asarray(merged), x)
+        if len(pieces) > 1:
+            grouped = t.merge([t.merge(pieces[:1]), t.merge(pieces[1:])])
+            np.testing.assert_array_equal(np.asarray(grouped), x)
+
+
+class TestConcatSplit:
+    def test_identity_is_tag_plus_axis(self):
+        assert st.ConcatSplit("a", 0) == st.ConcatSplit("a", 0)
+        assert st.ConcatSplit("a", 0) != st.ConcatSplit("b", 0)
+        assert st.ConcatSplit("a", 0) != st.ConcatSplit("a", 1)
+
+    def test_not_splittable(self):
+        t = st.ConcatSplit()
+        assert not t.splittable
+        assert t.info(jnp.arange(4.0)) is None
+        with pytest.raises(TypeError):
+            t.split(jnp.arange(4.0), 0, 2)
+
+    def test_merges_pytrees_leafwise(self):
+        t = st.ConcatSplit(axis=0)
+        pieces = [{"a": jnp.arange(2.0)}, {"a": jnp.arange(2.0) + 2}]
+        out = t.merge(pieces)
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(4.0))
+
+    def test_spec_constructs_type(self):
+        spec = st.Concat("enc", axis=1)
+        t = spec.construct(None, {}, {})
+        assert t == st.ConcatSplit("enc", 1)
 
 
 class TestUnification:

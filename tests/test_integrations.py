@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from repro.testing import given, hst, settings  # hypothesis-optional
 
 from repro.core import mozart
 from repro.core import annotated_numpy as anp

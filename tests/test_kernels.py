@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from repro.testing import given, hst, settings  # hypothesis-optional
 
 from repro.kernels import ops, ref
 

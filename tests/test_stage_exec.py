@@ -1,0 +1,296 @@
+"""StageExecutor subsystem tests: registry, cross-executor differential
+parity vs the "eager" (un-annotated library) oracle, plan cache, auto-tuner."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import hardware
+from repro.core import mozart, plan_cache, planner, splittable, Along
+from repro.core import annotated_numpy as anp
+from repro.core.stage_exec import (
+    StageExecutor,
+    available_executors,
+    candidate_batches,
+    get_executor,
+    register_executor,
+)
+
+ALL_EXECUTORS = ("eager", "pipelined", "fused", "scan", "sharded", "pallas")
+
+
+#: a tiny fast-memory tier so the §5.2 estimate lands well below our array
+#: sizes and the tuner has a real candidate spread to measure.
+TINY_CHIP = hardware.Chip(
+    name="tiny_test_chip",
+    peak_bf16_flops=1e11,
+    hbm_bandwidth=2e10,
+    ici_link_bandwidth=1e10,
+    ici_links=1,
+    hbm_bytes=2**30,
+    vmem_bytes=64 * 1024,
+    mozart_c=1.0,
+)
+
+
+@splittable(x=Along(0), y=Along(0), ret=Along(0), elementwise=True)
+def saxpy(x, y):
+    return 2.0 * x + y
+
+
+def quickstart(x, y):
+    """The examples/quickstart.py pipeline: saxpy -> exp -> scale -> sum."""
+    a = saxpy(x, y)
+    b = anp.exp(a)
+    c = anp.multiply(b, 0.5)
+    return c, anp.sum(c)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_all_strategies_registered(self):
+        names = set(available_executors())
+        assert set(ALL_EXECUTORS) <= names
+        for n in names:
+            assert isinstance(get_executor(n), StageExecutor)
+            assert get_executor(n).name == n
+
+    def test_unknown_executor_raises(self):
+        with pytest.raises(ValueError, match="unknown executor"):
+            get_executor("warp-drive")
+
+    def test_get_executor_returns_singleton(self):
+        assert get_executor("fused") is get_executor("fused")
+
+    def test_custom_registration(self):
+        @register_executor("test-noop")
+        class NoopExecutor(StageExecutor):
+            def execute(self, stage, concrete, ctx):
+                for node in stage.nodes:
+                    node.result = None
+                    node.done = True
+
+        try:
+            assert "test-noop" in available_executors()
+            assert isinstance(get_executor("test-noop"), NoopExecutor)
+        finally:
+            from repro.core import stage_exec
+            stage_exec._REGISTRY.pop("test-noop", None)
+            stage_exec._INSTANCES.pop("test-noop", None)
+
+
+# ---------------------------------------------------------------------------
+# Cross-executor differential: everyone must match the eager oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", sorted(available_executors()))
+def test_quickstart_differential_vs_eager(executor):
+    n = 4096
+    x = jnp.arange(n, dtype=jnp.float32) / n
+    y = jnp.ones(n, jnp.float32)
+
+    with mozart.session(executor="eager"):
+        c0, s0 = quickstart(x, y)
+        want_c, want_s = np.asarray(c0), float(s0)
+
+    kwargs = {"batch_elements": 512}
+    if executor == "sharded":
+        kwargs["mesh"] = jax.make_mesh((1,), ("data",))
+    with mozart.session(executor=executor, **kwargs) as ctx:
+        c, s = quickstart(x, y)
+        got_c, got_s = np.asarray(c), float(s)
+
+    np.testing.assert_allclose(got_c, want_c, rtol=2e-5, atol=1e-6)
+    assert np.isclose(got_s, want_s, rtol=1e-5), (executor, got_s, want_s)
+    assert ctx.stats["stages"] >= 1
+
+
+@pytest.mark.parametrize("executor", ["pipelined", "fused", "scan", "pallas"])
+def test_differential_with_autotuned_batches(executor):
+    """Parity must survive the tuner's candidate re-executions too."""
+    n = 30_000
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    y = jnp.ones(n, jnp.float32)
+
+    with mozart.session(executor="eager"):
+        _, s0 = quickstart(x, y)
+        want = float(s0)
+
+    plan_cache.clear()
+    got = []
+    for _ in range(3):   # miss -> tuning hit -> pinned hit
+        with mozart.session(executor=executor, chip=TINY_CHIP):
+            _, s = quickstart(x, y)
+            got.append(float(s))
+    assert all(np.isclose(g, want, rtol=1e-5) for g in got), (executor, got, want)
+    assert plan_cache.tuned_batches(), "tuner pinned nothing"
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+
+def _pipeline(x):
+    return anp.sum(anp.multiply(anp.exp(x), 0.5))
+
+
+class TestPlanCache:
+    def test_second_run_performs_zero_planner_calls(self):
+        x = jnp.linspace(0.0, 1.0, 2048, dtype=jnp.float32)
+
+        with mozart.session(executor="fused") as ctx1:
+            v1 = float(_pipeline(x))
+        assert ctx1.stats["planner_calls"] == 1
+        assert ctx1.stats["plan_cache_misses"] == 1
+
+        before = planner.N_CALLS
+        with mozart.session(executor="fused") as ctx2:
+            v2 = float(_pipeline(x))
+        assert planner.N_CALLS == before          # the planner never ran
+        assert ctx2.stats["planner_calls"] == 0
+        assert ctx2.stats["plan_cache_hits"] == 1
+        assert np.isclose(v1, v2)
+
+    def test_fresh_data_same_shape_hits(self):
+        with mozart.session(executor="fused") as ctx1:
+            _ = float(_pipeline(jnp.linspace(0.0, 1.0, 512)))
+        with mozart.session(executor="fused") as ctx2:
+            v = float(_pipeline(jnp.linspace(1.0, 2.0, 512)))
+        assert ctx2.stats["plan_cache_hits"] == 1
+        want = float(np.sum(np.exp(np.linspace(1.0, 2.0, 512)) * 0.5))
+        assert np.isclose(v, want, rtol=1e-5)
+
+    def test_shape_change_misses(self):
+        with mozart.session(executor="fused") as ctx1:
+            _ = float(_pipeline(jnp.linspace(0.0, 1.0, 128)))
+        with mozart.session(executor="fused") as ctx2:
+            _ = float(_pipeline(jnp.linspace(0.0, 1.0, 256)))
+        assert ctx2.stats["plan_cache_hits"] == 0
+        assert ctx2.stats["plan_cache_misses"] == 1
+
+    def test_executor_is_part_of_the_key(self):
+        x = jnp.linspace(0.0, 1.0, 256)
+        with mozart.session(executor="fused"):
+            _ = float(_pipeline(x))
+        with mozart.session(executor="scan") as ctx:
+            _ = float(_pipeline(x))
+        assert ctx.stats["plan_cache_hits"] == 0
+
+    def test_aliased_arguments_key_differently(self):
+        """add(x, x) and add(x, y) have different plans (one split vs two)."""
+        x = jnp.arange(64.0)
+        y = jnp.ones(64) * 2
+        with mozart.session(executor="pipelined", batch_elements=16):
+            np.testing.assert_allclose(np.asarray(anp.add(x, x)), np.arange(64.0) * 2)
+        with mozart.session(executor="pipelined", batch_elements=16) as ctx:
+            np.testing.assert_allclose(np.asarray(anp.add(x, y)), np.arange(64.0) + 2)
+        assert ctx.stats["plan_cache_hits"] == 0
+
+    def test_plan_cache_can_be_disabled(self):
+        x = jnp.linspace(0.0, 1.0, 256)
+        for _ in range(2):
+            with mozart.session(executor="fused", plan_cache=False) as ctx:
+                _ = float(_pipeline(x))
+        assert ctx.stats["planner_calls"] == 1
+        assert ctx.stats["plan_cache_hits"] == 0
+        assert plan_cache.cache_info()["entries"] == 0
+
+    def test_table_pipeline_hits_via_fingerprint_hook(self):
+        from repro.core import annotated_table as tb
+        r = np.random.RandomState(0)
+        t = tb.Table({
+            "pop": r.rand(100).astype(np.float64) * 1000,
+            "crime": r.rand(100).astype(np.float64) * 10,
+        })
+        def run():
+            with mozart.session(executor="pipelined", batch_elements=17) as ctx:
+                idx = anp.divide(anp.multiply(tb.col(t, "crime"), 100.0),
+                                 tb.col(t, "pop"))
+                return float(anp.sum(idx)), ctx
+        v1, c1 = run()
+        v2, c2 = run()
+        assert c1.stats["plan_cache_misses"] == 1
+        assert c2.stats["plan_cache_hits"] == 1
+        assert np.isclose(v1, v2)
+
+    def test_consumed_done_future_replans_correctly(self):
+        """NodeRefs to already-materialized nodes rebind across cache hits."""
+        x = jnp.arange(16.0)
+        for i in range(2):
+            with mozart.session(executor="fused") as ctx:
+                a = anp.exp(x)
+                _ = a.value                       # materialize
+                b = anp.add(a, x)                 # consumes a DONE node
+                np.testing.assert_allclose(
+                    np.asarray(b), np.exp(np.arange(16.0)) + np.arange(16.0),
+                    rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Auto-tuner
+# ---------------------------------------------------------------------------
+
+
+class TestAutoTuner:
+    def _run(self, x, **kw):
+        with mozart.session(executor="fused", chip=TINY_CHIP, **kw) as ctx:
+            v = float(_pipeline(x))
+        return v, ctx
+
+    def test_tunes_on_first_cached_execution_then_pins(self):
+        x = jnp.linspace(0.0, 1.0, 100_000, dtype=jnp.float32)
+        v1, c1 = self._run(x)       # miss: plan + §5.2 estimate
+        assert c1.stats["autotuned_stages"] == 0
+        v2, c2 = self._run(x)       # first hit: measure candidates
+        assert c2.stats["autotuned_stages"] == 1
+        tuned = plan_cache.tuned_batches()
+        assert tuned, "no chunk size pinned"
+        (entry,) = plan_cache.entries()
+        assert all(len(t) >= 2 for t in entry.trials.values())   # 2-3 candidates
+        v3, c3 = self._run(x)       # later hits: reuse the pinned size
+        assert c3.stats["autotuned_stages"] == 0
+        assert c3.stats["plan_cache_hits"] == 1
+        pinned = list(tuned.values())[0]
+        assert c3.stats["chunks"] == int(np.ceil(100_000 / pinned))
+        assert np.isclose(v1, v2) and np.isclose(v2, v3)
+
+    def test_explicit_batch_elements_disables_tuning(self):
+        x = jnp.linspace(0.0, 1.0, 50_000, dtype=jnp.float32)
+        for _ in range(3):
+            _, ctx = self._run(x, batch_elements=7000)
+        assert ctx.stats["autotuned_stages"] == 0
+        assert not plan_cache.tuned_batches()
+        assert ctx.stats["chunks"] == int(np.ceil(50_000 / 7000))
+
+    def test_autotune_flag_off(self):
+        x = jnp.linspace(0.0, 1.0, 50_000, dtype=jnp.float32)
+        for _ in range(3):
+            _, ctx = self._run(x, autotune=False)
+        assert ctx.stats["autotuned_stages"] == 0
+        assert not plan_cache.tuned_batches()
+
+    def test_candidate_batches_bracket_the_estimate(self):
+        assert candidate_batches(100, 1000) == [50, 100, 200]
+        assert candidate_batches(100, 150) == [50, 100, 150]
+        assert candidate_batches(100, 80) == [80]       # one chunk: no tuning
+        assert candidate_batches(1, 1000) == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Future inspection
+# ---------------------------------------------------------------------------
+
+
+def test_future_exposes_split_type():
+    x = jnp.arange(8.0)
+    with mozart.session(executor="fused"):
+        f = saxpy(x, x)
+        assert f.split_type.name == "ArraySplit"
+        _ = f.value

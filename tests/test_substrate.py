@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from repro.testing import given, hst, settings  # hypothesis-optional
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.registry import get_smoke_config
