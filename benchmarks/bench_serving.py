@@ -1,7 +1,13 @@
 """Serving throughput: prefill+decode tokens/s across batch sizes (smoke
-configs on CPU; the production path is the dry-run's serve_step)."""
+configs on CPU; the production path is the dry-run's serve_step), plus the
+Mozart serving-replica restart scenario: a persisted plan cache
+(``plan_cache_path`` / ``MOZART_PLAN_CACHE``) warm-starts a fresh process
+with zero planner calls and zero tuning executions."""
 
 from __future__ import annotations
+
+import os
+import tempfile
 
 import numpy as np
 
@@ -27,7 +33,48 @@ def bench_arch(arch: str, batches=(1, 4), prompt_len=16, max_new=16):
                f"tokens_per_s={stats['tokens_per_s']:.1f}")
 
 
+def bench_mozart_warm_start(n=500_000):
+    """Mozart request loop across a simulated replica restart.
+
+    One "request" = the Black–Scholes pipeline under ``executor="auto"`` with
+    a persistent plan-cache file.  Cold = first ever request (plans), tuning
+    = second (executor measurement + chunk tuning), steady = pinned replay.
+    The restart drops ALL in-memory state and reloads from the file — the
+    restarted replica must serve its first request at steady-state cost."""
+    from benchmarks import workloads as w
+    from repro import hardware
+    from repro.core import mozart, plan_cache
+
+    d = w.black_scholes_data(n)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "plans.json")
+
+        def serve_once():
+            with mozart.session(executor="auto", chip=hardware.CPU_HOST,
+                                plan_cache_path=path) as ctx:
+                call, put = w.black_scholes(**d)
+                np.asarray(call), np.asarray(put)
+            return ctx
+
+        plan_cache.clear()
+        cold_us = time_fn(serve_once, warmup=0, iters=1)
+        tune_us = time_fn(serve_once, warmup=0, iters=1)
+        steady_us = time_fn(serve_once, warmup=0, iters=3)
+        picks = {sid: name for e in plan_cache.entries()
+                 for sid, name in sorted(e.chosen_exec.items())}
+        plan_cache.clear()               # "restart": drop all in-memory state
+        restart_us = time_fn(serve_once, warmup=0, iters=1)
+        ctx = serve_once()
+        record("serve/mozart/warm_start", restart_us,
+               f"cold={cold_us:.0f};tuning={tune_us:.0f};steady={steady_us:.0f};"
+               f"restart_vs_cold={cold_us / max(restart_us, 1e-9):.2f}x;"
+               f"picks={picks};"
+               f"replay_planner_calls={ctx.stats['planner_calls']};"
+               f"replay_tuning_runs={ctx.stats['autotuned_stages']}")
+
+
 def main(quick=False):
+    bench_mozart_warm_start(n=500_000 // (4 if quick else 1))
     for arch in ("rwkv6-1.6b", "gemma3-4b", "olmoe-1b-7b"):
         bench_arch(arch, batches=(1, 4) if not quick else (2,))
 

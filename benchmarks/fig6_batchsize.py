@@ -3,6 +3,9 @@ plus the plan-cache auto-tuner landing on (or beating) the sweep's best."""
 
 from __future__ import annotations
 
+import os
+import tempfile
+
 import numpy as np
 
 from benchmarks import workloads as w
@@ -58,12 +61,39 @@ def main(quick=False):
            f"vs_sweep_best={tuned_us / results[best_b]:.2f}x;"
            f"cache_hits={info.get('hits', 0)};planner_runs={info.get('misses', 0)}")
 
+    # executor="auto": cost model + measured feedback pick the strategy per
+    # stage; the persisted cache then warm-starts a "restarted" process.
+    plan_cache.clear()
+    _auto(d)                                     # miss: analytic choice
+    _auto(d)                                     # first hit: measurement pass
+    auto_us = time_fn(lambda: _auto(d), warmup=0, iters=3)
+    picks = {sid: name for e in plan_cache.entries()
+             for sid, name in sorted(e.chosen_exec.items())}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "plans.json")
+        plan_cache.save(path)
+        plan_cache.clear()
+        plan_cache.load(path)
+        warm = _auto(d)
+    record("fig6/black_scholes/auto", auto_us,
+           f"picks={picks};vs_tuned={auto_us / tuned_us:.2f}x;"
+           f"warm_planner_calls={warm.stats['planner_calls']};"
+           f"warm_tuning_runs={warm.stats['autotuned_stages']};"
+           f"warm_measure_runs={warm.stats['auto_measured_stages']}")
+
 
 def _once(d, plan_cache_on=True):
     with mozart.session(executor="scan", chip=hardware.CPU_HOST,
                         plan_cache=plan_cache_on):
         call, put = w.black_scholes(**d)
         return np.asarray(call), np.asarray(put)
+
+
+def _auto(d):
+    with mozart.session(executor="auto", chip=hardware.CPU_HOST) as ctx:
+        call, put = w.black_scholes(**d)
+        np.asarray(call), np.asarray(put)
+    return ctx
 
 
 if __name__ == "__main__":

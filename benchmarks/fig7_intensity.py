@@ -60,6 +60,10 @@ def main(quick=False):
             with mozart.session(executor="scan", chip=hardware.CPU_HOST) as c:
                 out = np.asarray(_chain(op, big, times=10))
             return out, c
+        def auto():
+            with mozart.session(executor="auto", chip=hardware.CPU_HOST) as c:
+                out = np.asarray(_chain(op, big, times=10))
+            return out, c
         eus = time_fn(eager, iters=3)
         pus = time_fn(piped, iters=3)
         # plan-cache path: warmup covers the planning miss + tuning hit, the
@@ -68,9 +72,19 @@ def main(quick=False):
         cached(); cached()
         cus = time_fn(lambda: cached()[0], warmup=0, iters=3)
         _, cctx = cached()
+        # auto path: warmup covers planning + the executor measurement pass,
+        # the timed iters replay the pinned per-stage choice.
+        auto(); auto()
+        aus = time_fn(lambda: auto()[0], warmup=0, iters=3)
+        _, actx = auto()
+        picks = ",".join(f"{k[len('auto_pick_'):]}x{v}"
+                         for k, v in sorted(actx.stats.items())
+                         if k.startswith("auto_pick_"))
         record(f"fig7/speedup/{op}", pus,
                f"eager_us={eus:.0f};speedup={eus/pus:.2f};"
                f"cached_us={cus:.0f};cached_speedup={eus/cus:.2f};"
+               f"auto_us={aus:.0f};auto_speedup={eus/aus:.2f};"
+               f"auto_picks={picks};"
                f"tuned={sorted(plan_cache.tuned_batches().values())};"
                f"planner_calls_steady={cctx.stats['planner_calls']};"
                f"rel_intensity={intens[op]/intens['add']:.1f}")

@@ -6,19 +6,23 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
 
 ``--smoke`` is the CI gate (`make bench-smoke`): it runs the Black–Scholes
-pipeline under every registered StageExecutor, checks numerical parity with
-the un-annotated "eager" oracle, exercises the plan cache + auto-tuner with
-a repeated run, and exits nonzero on any mismatch.
+pipeline under every registered StageExecutor (including ``auto``), checks
+numerical parity with the un-annotated "eager" oracle, exercises the plan
+cache + auto-tuner with repeated runs, verifies that ``auto`` matches or
+beats the fixed ``pipelined`` default in steady state, replays a persisted
+plan-cache file with zero planner calls, and exits nonzero on any mismatch.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import sys
+import tempfile
 import traceback
 
-from benchmarks.common import header, record
+from benchmarks.common import header, record, time_fn
 
 MODULES = {
     "fig4_pipelines": "benchmarks.fig4_pipelines",     # Fig 4 a-d, j-m
@@ -78,9 +82,51 @@ def smoke() -> int:
     record("smoke/plan_cache", 0.0,
            f"entries={info.get('entries', 0)};hits={info.get('hits', 0)};"
            f"misses={info.get('misses', 0)};tuned={plan_cache.tuned_batches()}")
+
+    # -- auto-selection: steady state must match-or-beat the fixed default --
+    def run_with(name):
+        with mozart.session(executor=name) as ctx:
+            c, p = w.black_scholes(**d)
+            np.asarray(c), np.asarray(p)
+        return ctx
+
+    plan_cache.clear()
+    for name in ("pipelined", "auto"):
+        run_with(name)                 # miss: plan
+        run_with(name)                 # first hit: tune / measure executors
+    pip_us = time_fn(lambda: run_with("pipelined"), warmup=0, iters=3)
+    auto_us = time_fn(lambda: run_with("auto"), warmup=0, iters=3)
+    picks = {sid: name for e in plan_cache.entries()
+             for sid, name in sorted(e.chosen_exec.items())}
+    ratio = auto_us / max(pip_us, 1e-9)
+    # generous margin: "matches or beats" with headroom for timer noise
+    auto_ok = ratio <= 1.5
+    record("smoke/auto_vs_pipelined", auto_us,
+           f"pipelined_us={pip_us:.0f};ratio={ratio:.2f};picks={picks};"
+           f"{'ok' if auto_ok else 'SLOWER'}")
+    if not auto_ok:
+        failures.append("auto-slower-than-pipelined")
+
+    # -- persistence: a restarted replica replays with zero planner calls ---
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "plans.json")
+        saved = plan_cache.save(path)
+        plan_cache.clear()
+        loaded = plan_cache.load(path)
+        ctx = run_with("auto")
+        warm_ok = (loaded > 0 and ctx.stats["planner_calls"] == 0
+                   and ctx.stats["autotuned_stages"] == 0
+                   and ctx.stats["auto_measured_stages"] == 0)
+        record("smoke/warm_start", 0.0,
+               f"saved={saved};loaded={loaded};"
+               f"planner_calls={ctx.stats['planner_calls']};"
+               f"tuning_runs={ctx.stats['autotuned_stages']};"
+               f"{'ok' if warm_ok else 'COLD'}")
+        if not warm_ok:
+            failures.append("warm-start")
+
     if failures:
-        print(f"SMOKE FAILED: executor parity mismatch in {failures}",
-              file=sys.stderr)
+        print(f"SMOKE FAILED: {failures}", file=sys.stderr)
         return 1
     return 0
 

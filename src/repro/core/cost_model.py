@@ -1,0 +1,244 @@
+"""Cost-model-driven executor auto-selection (``executor="auto"``).
+
+The paper's Mozart commits to ONE execution strategy per session.  Weld-style
+adaptive systems show the win comes from choosing the materialized plan per
+callsite from *measured* cost.  This module scores every registered
+``StageExecutor`` per stage and dispatches each stage to the cheapest:
+
+1. **Analytic prior.**  ``analytic_seconds`` combines the stage's runtime
+   features (element count, per-element bytes, chain length, the SA's
+   arithmetic-intensity hint) with chip constants (``hardware.Chip``: HBM
+   bandwidth, peak FLOPs, per-dispatch overhead) into an estimated wall time
+   per strategy — eager pays one HBM round-trip per *function*, chunked
+   drivers pay one dispatch per chunk (×chain length when not fused), scan
+   compiles the loop away, pallas in interpret mode is penalized into
+   oblivion, sharded divides bandwidth across mesh devices.
+
+2. **Measured feedback.**  On the first execution of a *cached* plan the
+   ``AutoExecutor`` times a bounded sample of chunks under each viable
+   candidate (``StageExecutor.sampled_time``), records the extrapolated
+   seconds into the plan-cache entry (``PlanEntry.exec_timings``) and pins
+   the winner (``PlanEntry.chosen_exec``).  Fresh measurements *overwrite*
+   recorded timings, so a stale or poisoned cost entry is corrected the next
+   time the measurement pass runs.  Pinned choices persist across processes
+   via ``plan_cache.save/load``.
+
+Selection is deterministic: candidates are scored in a fixed preference
+order and ties keep the earlier candidate, so identical pipelines with
+identical recorded timings always pick the same executor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+
+from repro import hardware
+from repro.core import split_types as st
+from repro.core.graph import DataflowGraph
+from repro.core.planner import Stage
+from repro.core.stage_exec import (
+    StageExecutor,
+    get_executor,
+    has_dynamic,
+    register_executor,
+    stage_elem_bytes,
+    stage_num_elements,
+)
+
+#: fixed preference order = deterministic tie-break.  Cheap-dispatch
+#: strategies first: on equal estimated cost the fewer-moving-parts
+#: strategy wins.
+CANDIDATE_ORDER = ("scan", "fused", "pipelined", "pallas", "sharded", "eager")
+
+#: interpret-mode pallas runs the kernel body per block in pure Python —
+#: orders of magnitude off; keep it out of measurement candidates too.
+_INTERPRET_PENALTY_S_PER_ELEM = 1e-4
+
+#: measure only candidates whose analytic estimate is within this factor of
+#: the best candidate's — no point timing a strategy the model puts 100x off.
+_MEASURE_RATIO = 50.0
+
+#: FLOPs one unit of SA ``cost_hint`` stands for (one elementwise op).
+_FLOPS_PER_HINT = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StageFeatures:
+    """Everything the cost model knows about one stage at dispatch time."""
+
+    n: int                     # splittable element count
+    elem_bytes: int            # Σ bytes per element over live pipeline values
+    n_nodes: int               # chain length
+    flops_per_elem: float      # arithmetic-intensity proxy from SA cost hints
+    dynamic: bool              # chain contains dynamic-shape (un-jittable) fns
+    pallas_eligible: bool      # stage lowers onto the split-pipeline kernel
+    mesh_devices: int          # data-mesh extent (0: no mesh configured)
+    on_tpu: bool               # pallas runs compiled, not interpreted
+
+
+def features_of(stage: Stage, concrete: dict[tuple, Any], ctx) -> StageFeatures:
+    n = stage_num_elements(stage, concrete, ctx.pedantic)
+    mesh_devices = 0
+    if ctx.mesh is not None:
+        mesh_devices = 1
+        for a in ctx.data_axes:
+            mesh_devices *= ctx.mesh.shape[a]
+    from repro.core.pallas_exec import _eligible as pallas_eligible
+    return StageFeatures(
+        n=n,
+        elem_bytes=stage_elem_bytes(stage, concrete, n),
+        n_nodes=len(stage.nodes),
+        flops_per_elem=stage.flops_hint() * _FLOPS_PER_HINT,
+        dynamic=has_dynamic(stage),
+        pallas_eligible=n > 0 and pallas_eligible(stage, concrete),
+        mesh_devices=mesh_devices,
+        on_tpu=jax.default_backend() == "tpu",
+    )
+
+
+def analytic_seconds(name: str, f: StageFeatures, chip: hardware.Chip) -> float:
+    """Estimated stage wall time under ``name``; ``inf`` = not applicable.
+
+    Only the *relative* ordering matters; the absolute scale is the roofline
+    ``bytes/bandwidth`` + ``flops/peak`` plus dispatch overheads."""
+    total_bytes = max(f.n, 1) * f.elem_bytes
+    bw = chip.hbm_bandwidth
+    compute = f.n * f.flops_per_elem / chip.peak_bf16_flops
+    dispatch = chip.dispatch_overhead_s
+    est_batch = hardware.mozart_batch_elements(f.elem_bytes, chip)
+    chunks = max(1, math.ceil(max(f.n, 1) / max(est_batch, 1)))
+    stream = max(total_bytes / bw, compute)
+
+    if name == "eager":
+        # every function round-trips its full operands through slow memory
+        return f.n_nodes * (total_bytes / bw) + f.n_nodes * dispatch
+    if f.dynamic and name != "pipelined":
+        return math.inf                  # dynamic chains run un-jitted chunks
+    if name == "pipelined":
+        # chunks stay cache-resident between functions, but every function of
+        # every chunk is a separate black-box dispatch
+        return stream + chunks * f.n_nodes * dispatch
+    if name == "fused":
+        return stream + chunks * dispatch
+    if name == "scan":
+        # the chunk loop compiles into one XLA program: one dispatch total
+        return stream + dispatch
+    if name == "pallas":
+        if not f.pallas_eligible:
+            return math.inf
+        if not f.on_tpu:
+            return f.n * _INTERPRET_PENALTY_S_PER_ELEM + dispatch
+        return stream + dispatch
+    if name == "sharded":
+        if f.mesh_devices < 1 or f.n % max(f.mesh_devices, 1) != 0:
+            return math.inf
+        return stream / f.mesh_devices + 2 * dispatch
+    return math.inf                      # strategies the model cannot score
+
+
+def candidates(f: StageFeatures, ctx) -> list[str]:
+    """Applicable executors in deterministic preference order."""
+    out = []
+    for name in CANDIDATE_ORDER:
+        if math.isfinite(analytic_seconds(name, f, ctx.chip)):
+            out.append(name)
+    return out or ["pipelined"]
+
+
+def choose(f: StageFeatures, ctx, timings: dict[str, float] | None = None) -> str:
+    """Pick the cheapest applicable executor.
+
+    Measured seconds (plan-cache feedback) are authoritative: when any
+    applicable candidate has a recorded timing, the choice is the fastest
+    *measured* one — analytic estimates are idealized and not comparable to
+    wall-clock numbers.  Candidates are scanned in fixed order with strict
+    improvement, so the choice is a pure function of (features, chip,
+    recorded timings) — never of dict iteration order or wall clock."""
+    cands = candidates(f, ctx)
+    if timings:
+        best, best_s = None, math.inf
+        for name in cands:
+            if name in timings and timings[name] < best_s:
+                best, best_s = name, timings[name]
+        if best is not None:
+            return best
+    best, best_s = None, math.inf
+    for name in cands:
+        s = analytic_seconds(name, f, ctx.chip)
+        if s < best_s:
+            best, best_s = name, s
+    return best or "pipelined"
+
+
+@register_executor("auto")
+class AutoExecutor(StageExecutor):
+    """Per-stage dispatch: score, (optionally) measure, pin, delegate.
+
+    The session-level ``executor="auto"`` resolves to a concrete strategy for
+    every stage independently — one pipeline may run an elementwise stage on
+    ``scan`` and a whole-array stage on ``eager``.  Decisions are pinned into
+    the plan-cache entry, so later hits (and restarted processes, via
+    ``plan_cache.save/load``) replay them with zero extra work."""
+
+    tunable = False              # the delegate's own tuner handles batch size
+
+    def run(self, stage: Stage, graph: DataflowGraph, ctx) -> None:
+        concrete = {key: graph.resolve(si.value) for key, si in stage.inputs.items()}
+        entry = getattr(ctx, "_plan_entry", None)
+        name = entry.chosen_exec.get(stage.id) if entry is not None else None
+        if name is not None:
+            ctx.stats["auto_pinned_replays"] += 1
+        elif (entry is not None and entry.hits > 0
+                and getattr(ctx, "autotune", True)
+                and not has_dynamic(stage)
+                and entry.try_claim_exec(stage.id)):
+            name = self._measure_and_pin(stage, concrete, ctx, entry)
+        if name is None:
+            feats = features_of(stage, concrete, ctx)
+            timings = entry.exec_timings.get(stage.id) if entry is not None else None
+            name = choose(feats, ctx, timings)
+        ctx.stats["auto_stages"] += 1
+        ctx.stats[f"auto_pick_{name}"] += 1
+        if ctx.log:
+            print(f"[mozart] stage {stage.id}: auto -> {name}")
+        get_executor(name).run(stage, graph, ctx)
+
+    def _measure_and_pin(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                         entry) -> str:
+        """Time a bounded chunk sample under each viable candidate, record the
+        extrapolated seconds (overwriting stale/poisoned values) and pin the
+        measured winner."""
+        pinned = False
+        try:
+            feats = features_of(stage, concrete, ctx)
+            cands = candidates(feats, ctx)
+            scores = {c: analytic_seconds(c, feats, ctx.chip) for c in cands}
+            floor = min(scores.values())
+            cands = [c for c in cands
+                     if scores[c] <= floor * _MEASURE_RATIO] or cands[:1]
+            if feats.n == 0 or len(cands) == 1:
+                entry.pin_exec(stage.id, cands[0])
+                pinned = True
+                return cands[0]
+            n = feats.n
+            for c in cands:
+                d = get_executor(c)
+                batch = d.choose_batch(stage, concrete, ctx, n)
+                try:
+                    secs = d.sampled_time(stage, concrete, ctx, batch, n)
+                except Exception:
+                    continue             # unmeasurable here: keep it unscored
+                entry.record_exec_timing(stage.id, c, secs)
+            measured = entry.exec_timings.get(stage.id, {})
+            name = choose(feats, ctx, measured)
+            entry.pin_exec(stage.id, name)
+            pinned = True
+            ctx.stats["auto_measured_stages"] += 1
+            return name
+        finally:
+            if not pinned:
+                entry.release_exec(stage.id)

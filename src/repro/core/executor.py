@@ -36,6 +36,7 @@ from repro.core.stage_exec import (
     StageExecutor,
     batch_ranges,
     chunk_env_for,
+    effective_elements,
     finish_stage,
     get_executor,
     has_dynamic,
@@ -95,7 +96,7 @@ class ChunkedExecutor(StageExecutor):
         mode = self.mode
         if has_dynamic(stage):
             mode = "pipelined"           # dynamic-shape fns cannot be traced
-        n = stage_num_elements(stage, concrete, ctx.pedantic)
+        n = effective_elements(ctx, stage_num_elements(stage, concrete, ctx.pedantic))
         batch = self.choose_batch(stage, concrete, ctx, n)
         ranges = batch_ranges(n, batch)
         ctx.stats["chunks"] += len(ranges)
@@ -155,7 +156,11 @@ class ScanExecutor(StageExecutor):
         if has_dynamic(stage):
             return get_executor("pipelined").execute(stage, concrete, ctx)
 
-        n = stage_num_elements(stage, concrete, ctx.pedantic)
+        n = effective_elements(ctx, stage_num_elements(stage, concrete, ctx.pedantic))
+        if n == 0:
+            # Empty split: the stacked driver has no chunks to map over; the
+            # fused driver runs one degenerate zero-size chunk instead.
+            return get_executor("fused").execute(stage, concrete, ctx)
         batch = self.choose_batch(stage, concrete, ctx, n)
         n_main = (n // batch) * batch
         n_chunks = n_main // batch

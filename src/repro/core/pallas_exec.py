@@ -24,6 +24,7 @@ from repro.core.graph import NodeRef
 from repro.core.planner import Stage, _value_key
 from repro.core.stage_exec import (
     StageExecutor,
+    effective_elements,
     get_executor,
     register_executor,
     stage_num_elements,
@@ -84,7 +85,9 @@ def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
         return False
 
     executor = executor or get_executor("pallas")
-    n = stage_num_elements(stage, concrete, ctx.pedantic)
+    n = effective_elements(ctx, stage_num_elements(stage, concrete, ctx.pedantic))
+    if n == 0:
+        return False                   # empty split: no grid to launch
     batch = executor.choose_batch(stage, concrete, ctx, n)
 
     escape_ids = sorted(stage.escaping)

@@ -23,8 +23,22 @@ are still alive *this* call.
 
 **Auto-tuner.**  Each cache entry owns ``tuned_batch``: on the first
 execution of a cached plan, ``StageExecutor._tune`` measures 2–3 candidate
-chunk sizes around the §5.2 VMEM-derived estimate and pins the fastest here;
-later hits reuse the pinned size via ``StageExecutor.choose_batch``.
+chunk sizes around the §5.2 VMEM-derived estimate (a bounded *sample* of
+chunks per candidate, extrapolated) and pins the fastest here; later hits
+reuse the pinned size via ``StageExecutor.choose_batch``.  Under
+``executor="auto"`` the entry additionally owns ``chosen_exec`` (the pinned
+per-stage executor) and ``exec_timings`` (measured seconds per candidate
+executor) — the cost model's measured feedback (``core/cost_model.py``).
+
+**Persistence.**  ``save(path)`` / ``load(path)`` serialize fingerprints,
+stage templates, tuned batches and chosen executors to a versioned JSON file
+so a restarted process replays pinned plans with zero planner calls and zero
+tuning executions.  A schema-version + chip guard rejects stale or
+cross-chip files (cold planning, never a crash); saves write through a temp
+file + atomic rename so concurrent saves cannot corrupt the file.  Entries
+whose split types cannot round-trip structurally are skipped.  Rehydrated
+entries carry function *names* instead of live objects; the first lookup
+match binds the current process's ``AnnotatedFn`` identities.
 
 Values that cannot be fingerprinted (no shape/dtype, no
 ``mozart_fingerprint()`` hook) make a pipeline *uncacheable* — it is planned
@@ -35,22 +49,40 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
+import os
 import threading
 from typing import Any
 
 import jax
 
+from repro import hardware
 from repro.core import split_types as st
 from repro.core.graph import DataflowGraph, Node, NodeRef
 from repro.core.planner import Stage, StageInput, _value_key, plan
 
 _MAX_ENTRIES = 256
 
+#: serialized file format version; bump on any layout change.
+SCHEMA_VERSION = 1
+
 #: process-global cache statistics (benchmarks report these).
 stats: collections.Counter = collections.Counter()
 
 _lock = threading.Lock()
 _entries: "collections.OrderedDict[tuple, PlanEntry]" = collections.OrderedDict()
+_loaded_paths: set[str] = set()
+
+#: monotone version of the persistable state; ``save`` skips the disk write
+#: when the target file already reflects the current version (steady-state
+#: serving sessions save on every exit — almost all are no-ops).
+_mutations = 0
+_saved_versions: dict[str, int] = {}
+
+
+def _mark_dirty() -> None:
+    global _mutations
+    _mutations += 1
 
 
 def clear() -> None:
@@ -58,6 +90,8 @@ def clear() -> None:
     with _lock:
         _entries.clear()
         stats.clear()
+        _loaded_paths.clear()
+        _mark_dirty()
 
 
 def cache_info() -> dict[str, int]:
@@ -197,7 +231,14 @@ def fingerprint(pending: list[Node], graph: DataflowGraph, ctx) -> tuple | None:
         if aval_fp is None:
             return None
         node_fps.append((n.fn.name, tuple(arg_fps), tuple(type_fps), out_fp, aval_fp))
-    return (ctx.executor, ctx.chip.name, bool(ctx.pipeline), tuple(node_fps))
+    # Mesh geometry is part of the key: under "auto" a pinned `sharded`
+    # choice (or a batch tuned for one mesh extent) must never replay in a
+    # session with a different mesh — or none at all.
+    mesh_fp = None
+    if ctx.mesh is not None:
+        mesh_fp = tuple((str(a), int(ctx.mesh.shape[a])) for a in ctx.data_axes)
+    return (ctx.executor, ctx.chip.name, bool(ctx.pipeline), mesh_fp,
+            tuple(node_fps))
 
 
 # ---------------------------------------------------------------------------
@@ -220,20 +261,38 @@ _entry_uids = iter(range(1 << 62))
 class PlanEntry:
     key: tuple
     stage_templates: list[_StageTemplate]
-    fns: tuple                                       # per-node AnnotatedFn identity
+    fns: tuple | None                                # per-node AnnotatedFn identity
+    fn_names: tuple = ()                             # per-node fn names (persistable)
     uid: int = dataclasses.field(default_factory=lambda: next(_entry_uids))
     tuned_batch: dict[int, int] = dataclasses.field(default_factory=dict)
     trials: dict[int, list[tuple[int, float]]] = dataclasses.field(default_factory=dict)
+    #: executor="auto": pinned per-stage executor name (cost_model feedback).
+    chosen_exec: dict[int, str] = dataclasses.field(default_factory=dict)
+    #: executor="auto": measured seconds per (stage, candidate executor).
+    exec_timings: dict[int, dict[str, float]] = dataclasses.field(default_factory=dict)
     hits: int = 0
+    loaded: bool = False                             # rehydrated from disk
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
     _tuning: set = dataclasses.field(default_factory=set)
 
     def matches(self, pending: list[Node]) -> bool:
         """Guard against hash collisions / interpreter id() reuse: the cached
-        plan applies only if every node still calls the same function object."""
+        plan applies only if every node still calls the same function object.
+        Rehydrated entries (``fns is None``) have no live objects yet — they
+        match on function names (the key already pins the full structure) and
+        the caller binds identities on the first hit via ``bind_fns``."""
+        if self.fns is None:
+            return len(pending) == len(self.fn_names) and all(
+                n.fn.name == name for n, name in zip(pending, self.fn_names)
+            )
         return len(pending) == len(self.fns) and all(
             n.fn is f for n, f in zip(pending, self.fns)
         )
+
+    def bind_fns(self, pending: list[Node]) -> None:
+        with self._lock:
+            if self.fns is None:
+                self.fns = tuple(n.fn for n in pending)
 
     def try_claim_tuning(self, stage_id: int) -> bool:
         """Exactly one session tunes a stage; racers run with the estimate."""
@@ -251,10 +310,36 @@ class PlanEntry:
         with self._lock:
             self.tuned_batch[stage_id] = int(batch)
             self._tuning.discard(stage_id)
+        _mark_dirty()
 
     def record_trial(self, stage_id: int, batch: int, seconds: float) -> None:
         with self._lock:
             self.trials.setdefault(stage_id, []).append((int(batch), seconds))
+
+    # -- executor auto-selection state (cost model feedback) ----------------
+    def try_claim_exec(self, stage_id: int) -> bool:
+        """Exactly one session measures executors for a stage."""
+        with self._lock:
+            if stage_id in self.chosen_exec or ("exec", stage_id) in self._tuning:
+                return False
+            self._tuning.add(("exec", stage_id))
+            return True
+
+    def release_exec(self, stage_id: int) -> None:
+        with self._lock:
+            self._tuning.discard(("exec", stage_id))
+
+    def pin_exec(self, stage_id: int, name: str) -> None:
+        with self._lock:
+            self.chosen_exec[stage_id] = str(name)
+            self._tuning.discard(("exec", stage_id))
+        _mark_dirty()
+
+    def record_exec_timing(self, stage_id: int, name: str, seconds: float) -> None:
+        """Fresh measurements overwrite whatever was recorded (or poisoned)."""
+        with self._lock:
+            self.exec_timings.setdefault(stage_id, {})[str(name)] = float(seconds)
+        _mark_dirty()
 
 
 def _make_templates(stages: list[Stage], pending: list[Node]) -> list[_StageTemplate] | None:
@@ -346,9 +431,13 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
             _entries.move_to_end(key)
             entry.hits += 1
             stats["hits"] += 1
+            if entry.loaded:
+                stats["warm_hits"] += 1
         else:
             stats["misses"] += 1
     if hit:
+        if entry.fns is None:
+            entry.bind_fns(pending)      # rehydrated entry: bind live identities
         ctx.stats["plan_cache_hits"] += 1
         # O(graph) template instantiation happens outside the global lock so
         # concurrent sessions on different pipelines don't serialize here.
@@ -367,8 +456,240 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
             entry = existing        # concurrent miss: keep the winner's tuner state
         else:
             entry = PlanEntry(key=key, stage_templates=templates,
-                              fns=tuple(n.fn for n in pending))
+                              fns=tuple(n.fn for n in pending),
+                              fn_names=tuple(n.fn.name for n in pending))
             _entries[key] = entry
+            _mark_dirty()
             while len(_entries) > _MAX_ENTRIES:
                 _entries.popitem(last=False)
     return stages, entry
+
+
+# ---------------------------------------------------------------------------
+# Persistence (save / load)
+# ---------------------------------------------------------------------------
+#
+# Fingerprint keys are nested tuples of JSON scalars; tuples are encoded as
+# ``{"t": [...]}`` (fingerprints never contain raw dicts — ``value_fingerprint``
+# normalizes mappings into ("map", ...) tuples), bytes/complex get their own
+# markers.  Split types are encoded as (class name, params) and rebuilt via
+# ``cls(*params)``; a save-time round-trip self-test skips any entry whose
+# types do not reconstruct equal (e.g. ``UnknownSplit``, whose identity is a
+# process-local uid).
+
+
+def _enc(o: Any) -> Any:
+    if isinstance(o, tuple):
+        return {"t": [_enc(x) for x in o]}
+    if isinstance(o, bytes):
+        return {"b": o.hex()}
+    if isinstance(o, complex):
+        return {"c": [o.real, o.imag]}
+    if o is None or isinstance(o, (str, int, float, bool)):
+        return o
+    raise TypeError(f"unpersistable fingerprint element {type(o).__name__}")
+
+
+def _dec(o: Any) -> Any:
+    if isinstance(o, dict):
+        if "t" in o:
+            return tuple(_dec(x) for x in o["t"])
+        if "b" in o:
+            return bytes.fromhex(o["b"])
+        if "c" in o:
+            return complex(o["c"][0], o["c"][1])
+        raise ValueError(f"unknown marker {sorted(o)}")
+    if isinstance(o, list):
+        return tuple(_dec(x) for x in o)
+    return o
+
+
+def _split_type_classes() -> dict[str, type]:
+    out: dict[str, type] = {}
+    work = [st.SplitType]
+    while work:
+        cls = work.pop()
+        out[cls.__name__] = cls
+        work.extend(cls.__subclasses__())
+    return out
+
+
+def _type_enc(t: st.SplitType) -> dict:
+    rebuilt = type(t)(*t.params)       # raises / differs => entry is skipped
+    if rebuilt != t:
+        raise TypeError(f"{type(t).__name__} does not round-trip from params")
+    return {"cls": type(t).__name__, "params": _enc(t.params)}
+
+
+def _type_dec(d: dict, classes: dict[str, type]) -> st.SplitType:
+    return classes[d["cls"]](*_dec(d["params"]))
+
+
+def _entry_enc(e: PlanEntry) -> dict:
+    with e._lock:                      # consistent snapshot vs concurrent pins
+        tuned = dict(e.tuned_batch)
+        chosen = dict(e.chosen_exec)
+        timings = {k: dict(v) for k, v in e.exec_timings.items()}
+    return {
+        "key": _enc(e.key),
+        "fn_names": list(e.fn_names),
+        "tuned_batch": {str(k): v for k, v in tuned.items()},
+        "chosen_exec": {str(k): v for k, v in chosen.items()},
+        "exec_timings": {str(k): v for k, v in timings.items()},
+        "templates": [
+            {
+                "positions": tm.positions,
+                "inputs": [[_enc(desc), _type_enc(t)] for desc, t in tm.inputs],
+                "out_types": {str(p): _type_enc(t) for p, t in tm.out_types.items()},
+                "arg_types": [[p, name, _type_enc(t)]
+                              for (p, name), t in tm.arg_types.items()],
+            }
+            for tm in e.stage_templates
+        ],
+    }
+
+
+def _entry_dec(d: dict, classes: dict[str, type]) -> PlanEntry:
+    templates = [
+        _StageTemplate(
+            positions=[int(p) for p in tm["positions"]],
+            inputs=[(_dec(desc), _type_dec(t, classes))
+                    for desc, t in tm["inputs"]],
+            out_types={int(p): _type_dec(t, classes)
+                       for p, t in tm["out_types"].items()},
+            arg_types={(int(p), name): _type_dec(t, classes)
+                       for p, name, t in tm["arg_types"]},
+        )
+        for tm in d["templates"]
+    ]
+    return PlanEntry(
+        key=_dec(d["key"]),
+        stage_templates=templates,
+        fns=None,
+        fn_names=tuple(d["fn_names"]),
+        tuned_batch={int(k): int(v) for k, v in d["tuned_batch"].items()},
+        chosen_exec={int(k): str(v) for k, v in d["chosen_exec"].items()},
+        exec_timings={int(k): {str(n): float(s) for n, s in v.items()}
+                      for k, v in d["exec_timings"].items()},
+        loaded=True,
+    )
+
+
+def save(path: str, force: bool = False) -> int:
+    """Serialize every persistable cached plan to ``path``; returns the entry
+    count written (0 when the file is already current — steady-state session
+    exits are no-ops).  Atomic (temp file + rename): concurrent saves race to
+    the rename, the file is never left half-written."""
+    ap = os.path.abspath(path)
+    with _lock:
+        version = _mutations                 # taken BEFORE the snapshot
+        if (not force and _saved_versions.get(ap) == version
+                and os.path.exists(path)):
+            stats["persist_save_noop"] += 1
+            return 0
+        snapshot = list(_entries.values())
+    encoded = []
+    for e in snapshot:
+        try:
+            encoded.append(_entry_enc(e))
+        except (TypeError, ValueError):
+            stats["persist_skipped"] += 1
+    payload = {
+        "schema": SCHEMA_VERSION,
+        "chip": hardware.TARGET.name,
+        "entries": encoded,
+    }
+    tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)
+    with _lock:
+        _saved_versions[ap] = version
+    stats["persist_saved"] += len(encoded)
+    return len(encoded)
+
+
+def load(path: str) -> int:
+    """Merge persisted plans into the live cache; returns entries loaded.
+
+    Rejects (returns 0, never raises) on: missing/corrupt file, schema
+    version mismatch, cross-chip file.  Live entries win over loaded ones —
+    a loaded plan never clobbers in-process tuner state.  Split-type classes
+    unknown to this process (library integration not imported yet) skip only
+    the entries that need them."""
+    return _load(path)[0]
+
+
+def _load(path: str) -> tuple[int, int]:
+    """(entries loaded, entries left unresolved by missing split-type classes)."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        schema = payload["schema"]
+        chip = payload["chip"]
+        raw_entries = payload["entries"]
+    except FileNotFoundError:
+        stats["persist_missing"] += 1    # normal cold start, not an error
+        return 0, 0
+    except (OSError, ValueError, KeyError, TypeError):
+        stats["persist_rejected_corrupt"] += 1
+        return 0, 0
+    if schema != SCHEMA_VERSION:
+        stats["persist_rejected_schema"] += 1
+        return 0, 0
+    if chip != hardware.TARGET.name:
+        stats["persist_rejected_chip"] += 1
+        return 0, 0
+    classes = _split_type_classes()
+    loaded = 0
+    unresolved = 0
+    for d in raw_entries:
+        try:
+            names = {tm_t["cls"] for tm in d["templates"]
+                     for tm_t in _template_types(tm)}
+            if not names <= classes.keys():
+                # A library integration (e.g. annotated_table) isn't imported
+                # yet, so its split-type classes don't exist in this process.
+                # Not a corrupt entry: load_once retries it later.
+                unresolved += 1
+                stats["persist_unresolved"] += 1
+                continue
+            e = _entry_dec(d, classes)
+        except (KeyError, ValueError, TypeError):
+            stats["persist_skipped"] += 1
+            continue
+        with _lock:
+            if e.key not in _entries:
+                _entries[e.key] = e
+                loaded += 1
+                while len(_entries) > _MAX_ENTRIES:
+                    _entries.popitem(last=False)
+    stats["persist_loaded"] += loaded
+    if loaded:
+        _mark_dirty()
+    return loaded, unresolved
+
+
+def _template_types(tm: dict):
+    yield from (t for _, t in tm["inputs"])
+    yield from tm["out_types"].values()
+    yield from (t for _, _, t in tm["arg_types"])
+
+
+def load_once(path: str) -> int:
+    """Load ``path`` at most once per process (session/env-var hook).
+
+    If entries were left unresolved because their split-type classes are not
+    imported yet, the path stays retryable: the next context creation loads
+    again (already-merged keys are skipped), picking up entries whose
+    integrations have been imported in the meantime."""
+    ap = os.path.abspath(path)
+    with _lock:
+        if ap in _loaded_paths:
+            return 0
+        _loaded_paths.add(ap)
+    loaded, unresolved = _load(path)
+    if unresolved:                      # retry once the classes exist
+        with _lock:
+            _loaded_paths.discard(ap)
+    return loaded

@@ -45,6 +45,14 @@ class Stage:
         v = node.bound.get(argname)
         return isinstance(v, NodeRef) and any(n.id == v.node_id for n in self.nodes)
 
+    def flops_hint(self) -> float:
+        """Arithmetic-intensity proxy: summed SA ``cost_hint`` over the chain.
+
+        The annotation's per-call cost hint (relative to one elementwise op)
+        feeds the executor cost model (``core/cost_model.py``) — a long chain
+        of cheap ops is memory-bound, a short chain of expensive ones is not."""
+        return sum(float(getattr(n.fn.sa, "cost_hint", 1.0)) for n in self.nodes)
+
 
 def _count_of_type(t: Any) -> int | None:
     if isinstance(t, st.ArraySplit):

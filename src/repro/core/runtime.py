@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import os
 import threading
 import weakref
 from typing import Any
@@ -41,6 +42,7 @@ class MozartContext:
         pipeline: bool = True,
         plan_cache: bool = True,
         autotune: bool = True,
+        plan_cache_path: str | None = None,
     ):
         self.executor = executor
         self.chip = chip
@@ -54,10 +56,20 @@ class MozartContext:
         self.pipeline = pipeline                 # False: Table-4 "-pipe" ablation
         self.plan_cache = plan_cache             # reuse plans across evaluations
         self.autotune = autotune                 # measure+pin chunk sizes on cached plans
+        # Persist plans/tuned batches/executor choices across processes.  The
+        # MOZART_PLAN_CACHE env var pre-warms every context (serving replicas
+        # restart with pinned plans: zero planner calls, zero tuning runs).
+        if plan_cache_path is None:
+            plan_cache_path = os.environ.get("MOZART_PLAN_CACHE") or None
+        self.plan_cache_path = plan_cache_path
         self.graph = DataflowGraph()
         self.stats: collections.Counter = collections.Counter()
         self._plan_entry = None                  # active plan_cache.PlanEntry
         self._batch_override: int | None = None  # set by the auto-tuner only
+        self._n_cap: int | None = None           # set during sampled tuning only
+        if self.plan_cache_path:
+            from repro.core.plan_cache import load_once
+            load_once(self.plan_cache_path)
 
     # -- libmozart register() -------------------------------------------------
     def register_call(self, fn, bound: dict[str, Any]) -> Future:
@@ -101,15 +113,16 @@ class MozartContext:
                 names = ",".join(n.fn.name for n in s.nodes)
                 print(f"[mozart] stage {s.id}: [{names}] inputs="
                       f"{[str(si.split_type) for si in s.inputs.values()]}")
-        executor = get_executor(self.executor)
         # Save/restore (not clear): a dynamic node forcing a Future of this
         # same session re-enters evaluate(), and the outer plan's entry must
         # survive the nested call.
         prev_entry = self._plan_entry
         self._plan_entry = entry
         try:
+            # Dispatch PER STAGE: under ``executor="auto"`` each stage is
+            # scored and routed independently (cost_model.AutoExecutor).
             for s in stages:
-                executor.run(s, self.graph, self)
+                get_executor(self.executor).run(s, self.graph, self)
         finally:
             self._plan_entry = prev_entry
         self.graph.prune()
@@ -153,6 +166,9 @@ def session(**kwargs):
     try:
         yield ctx
         ctx.evaluate()                       # flush at scope exit
+        if ctx.plan_cache_path:
+            from repro.core import plan_cache as _pc
+            _pc.save(ctx.plan_cache_path)    # persist plans + pinned decisions
     finally:
         _stack().pop()
 

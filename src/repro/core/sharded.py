@@ -23,6 +23,7 @@ from repro.core.stage_exec import (
     PedanticError,
     StageExecutor,
     batch_ranges,
+    effective_elements,
     register_executor,
     run_chain,
     split_axis_of,
@@ -75,7 +76,7 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None
     for a in axes:
         n_shards *= mesh.shape[a]
 
-    n = stage_num_elements(stage, concrete, ctx.pedantic)
+    n = effective_elements(ctx, stage_num_elements(stage, concrete, ctx.pedantic))
     if n % n_shards != 0:
         raise PedanticError(
             f"stage element count {n} not divisible by mesh data extent {n_shards}"
@@ -116,7 +117,7 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None
         n_local = n // n_shards
         elem_bytes = stage_elem_bytes(stage, env, n)
         batch = ctx.batch_elements or hardware.mozart_batch_elements(elem_bytes, ctx.chip)
-        batch = min(batch, n_local)
+        batch = max(1, min(batch, n_local))
 
         if ctx.inner_executor == "whole" or batch >= n_local:
             run_chain(stage, env, jit_each=False)

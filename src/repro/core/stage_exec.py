@@ -65,6 +65,7 @@ def _ensure_builtin_executors() -> None:
     import repro.core.executor      # noqa: F401  (eager/pipelined/fused/scan)
     import repro.core.pallas_exec   # noqa: F401  (pallas)
     import repro.core.sharded       # noqa: F401  (sharded)
+    import repro.core.cost_model    # noqa: F401  (auto)
 
 
 def get_executor(name: str) -> "StageExecutor":
@@ -124,7 +125,22 @@ def stage_elem_bytes(stage: Stage, concrete: dict[tuple, Any], n: int) -> int:
 
 
 def batch_ranges(n: int, batch: int) -> list[tuple[int, int]]:
+    if n <= 0:
+        # Empty splits: one degenerate chunk, so the chain still runs (on
+        # zero-size slices) and merges produce the library's empty-input
+        # result instead of crashing on an empty partial list.
+        return [(0, 0)]
     return [(s, min(s + batch, n)) for s in range(0, n, batch)]
+
+
+def effective_elements(ctx, n: int) -> int:
+    """Stage element count, clamped during sampled tuning measurements.
+
+    Split-type ``info`` reports the FULL value's element count (it reads the
+    type's recorded geometry, not the concrete value), so executors running
+    on a sliced sample must cap their chunk ranges explicitly."""
+    cap = getattr(ctx, "_n_cap", None)
+    return n if cap is None else min(n, cap)
 
 
 # ---------------------------------------------------------------------------
@@ -209,11 +225,20 @@ def _block_stage_outputs(stage: Stage) -> None:
 
 def candidate_batches(est: int, n: int) -> list[int]:
     """2–3 chunk sizes around the §5.2 fast-memory estimate."""
+    if n <= 0:
+        return [1]                    # empty split: nothing to tune
     est = max(1, min(est, n))
     if est >= n:
         return [n]                    # one chunk: nothing to tune
     cands = {max(1, est // 2), est, min(est * 2, n)}
     return sorted(cands)
+
+
+#: chunks per timed sample when the tuner measures a candidate.  Sampling a
+#: couple of chunks and extrapolating replaces the old protocol of two FULL
+#: stage executions per candidate, bounding first-cached-run overhead to well
+#: under one extra full execution (see ``StageExecutor.sampled_time``).
+SAMPLE_CHUNKS = 2
 
 
 # ---------------------------------------------------------------------------
@@ -300,26 +325,55 @@ class StageExecutor:
                 return
             best, best_dt = None, None
             for b in cands:
-                ctx._batch_override = b
                 try:
-                    # Warmup run absorbs per-chunk-shape jit compilation so the
-                    # timed run measures steady-state throughput, not tracing.
-                    self.execute(stage, concrete, ctx)
-                    _block_stage_outputs(stage)
-                    t0 = time.perf_counter()
-                    self.execute(stage, concrete, ctx)
-                    _block_stage_outputs(stage)
-                    dt = time.perf_counter() - t0
-                finally:
-                    ctx._batch_override = None
+                    dt = self.sampled_time(stage, concrete, ctx, b, n)
+                except Exception:
+                    continue            # unsampleable candidate: skip it
                 entry.record_trial(stage.id, b, dt)
                 if best_dt is None or dt < best_dt:
                     best, best_dt = b, dt
-            # All candidates computed the same values (merges are associative),
-            # so the last run's results stand; only the pinned size differs.
-            entry.pin(stage.id, best)
+            entry.pin(stage.id, best if best is not None else est)
             pinned = True
-            ctx.stats["autotuned_stages"] += 1
+            if best is not None:
+                ctx.stats["autotuned_stages"] += 1
         finally:
             if not pinned:
                 entry.release_tuning(stage.id)
+        # One real execution with the pinned size produces the stage results
+        # (sampled runs above computed throwaway partial outputs only).
+        self.execute(stage, concrete, ctx)
+
+    # -- sampled measurement ------------------------------------------------
+    def sampled_time(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                     batch: int, n: int) -> float:
+        """Estimated seconds for a full stage execution at ``batch``, measured
+        on a bounded sample of chunks.
+
+        Splits every splittable input down to ``SAMPLE_CHUNKS`` chunks, runs
+        the chain twice (warmup absorbs per-chunk-shape jit tracing; the
+        second run is timed) and extrapolates linearly to ``n`` elements.
+        ``ctx.stats["tuning_sample_elems"]`` accrues the elements actually
+        re-executed so tests can assert the overhead bound structurally."""
+        batch = max(1, min(batch, n)) if n > 0 else 1
+        s = min(n, SAMPLE_CHUNKS * batch) if n > 0 else 0
+        sample: dict[tuple, Any] = {}
+        for key, si in stage.inputs.items():
+            v = concrete[key]
+            sample[key] = (si.split_type.split(v, 0, s)
+                           if si.split_type.splittable else v)
+        prev_cap = getattr(ctx, "_n_cap", None)
+        prev_override = ctx._batch_override
+        ctx._n_cap = s
+        ctx._batch_override = batch
+        try:
+            self.execute(stage, sample, ctx)
+            _block_stage_outputs(stage)
+            t0 = time.perf_counter()
+            self.execute(stage, sample, ctx)
+            _block_stage_outputs(stage)
+            dt = time.perf_counter() - t0
+        finally:
+            ctx._n_cap = prev_cap
+            ctx._batch_override = prev_override
+        ctx.stats["tuning_sample_elems"] += 2 * s
+        return dt * (n / s) if s else dt

@@ -23,6 +23,13 @@ class Chip:
     # (paper: "C x L2CacheSize", C fixed constant; they found C s.t. batches
     # also leave room for intermediates in the shared LLC).
     mozart_c: float = 0.25
+    # Per-dispatch overhead of launching ONE library call from the Python
+    # driver loop (jit call + XLA launch).  The cost model weighs this
+    # against memory traffic when scoring chunked executors.
+    dispatch_overhead_s: float = 50e-6
+    # One-time cost of tracing/compiling a new XLA program (scan drivers,
+    # fused chains).  Amortized over a session; charged once per stage.
+    compile_overhead_s: float = 50e-3
 
 
 # Target accelerator (per the assignment brief):

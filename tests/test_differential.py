@@ -1,0 +1,187 @@
+"""Cross-executor differential test matrix.
+
+Every registered StageExecutor (including ``auto``) × every annotated
+library surface (numpy, image, table, nlp) must produce the same results as
+the ``"eager"`` oracle — the un-annotated library.  Shape/dtype edge cases
+ride along: empty splits (zero elements), odd remainders (element counts
+that don't divide the chunk size), single elements, and scalar broadcast
+arguments (python floats and 0-d arrays).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mozart
+from repro.core import annotated_image as img
+from repro.core import annotated_nlp as nlp
+from repro.core import annotated_numpy as anp
+from repro.core import annotated_table as tb
+from repro.core.stage_exec import available_executors
+
+EXECUTORS = sorted(available_executors())
+
+#: fixed chunk size so "odd remainder" sizes (e.g. 257) leave ragged tails.
+BATCH = 32
+
+#: element counts: empty split, single element, odd remainder, multi-chunk.
+SIZES = [0, 1, 7, 257]
+
+
+def _session_kwargs(executor):
+    kw = {"batch_elements": BATCH}
+    if executor == "sharded":
+        kw["mesh"] = jax.make_mesh((1,), ("data",))
+    return kw
+
+
+def _assert_close(got, want, err=""):
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == want.shape, (err, got.shape, want.shape)
+    assert got.dtype == want.dtype, (err, got.dtype, want.dtype)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6, err_msg=err)
+
+
+def _run(pipeline, executor, *args):
+    with mozart.session(executor="eager"):
+        want = [np.asarray(v) for v in pipeline(*args)]
+    with mozart.session(executor=executor, **_session_kwargs(executor)) as ctx:
+        got = [np.asarray(v) for v in pipeline(*args)]
+    assert ctx.stats["stages"] >= 1
+    for i, (g, w) in enumerate(zip(got, want)):
+        _assert_close(g, w, err=f"{executor} output {i}")
+
+
+# ---------------------------------------------------------------------------
+# numpy surface
+# ---------------------------------------------------------------------------
+
+
+def _numpy_pipeline(x, y, scale):
+    a = anp.add(x, y)
+    b = anp.multiply(anp.sqrt(anp.abs(a)), scale)   # scalar broadcast arg
+    c = anp.subtract(b, anp.minimum(b, 1.0))
+    return c, anp.sum(c)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("n", SIZES)
+def test_numpy_surface(executor, n):
+    r = np.random.RandomState(n + 1)
+    x = jnp.asarray(r.rand(n) + 0.5, jnp.float32)
+    y = jnp.asarray(r.rand(n), jnp.float32)
+    _run(_numpy_pipeline, executor, x, y, 0.75)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("n", [1, 257])
+def test_numpy_reductions(executor, n):
+    """max/min/prod merges (no identity element, so nonzero sizes only)."""
+    r = np.random.RandomState(n)
+    x = jnp.asarray(r.rand(n) * 0.2 + 0.9, jnp.float32)
+
+    def pipe(x):
+        return anp.max(x), anp.min(x), anp.prod(x), anp.sum(x)
+
+    _run(pipe, executor, x)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_numpy_zero_d_broadcast_arg(executor):
+    """0-d array operands must broadcast, not split."""
+    x = jnp.asarray(np.linspace(0.0, 2.0, 257), jnp.float32)
+    s = jnp.asarray(1.5, jnp.float32)       # 0-d: ScalarSplit via _BinarySpec
+
+    def pipe(x, s):
+        return (anp.multiply(x, s), anp.sum(anp.add(x, s)))
+
+    _run(pipe, executor, x, s)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_numpy_int32_dtype(executor):
+    x = jnp.arange(0, 257, dtype=jnp.int32)
+    y = jnp.full((257,), 3, jnp.int32)
+
+    def pipe(x, y):
+        return (anp.add(anp.multiply(x, y), 7), anp.sum(anp.multiply(x, 2)))
+
+    _run(pipe, executor, x, y)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_numpy_aliased_operand(executor):
+    """add(x, x): one external value bound to two arguments.  (Values are
+    kept positive: a near-zero sum would turn merge-order FP noise into a
+    relative-error blowup.)"""
+    x = jnp.asarray(np.linspace(0.5, 1.5, 97), jnp.float32)
+
+    def pipe(x):
+        return (anp.multiply(anp.add(x, x), 0.5), anp.sum(anp.add(x, x)))
+
+    _run(pipe, executor, x)
+
+
+# ---------------------------------------------------------------------------
+# image surface
+# ---------------------------------------------------------------------------
+
+
+def _image_pipeline(im):
+    a = img.colortone(im, (0.2, 0.1, 0.0), 0.4, True)
+    b = img.gamma(a, 1.8)
+    c = img.contrast(b, 1.3)
+    d = img.screen_blend(c, c)
+    return d, img.brightness_histogram(d)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("h", SIZES)
+def test_image_surface(executor, h):
+    r = np.random.RandomState(h + 2)
+    im = jnp.asarray(r.rand(h, 12, 3), jnp.float32)
+    _run(_image_pipeline, executor, im)
+
+
+# ---------------------------------------------------------------------------
+# table surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("nrows", SIZES)
+def test_table_surface(executor, nrows):
+    r = np.random.RandomState(nrows + 3)
+    t = tb.Table({
+        "pop": jnp.asarray(r.rand(nrows) * 1000 + 1.0, jnp.float32),
+        "crime": jnp.asarray(r.rand(nrows) * 10, jnp.float32),
+    })
+
+    def pipe(t):
+        idx = anp.divide(anp.multiply(tb.col(t, "crime"), 100.0),
+                         tb.col(t, "pop"))
+        return idx, anp.sum(idx), anp.sum(anp.add(idx, 1.0))
+
+    _run(pipe, executor, t)
+
+
+# ---------------------------------------------------------------------------
+# nlp surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("docs", SIZES)
+def test_nlp_surface(executor, docs):
+    vocab, dim, tags = 50, 8, 5
+    r = np.random.RandomState(docs + 4)
+    corpus = nlp.make_corpus(docs, max_len=12, vocab=vocab, seed=docs)
+    emb = jnp.asarray(r.randn(vocab, dim), jnp.float32)
+    head = jnp.asarray(r.randn(dim, tags), jnp.float32)
+
+    def pipe(corpus, emb, head):
+        folded = nlp.normalize_case(corpus, vocab)
+        return nlp.pos_tag(folded, emb, head), nlp.token_counts(folded)
+
+    _run(pipe, executor, corpus, emb, head)

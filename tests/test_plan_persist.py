@@ -1,0 +1,345 @@
+"""Plan-cache persistence: serialization round-trips, guard rails, and the
+acceptance scenario — a pipeline evaluated in process A, cache saved, then
+replayed in a fresh process B with zero planner calls and zero tuning
+executions (asserted via ``plan_cache.stats`` across real subprocesses)."""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mozart, plan_cache
+from repro.core import annotated_numpy as anp
+from repro.testing import given, hst, settings
+
+
+def _pipeline(x):
+    return anp.sum(anp.multiply(anp.exp(x), 0.5))
+
+
+def _entry_snapshot(e):
+    """Everything persistence must preserve, in comparable form."""
+    return {
+        "key": e.key,
+        "fn_names": e.fn_names,
+        "tuned": dict(e.tuned_batch),
+        "chosen": dict(e.chosen_exec),
+        "timings": {k: dict(v) for k, v in e.exec_timings.items()},
+        "templates": [
+            (tuple(tm.positions), tuple(tm.inputs),
+             tuple(sorted(tm.out_types.items())),
+             tuple(sorted(tm.arg_types.items())))
+            for tm in e.stage_templates
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder round-trip (property)
+# ---------------------------------------------------------------------------
+
+
+def _key_strategy():
+    """Random fingerprint-shaped nested tuples over the scalar universe the
+    fingerprinter emits (str/int/float/bool/None/bytes/complex + tuples)."""
+    scalars = hst.sampled_from([
+        "arr", "f32[8]", "", "node", 0, 1, -3, 2**40, True, False, None,
+        0.5, -1.75, 1e300, b"\x00\xff", complex(1.5, -2.5),
+    ])
+    return hst.lists(
+        hst.lists(scalars, min_size=0, max_size=4), min_size=0, max_size=5)
+
+
+@given(raw=_key_strategy())
+@settings(max_examples=60, deadline=None)
+def test_fingerprint_encoding_roundtrip_is_identity(raw):
+    key = tuple(tuple(inner) for inner in raw)
+    enc = plan_cache._enc(key)
+    wire = json.loads(json.dumps(enc))          # through real JSON
+    assert plan_cache._dec(wire) == key
+
+
+@given(nrows=hst.integers(1, 64), axis=hst.integers(0, 1),
+       op=hst.sampled_from(["add", "max", "min", "mul"]))
+@settings(max_examples=30, deadline=None)
+def test_split_type_encoding_roundtrip(nrows, axis, op):
+    from repro.core import split_types as st
+    classes = plan_cache._split_type_classes()
+    for t in (st.ArraySplit((nrows, 3), axis), st.ReduceSplit(op),
+              st.ScalarSplit(), st.ConcatSplit("tag", axis)):
+        assert plan_cache._type_dec(plan_cache._type_enc(t), classes) == t
+
+
+# ---------------------------------------------------------------------------
+# save → load identity on real cached plans
+# ---------------------------------------------------------------------------
+
+
+@given(n=hst.sampled_from([48, 96, 192]), batch=hst.integers(5, 40),
+       executor=hst.sampled_from(["fused", "scan", "pipelined"]))
+@settings(max_examples=8, deadline=None)
+def test_save_load_roundtrip_identity(tmp_path_factory, n, batch, executor):
+    plan_cache.clear()
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    with mozart.session(executor=executor, batch_elements=batch):
+        _ = float(_pipeline(x))
+    (entry,) = plan_cache.entries()
+    # pinned tuner + auto-selection state must survive the trip
+    entry.pin(0, batch)
+    entry.pin_exec(0, "scan")
+    entry.record_exec_timing(0, "fused", 0.0125)
+    want = _entry_snapshot(entry)
+
+    path = str(tmp_path_factory.mktemp("pc") / "plans.json")
+    assert plan_cache.save(path) == 1
+    plan_cache.clear()
+    assert plan_cache.load(path) == 1
+    (loaded,) = plan_cache.entries()
+    assert loaded.loaded and loaded.fns is None
+    assert _entry_snapshot(loaded) == want
+
+
+def test_loaded_entry_hits_without_planner(tmp_path):
+    x = jnp.linspace(0.0, 1.0, 256, dtype=jnp.float32)
+    with mozart.session(executor="fused") as c1:
+        v1 = float(_pipeline(x))
+    path = str(tmp_path / "plans.json")
+    plan_cache.save(path)
+    plan_cache.clear()
+    plan_cache.load(path)
+    with mozart.session(executor="fused") as c2:
+        v2 = float(_pipeline(x))
+    assert c2.stats["planner_calls"] == 0
+    assert c2.stats["plan_cache_hits"] == 1
+    assert plan_cache.stats["warm_hits"] == 1
+    assert np.isclose(v1, v2)
+
+
+def test_unpersistable_split_types_are_skipped_not_fatal(tmp_path):
+    """Entries carrying process-local types (UnknownSplit uids) are skipped;
+    everything else still persists."""
+    x = jnp.linspace(0.0, 1.0, 64, dtype=jnp.float32)
+    with mozart.session(executor="pipelined", batch_elements=16):
+        _ = float(_pipeline(x))                        # persistable
+    with mozart.session(executor="pipelined", batch_elements=16):
+        mask = anp.greater(x, 0.5)
+        kept = anp.compress(mask, x)                   # dynamic -> UnknownSplit
+        _ = float(anp.sum(kept))
+    assert len(plan_cache.entries()) == 2
+    path = str(tmp_path / "plans.json")
+    assert plan_cache.save(path) == 1
+    assert plan_cache.stats["persist_skipped"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Guard rails: version / chip / corruption fall back to cold planning
+# ---------------------------------------------------------------------------
+
+
+def _saved_file(tmp_path):
+    x = jnp.linspace(0.0, 1.0, 128, dtype=jnp.float32)
+    with mozart.session(executor="fused"):
+        _ = float(_pipeline(x))
+    path = str(tmp_path / "plans.json")
+    assert plan_cache.save(path) == 1
+    plan_cache.clear()
+    return path, x
+
+
+def _assert_cold_planning_still_works(x):
+    with mozart.session(executor="fused") as ctx:
+        v = float(_pipeline(x))
+    assert ctx.stats["planner_calls"] == 1
+    want = float(np.sum(np.exp(np.linspace(0.0, 1.0, 128, dtype=np.float32)) * 0.5))
+    assert np.isclose(v, want, rtol=1e-5)
+
+
+def test_schema_version_mismatch_rejected(tmp_path):
+    path, x = _saved_file(tmp_path)
+    payload = json.load(open(path))
+    payload["schema"] = plan_cache.SCHEMA_VERSION + 1
+    json.dump(payload, open(path, "w"))
+    assert plan_cache.load(path) == 0
+    assert plan_cache.stats["persist_rejected_schema"] == 1
+    assert plan_cache.cache_info()["entries"] == 0
+    _assert_cold_planning_still_works(x)
+
+
+def test_cross_chip_file_rejected(tmp_path):
+    path, x = _saved_file(tmp_path)
+    payload = json.load(open(path))
+    payload["chip"] = "some_other_chip"
+    json.dump(payload, open(path, "w"))
+    assert plan_cache.load(path) == 0
+    assert plan_cache.stats["persist_rejected_chip"] == 1
+    _assert_cold_planning_still_works(x)
+
+
+@given(cut=hst.integers(1, 40))
+@settings(max_examples=10, deadline=None)
+def test_truncated_file_rejected_not_fatal(tmp_path_factory, cut):
+    plan_cache.clear()
+    tmp_path = tmp_path_factory.mktemp("pc")
+    path, x = _saved_file(tmp_path)
+    blob = open(path).read()
+    open(path, "w").write(blob[:max(0, len(blob) - cut)])
+    assert plan_cache.load(path) == 0
+    assert plan_cache.stats["persist_rejected_corrupt"] >= 1
+    _assert_cold_planning_still_works(x)
+
+
+def test_missing_file_is_a_cold_start(tmp_path):
+    assert plan_cache.load(str(tmp_path / "nope.json")) == 0
+    assert plan_cache.stats["persist_missing"] == 1
+
+
+def test_unresolved_split_type_classes_keep_path_retryable(tmp_path):
+    """Entries whose split-type classes aren't imported yet (a library
+    integration loaded later in the process) are deferred, and load_once
+    keeps the path retryable instead of consuming it."""
+    path, _ = _saved_file(tmp_path)
+    payload = json.load(open(path))
+    deferred = json.loads(json.dumps(payload["entries"][0]))
+    deferred["key"] = plan_cache._enc(("other", "pipeline", "key"))
+    for tm in deferred["templates"]:
+        for t in tm["out_types"].values():
+            t["cls"] = "NotYetImportedSplit"
+    payload["entries"].append(deferred)
+    json.dump(payload, open(path, "w"))
+
+    assert plan_cache.load_once(path) == 1        # the resolvable entry
+    assert plan_cache.stats["persist_unresolved"] == 1
+    assert plan_cache.stats["persist_skipped"] == 0   # deferred, not dropped
+    # path not consumed: a later context creation retries the deferred entry
+    assert os.path.abspath(path) not in plan_cache._loaded_paths
+    assert plan_cache.load_once(path) == 0        # still unknown: no dup load
+    assert plan_cache.cache_info()["entries"] == 1
+
+
+def test_steady_state_saves_are_noops(tmp_path):
+    """session(plan_cache_path=...) saves on every exit; once nothing new was
+    planned/pinned, the save must skip the disk write."""
+    path = str(tmp_path / "plans.json")
+    x = jnp.linspace(0.0, 1.0, 256, dtype=jnp.float32)
+
+    def once():
+        with mozart.session(executor="fused", plan_cache_path=path) as ctx:
+            _ = float(_pipeline(x))
+        return ctx
+
+    once()                                        # miss: entry added -> write
+    once()                                        # first hit: pins -> write
+    before = os.stat(path).st_mtime_ns, plan_cache.stats["persist_save_noop"]
+    once()
+    after = os.stat(path).st_mtime_ns, plan_cache.stats["persist_save_noop"]
+    assert after[0] == before[0]                  # file untouched
+    assert after[1] > before[1]                   # and the save was a no-op
+
+
+def test_concurrent_saves_do_not_corrupt(tmp_path):
+    """Two (here: eight) contexts saving the same path concurrently: the
+    atomic temp-file + rename protocol means the file always parses and
+    loads, whoever wins the race."""
+    x = jnp.linspace(0.0, 1.0, 96, dtype=jnp.float32)
+    with mozart.session(executor="fused", batch_elements=24):
+        _ = float(_pipeline(x))
+    path = str(tmp_path / "plans.json")
+    errors = []
+
+    def worker():
+        try:
+            for _ in range(10):
+                plan_cache.save(path)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    payload = json.load(open(path))                 # parses
+    assert payload["schema"] == plan_cache.SCHEMA_VERSION
+    plan_cache.clear()
+    assert plan_cache.load(path) == 1               # and loads
+    assert not [f for f in os.listdir(tmp_path)     # no temp litter
+                if ".tmp." in f]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: cross-process warm start (real subprocesses)
+# ---------------------------------------------------------------------------
+
+_PRELUDE = """
+import json, sys
+import jax.numpy as jnp
+import numpy as np
+from repro import hardware
+from repro.core import mozart, plan_cache
+from repro.core import annotated_numpy as anp
+
+TINY = hardware.Chip(name="tiny_subproc_chip", peak_bf16_flops=1e11,
+                     hbm_bandwidth=2e10, ici_link_bandwidth=1e10, ici_links=1,
+                     hbm_bytes=2**30, vmem_bytes=64 * 1024, mozart_c=1.0)
+
+def pipeline(x):
+    return anp.sum(anp.multiply(anp.exp(x), 0.5))
+
+x = jnp.linspace(0.0, 1.0, 50_000, dtype=jnp.float32)
+path = sys.argv[1]
+"""
+
+_PROC_A = _PRELUDE + """
+# two evaluations: miss (plan) + first hit (executor measurement + tuning);
+# the session exit persists pinned plans to `path`.
+for _ in range(2):
+    with mozart.session(executor="auto", chip=TINY, plan_cache_path=path) as ctx:
+        v = float(pipeline(x))
+print(json.dumps({"v": v, "ctx": dict(ctx.stats), "pc": dict(plan_cache.stats)}))
+"""
+
+_PROC_B = _PRELUDE + """
+with mozart.session(executor="auto", chip=TINY, plan_cache_path=path) as ctx:
+    v = float(pipeline(x))
+print(json.dumps({"v": v, "ctx": dict(ctx.stats), "pc": dict(plan_cache.stats)}))
+"""
+
+
+def _run_subprocess(code, path):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    existing = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + existing if existing else "")
+    out = subprocess.run([sys.executable, "-c", code, path],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_cross_process_warm_start(tmp_path):
+    """Process A plans + measures + tunes and saves; a FRESH process B replays
+    the persisted plan: zero planner calls, zero tuning executions, zero
+    executor measurements — and the same answer."""
+    path = str(tmp_path / "plans.json")
+    a = _run_subprocess(_PROC_A, path)
+    assert a["ctx"].get("plan_cache_hits") == 1          # A's 2nd run hit
+    assert a["ctx"].get("auto_measured_stages", 0) >= 1  # A measured executors
+    assert os.path.exists(path)
+
+    b = _run_subprocess(_PROC_B, path)
+    assert b["pc"].get("persist_loaded", 0) >= 1
+    assert b["pc"].get("hits") == 1
+    assert b["pc"].get("warm_hits") == 1
+    assert b["ctx"].get("planner_calls", 0) == 0         # zero planner calls
+    assert b["ctx"].get("plan_cache_hits") == 1
+    assert b["ctx"].get("autotuned_stages", 0) == 0      # zero tuning runs
+    assert b["ctx"].get("auto_measured_stages", 0) == 0  # zero measurements
+    assert b["ctx"].get("auto_pinned_replays", 0) >= 1   # pinned choice reused
+    assert b["ctx"].get("tuning_sample_elems", 0) == 0
+    assert np.isclose(a["v"], b["v"], rtol=1e-5)
