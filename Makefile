@@ -18,8 +18,9 @@ test:
 test-slow:
 	$(PYTHON) -m pytest -q -m "slow or not slow"
 
+# Optional: JSON=path dumps the recorded rows (CI uploads this artifact).
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --smoke
+	$(PYTHON) -m benchmarks.run --smoke $(if $(JSON),--json $(JSON))
 
 bench:
 	$(PYTHON) -m benchmarks.run --quick

@@ -33,6 +33,36 @@ def bench_arch(arch: str, batches=(1, 4), prompt_len=16, max_new=16):
                f"tokens_per_s={stats['tokens_per_s']:.1f}")
 
 
+def bench_decode_drivers(arch="rwkv6-1.6b", batch=2, prompt_len=8, max_new=16):
+    """Decode-loop drivers compared: raw ``jax.jit`` vs the AOT pipeline API
+    (``--driver mozart`` in launch/serve.py).  The mozart driver must stay
+    warm (zero planner calls, zero retraces) across the whole decode loop."""
+    import jax
+    cfg = get_smoke_config(arch)
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    def run(driver):
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, prompt_len),
+                        max_new=max_new)
+                for i in range(batch * 2)]
+        srv = Server(cfg, params, batch, max_len=prompt_len + max_new + 1,
+                     driver=driver)
+        srv.warmup(prompt_len)
+        srv.run(reqs)                     # warm every per-shape compile
+        stats = srv.run(reqs)
+        return stats, srv
+
+    jit_stats, _ = run("jit")
+    moz_stats, srv = run("mozart")
+    ratio = moz_stats["decode_us_per_call"] / max(jit_stats["decode_us_per_call"], 1e-9)
+    record("serve/decode_driver/mozart", moz_stats["decode_us_per_call"],
+           f"jit_us={jit_stats['decode_us_per_call']:.0f};ratio={ratio:.2f};"
+           f"warm={moz_stats['decode_warm']};"
+           f"last_call={moz_stats['decode_last_call']}")
+
+
 def bench_mozart_warm_start(n=500_000):
     """Mozart request loop across a simulated replica restart.
 
@@ -65,8 +95,22 @@ def bench_mozart_warm_start(n=500_000):
         plan_cache.clear()               # "restart": drop all in-memory state
         restart_us = time_fn(serve_once, warmup=0, iters=1)
         ctx = serve_once()
+
+        # The same request served through the AOT pipeline API: one pinned
+        # Pipeline owns the context, so a warm __call__ skips the per-request
+        # session setup/teardown AND drives pinned executables (zero planner
+        # calls, zero retraces).  This is the serving hot path.
+        p = mozart.pipeline(lambda: w.black_scholes(**d),
+                            executor="auto", chip=hardware.CPU_HOST,
+                            plan_cache_path=path)
+        p.lower()
+        p.compile()
+        pipeline_us = time_fn(lambda: p(), warmup=1, iters=5)
         record("serve/mozart/warm_start", restart_us,
                f"cold={cold_us:.0f};tuning={tune_us:.0f};steady={steady_us:.0f};"
+               f"pipeline={pipeline_us:.0f};"
+               f"pipeline_vs_session={steady_us / max(pipeline_us, 1e-9):.2f}x;"
+               f"pipeline_warm={p.warm()};"
                f"restart_vs_cold={cold_us / max(restart_us, 1e-9):.2f}x;"
                f"picks={picks};"
                f"replay_planner_calls={ctx.stats['planner_calls']};"
@@ -75,6 +119,7 @@ def bench_mozart_warm_start(n=500_000):
 
 def main(quick=False):
     bench_mozart_warm_start(n=500_000 // (4 if quick else 1))
+    bench_decode_drivers(max_new=8 if quick else 16)
     for arch in ("rwkv6-1.6b", "gemma3-4b", "olmoe-1b-7b"):
         bench_arch(arch, batches=(1, 4) if not quick else (2,))
 

@@ -1,7 +1,8 @@
-"""Benchmark harness helpers: timing, CSV rows, executor matrix."""
+"""Benchmark harness helpers: timing, CSV rows, JSON dump, executor matrix."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
@@ -13,6 +14,15 @@ ROWS: list[tuple[str, float, str]] = []
 def record(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def dump_json(path: str) -> None:
+    """Write every recorded row as JSON (CI uploads this artifact so run-over-
+    run perf trajectories are diffable without scraping stdout)."""
+    payload = [{"name": n, "us_per_call": us, "derived": d}
+               for n, us, d in ROWS]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
 
 
 def time_fn(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:

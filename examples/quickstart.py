@@ -48,6 +48,23 @@ def main():
     print(f"stats: {dict(ctx.stats)}")
     assert abs(result - expected) / expected < 1e-5
 
+    # --- 5. the AOT pipeline API: lower / compile / call -------------------
+    # When the program is fixed (serving replicas), skip per-call planning
+    # and retracing entirely: lower once, compile once, then every call only
+    # splits, drives the pinned compiled drivers, and merges.
+    def program(x, y):
+        c = anp.multiply(anp.exp(saxpy(x, y)), 0.5)
+        return total(c)
+
+    p = mozart.pipeline(program, executor="auto")
+    p.lower(x, y)                      # dataflow graph + plan, no execution
+    p.compile()                        # pin batches, executors, executables
+    result = float(p(x, y))            # warm: zero planner calls, 0 retraces
+    print(f"pipeline={result:.2f} warm={p.warm()} "
+          f"last_call={p.last_call_stats}")
+    assert p.last_call_stats["jit_traces"] == 0
+    assert abs(result - expected) / expected < 1e-5
+
 
 if __name__ == "__main__":
     main()

@@ -6,6 +6,7 @@ and the pipelined/parallel executors (Mozart).
 
 Public API:
     mozart.session / configure / evaluate      — runtime scope
+    mozart.pipeline / Pipeline                 — AOT lower/compile/call
     splittable / annotate                      — attach SAs to functions
     split types & specs                        — Along, Broadcast(_), Generic,
                                                  Unknown, Reduce, Pytree, Custom
@@ -14,6 +15,7 @@ Public API:
 from repro.core import runtime as mozart
 from repro.core.annotation import SA, AnnotatedFn, annotate, splittable
 from repro.core.future import Future
+from repro.core.pipeline import Pipeline
 from repro.core.split_types import (
     BROADCAST,
     Along,
@@ -47,7 +49,7 @@ from repro.core.stage_exec import (
 )
 
 __all__ = [
-    "mozart", "SA", "AnnotatedFn", "annotate", "splittable", "Future",
+    "mozart", "SA", "AnnotatedFn", "annotate", "splittable", "Future", "Pipeline",
     "BROADCAST", "Along", "ArraySplit", "Broadcast", "Concat", "ConcatSplit",
     "Custom", "Generic", "GenericVar", "Pytree", "PytreeSplit", "Reduce",
     "ReduceSplit", "RuntimeInfo", "ScalarSplit", "SplitSpec", "SplitType",

@@ -61,12 +61,24 @@ class AnnotatedFn:
         self.name = name or getattr(fn, "__name__", "fn")
         self.signature = inspect.signature(fn)
         self._jitted: Callable | None = None
+        self._aval_cache: dict[tuple, Any] = {}
 
     # -- plain execution ----------------------------------------------------
     @property
     def jitted(self) -> Callable:
         if self._jitted is None:
-            self._jitted = jax.jit(self.fn, static_argnames=self.sa.static or None)
+            from repro.core.stage_exec import note_trace
+
+            inner = self.fn
+
+            @functools.wraps(inner)
+            def counted(*args, **kwargs):
+                # Python body only runs while jax is TRACING; compiled-cache
+                # hits never execute it — the counter counts (re)traces.
+                note_trace()
+                return inner(*args, **kwargs)
+
+            self._jitted = jax.jit(counted, static_argnames=self.sa.static or None)
         return self._jitted
 
     def call_eager(self, bound: dict[str, Any]) -> Any:
@@ -102,15 +114,59 @@ class AnnotatedFn:
         return f"AnnotatedFn({self.name})"
 
     # -- SA machinery ---------------------------------------------------------
+    def _aval_key(self, bound_avals: dict[str, Any]) -> tuple | None:
+        """Hashable identity of one abstract call, or None (uncacheable).
+
+        Statics are keyed by value (they are closed over the traced
+        function); everything else by pytree structure + leaf shapes/dtypes
+        only — ``jax.eval_shape`` never observes non-static values, so two
+        calls with equal keys have equal output avals."""
+        parts = []
+        for name, v in bound_avals.items():
+            if name in self.sa.static:
+                try:
+                    hash(v)
+                except TypeError:
+                    return None
+                parts.append((name, "static", v))
+                continue
+            leaves, treedef = jax.tree_util.tree_flatten(v)
+            leaf_ids = []
+            for l in leaves:
+                shape = getattr(l, "shape", None)
+                dtype = getattr(l, "dtype", None)
+                if shape is None or dtype is None:
+                    leaf_ids.append(("py", type(l).__name__))
+                else:
+                    leaf_ids.append((tuple(shape), str(dtype)))
+            parts.append((name, str(treedef), tuple(leaf_ids)))
+        return tuple(parts)
+
     def abstract_eval(self, bound_avals: dict[str, Any]) -> Any:
-        """Output aval via jax.eval_shape, statics closed over."""
+        """Output aval via jax.eval_shape, statics closed over.
+
+        Cached per aval structure: re-registering the same call shape (every
+        warm ``mozart.pipeline`` call re-captures its graph) must not re-pay
+        a whole-function abstract trace — for model-sized functions that
+        trace IS the per-call cost."""
+        key = self._aval_key(bound_avals)
+        if key is not None:
+            hit = self._aval_cache.get(key)
+            if hit is not None:
+                return hit
+
         statics = {k: bound_avals[k] for k in self.sa.static}
         arrs = {k: v for k, v in bound_avals.items() if k not in self.sa.static}
 
         def f(**kw):
             return self.fn(**kw, **statics)
 
-        return jax.eval_shape(f, **arrs)
+        out = jax.eval_shape(f, **arrs)
+        if key is not None:
+            if len(self._aval_cache) > 128:      # runaway-shape backstop
+                self._aval_cache.clear()
+            self._aval_cache[key] = out
+        return out
 
     def construct_types(self, bound: dict[str, Any], avals: dict[str, Any], out_aval):
         """Run every split-type constructor for one call (paper §3.2)."""

@@ -108,7 +108,9 @@ def analytic_seconds(name: str, f: StageFeatures, chip: hardware.Chip) -> float:
     total_bytes = max(f.n, 1) * f.elem_bytes
     bw = chip.hbm_bandwidth
     compute = f.n * f.flops_per_elem / chip.peak_bf16_flops
-    dispatch = chip.dispatch_overhead_s
+    # Online-calibrated: the hardcoded Chip constant blended with a once-per-
+    # process measurement of a real jitted no-op dispatch (ROADMAP follow-up).
+    dispatch = hardware.effective_dispatch_overhead_s(chip)
     est_batch = hardware.mozart_batch_elements(f.elem_bytes, chip)
     chunks = max(1, math.ceil(max(f.n, 1) / max(est_batch, 1)))
     stream = max(total_bytes / bw, compute)

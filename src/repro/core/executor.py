@@ -21,6 +21,11 @@ Strategies registered here (see ``core/stage_exec.py`` for the registry):
 
 ``"sharded"`` (mesh scale-out) and ``"pallas"`` (TPU split-pipeline kernel)
 live in ``core/sharded.py`` / ``core/pallas_exec.py``.
+
+The jitted drivers built here are *capture-safe* (closed over ``chain_plan``
+and canonical env keys, never over a Stage or concrete arrays) and pinned
+into the plan cache via ``pinned_jit``: warm executions of a cached plan
+reuse the same compiled executable — zero retraces (``note_trace``).
 """
 
 from __future__ import annotations
@@ -35,14 +40,17 @@ from repro.core.stage_exec import (
     PedanticError,
     StageExecutor,
     batch_ranges,
+    chain_plan,
     chunk_env_for,
     effective_elements,
     finish_stage,
     get_executor,
     has_dynamic,
-    node_kwargs,
+    note_trace,
+    pinned_jit,
     register_executor,
     run_chain,
+    run_plan,
     split_axis_of,
     stage_num_elements,
 )
@@ -60,30 +68,23 @@ class EagerExecutor(StageExecutor):
     tunable = False
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
-        env = dict(concrete)
+        env = {stage.ckey(key): v for key, v in concrete.items()}
+        run_chain(stage, env, jit_each=True)
         for node in stage.nodes:
-            kw = node_kwargs(node, stage, env)
-            if getattr(node.fn.sa, "dynamic", False) or node.out_aval is None:
-                res = node.fn.call_raw(kw)
-            else:
-                res = node.fn.jitted(**kw)
-            env[("node", node.id)] = res
-            node.result = res
+            node.result = env[stage.out_key(node)]
             node.done = True
             ctx.stats["calls"] += 1
 
 
-def _stage_cached_jit(stage: Stage, key: str, build: Callable) -> Callable:
-    """One jitted driver per Stage instance: repeated executions of the same
-    stage (auto-tuner candidates, warmup-then-time) hit jax's compile cache
-    instead of retracing a fresh closure every call."""
-    cache = getattr(stage, "_jit_cache", None)
-    if cache is None:
-        cache = stage._jit_cache = {}
-    fn = cache.get(key)
-    if fn is None:
-        fn = cache[key] = jax.jit(build())
-    return fn
+def _build_fused_driver(stage: Stage, esc: tuple[int, ...]) -> Callable:
+    plan = chain_plan(stage)
+
+    def fused_driver(env):
+        note_trace()
+        run_plan(plan, env)
+        return {p: env[("n", p)] for p in esc}
+
+    return jax.jit(fused_driver)
 
 
 class ChunkedExecutor(StageExecutor):
@@ -101,27 +102,24 @@ class ChunkedExecutor(StageExecutor):
         ranges = batch_ranges(n, batch)
         ctx.stats["chunks"] += len(ranges)
 
+        esc = tuple(stage.escape_positions())
         fused_fn: Callable | None = None
         if mode == "fused":
-            def build():
-                def fused_fn_impl(env):
-                    run_chain(stage, env, jit_each=False)
-                    return {nid: env[("node", nid)] for nid in stage.escaping}
-                return fused_fn_impl
-            fused_fn = _stage_cached_jit(stage, "fused", build)
+            fused_fn = pinned_jit(stage, ctx, "fused", (esc,),
+                                  lambda: _build_fused_driver(stage, esc))
 
-        partials: dict[int, list[Any]] = {nid: [] for nid in stage.escaping}
+        partials: dict[int, list[Any]] = {p: [] for p in esc}
         for (s, e) in ranges:
             env = chunk_env_for(stage, concrete, s, e, ctx.pedantic)
             if mode == "pipelined":
                 run_chain(stage, env, jit_each=True)
                 ctx.stats["calls"] += len(stage.nodes)
-                outs = {nid: env[("node", nid)] for nid in stage.escaping}
+                outs = {p: env[("n", p)] for p in esc}
             else:
                 outs = fused_fn(env)
                 ctx.stats["calls"] += 1
-            for nid, v in outs.items():
-                partials[nid].append(v)
+            for p, v in outs.items():
+                partials[p].append(v)
             if ctx.log:
                 print(f"[mozart] stage {stage.id} chunk [{s},{e}) done")
         finish_stage(stage, partials)
@@ -139,6 +137,38 @@ class FusedExecutor(ChunkedExecutor):
     """Whole per-chunk chain traced into one jitted function."""
 
     mode = "fused"
+
+
+def _build_scan_driver(stage: Stage, esc: tuple[int, ...],
+                       split_axes: dict[tuple, int],
+                       out_axes: dict[int, int | None]) -> Callable:
+    plan = chain_plan(stage)
+
+    def chain_fn(split_vals: dict, bcast_env: dict):
+        env = dict(bcast_env)
+        for key, v in split_vals.items():
+            ax = split_axes[key]
+            env[key] = jax.tree_util.tree_map(
+                lambda l: jnp.moveaxis(l, 0, ax) if ax else l, v)
+        run_plan(plan, env)
+        outs = {}
+        for p in esc:
+            ax = out_axes[p]
+            o = env[("n", p)]
+            if ax is not None:
+                o = jax.tree_util.tree_map(
+                    lambda l: jnp.moveaxis(l, ax, 0) if ax else l, o)
+            outs[p] = o
+        return outs
+
+    def driver(stacked_inputs: dict, bcast_env: dict):
+        # Broadcast values ride along as a real jit argument (not a closure
+        # capture): the pinned executable must not bake one call's scalars
+        # into the compiled program.
+        note_trace()
+        return jax.lax.map(lambda sv: chain_fn(sv, bcast_env), stacked_inputs)
+
+    return jax.jit(driver)
 
 
 @register_executor("scan")
@@ -188,54 +218,43 @@ class ScanExecutor(StageExecutor):
                 return main
             return jax.tree_util.tree_map(stack_leaf, v)
 
-        stacked_inputs = {key: stacked(key) for key in split_keys}
-        bcast_inputs = {k: concrete[k] for k, si in stage.inputs.items()
-                        if not si.split_type.splittable}
+        stacked_inputs = {stage.ckey(key): stacked(key) for key in split_keys}
+        bcast_env = {stage.ckey(k): concrete[k] for k, si in stage.inputs.items()
+                     if not si.split_type.splittable}
 
-        def build():
-            def chain_fn(split_vals: dict):
-                env = dict(bcast_inputs)
-                for key, v in split_vals.items():
-                    ax = split_axis_of(stage.inputs[key].split_type)
-                    env[key] = jax.tree_util.tree_map(
-                        lambda l: jnp.moveaxis(l, 0, ax) if ax else l, v)
-                run_chain(stage, env, jit_each=False)
-                outs = {}
-                for nid in stage.escaping:
-                    ax = split_axis_of(stage.out_types[nid])
-                    o = env[("node", nid)]
-                    if ax is not None:
-                        o = jax.tree_util.tree_map(lambda l: jnp.moveaxis(l, ax, 0) if ax else l, o)
-                    outs[nid] = o
-                return outs
+        esc = tuple(stage.escape_positions())
+        split_axes = {stage.ckey(k): split_axis_of(stage.inputs[k].split_type)
+                      for k in split_keys}
+        out_axes = {stage.pos[nid]: split_axis_of(stage.out_types[nid])
+                    for nid in stage.escaping}
+        driver = pinned_jit(
+            stage, ctx, "scan", (esc, batch),
+            lambda: _build_scan_driver(stage, esc, split_axes, out_axes))
 
-            def driver(stacked_inputs):
-                return jax.lax.map(chain_fn, stacked_inputs)
-            return driver
-
-        driver = _stage_cached_jit(stage, "scan", build)
-
-        stacked_outs = driver(stacked_inputs) if n_chunks else {nid: None for nid in stage.escaping}
+        stacked_outs = driver(stacked_inputs, bcast_env) if n_chunks \
+            else {p: None for p in esc}
         ctx.stats["chunks"] += n_chunks + (1 if n_main < n else 0)
         ctx.stats["calls"] += 1
 
-        partials: dict[int, list[Any]] = {nid: [] for nid in stage.escaping}
+        partials: dict[int, list[Any]] = {p: [] for p in esc}
         for nid in stage.escaping:
+            p = stage.pos[nid]
             t = stage.out_types[nid]
             ax = split_axis_of(t)
             if n_chunks:
-                so = stacked_outs[nid]
+                so = stacked_outs[p]
                 if ax is not None:
                     def unstack(l):
                         flat = l.reshape((n_chunks * batch,) + l.shape[2:])
                         return jnp.moveaxis(flat, 0, ax) if ax else flat
-                    partials[nid].append(jax.tree_util.tree_map(unstack, so))
+                    partials[p].append(jax.tree_util.tree_map(unstack, so))
                 else:  # ReduceSplit etc.: merge over the stacked leading dim
-                    pieces = [jax.tree_util.tree_map(lambda l: l[i], so) for i in range(n_chunks)]
-                    partials[nid].extend(pieces)
+                    pieces = [jax.tree_util.tree_map(lambda l: l[i], so)
+                              for i in range(n_chunks)]
+                    partials[p].extend(pieces)
         if n_main < n:  # ragged tail
             env = chunk_env_for(stage, concrete, n_main, n, ctx.pedantic)
             run_chain(stage, env, jit_each=False)
             for nid in stage.escaping:
-                partials[nid].append(env[("node", nid)])
+                partials[stage.pos[nid]].append(env[("n", stage.pos[nid])])
         finish_stage(stage, partials)

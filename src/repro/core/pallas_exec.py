@@ -11,21 +11,29 @@ Eligibility (checked, with graceful fallback to the fused executor):
 The stage chain itself is *reused as-is*: the kernel body calls each
 annotated function's original implementation on VMEM-resident tiles — the
 library function is still unmodified, it simply runs on a (1, BLOCK) block.
+
+The whole kernel launch (pad → pallas_call → unpad/combine) is wrapped in
+one jitted driver and pinned into the plan cache (``pinned_jit``), so warm
+executions of a cached plan reuse the compiled program instead of re-tracing
+``pallas_call`` every evaluation.
 """
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable
 
 import jax
 
 from repro.core import split_types as st
 from repro.core.graph import NodeRef
-from repro.core.planner import Stage, _value_key
+from repro.core.planner import Stage
 from repro.core.stage_exec import (
     StageExecutor,
+    chain_plan,
     effective_elements,
     get_executor,
+    note_trace,
+    pinned_jit,
     register_executor,
     stage_num_elements,
 )
@@ -72,10 +80,51 @@ def _eligible(stage: Stage, concrete: dict[tuple, Any]) -> bool:
     return True
 
 
-def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
-                             executor: StageExecutor | None = None) -> bool:
+def _build_pallas_driver(stage: Stage, split_ckeys: list[tuple],
+                         bcast_ckeys: list[tuple], esc_pos: list[int],
+                         out_kinds: list[tuple[str, str]], out_dtypes: list,
+                         batch: int, interpret: bool) -> Callable:
     from repro.kernels.split_pipeline import split_pipeline_call
 
+    plan = chain_plan(stage)
+    reduce_keys = {("n", stage.pos[n.id]) for n in stage.nodes
+                   if isinstance(stage.out_types[n.id], st.ReduceSplit)}
+
+    def chain_fn(blocks, bcasts):
+        env: dict[Any, Any] = dict(zip(split_ckeys, blocks))
+        env.update(zip(bcast_ckeys, bcasts))
+        reduce_src: dict[tuple, Any] = {}
+        for fn, out_key, srcs, _raw in plan:
+            kw = {}
+            src = None
+            for name, key, static in srcs:
+                if key is None:
+                    kw[name] = static
+                    continue
+                kw[name] = env[key]
+                if src is None:
+                    src = kw[name]
+            env[out_key] = fn.fn(**kw)        # unmodified library fn
+            if out_key in reduce_keys:
+                # The kernel applies the masked reduction itself (padding must
+                # be excluded), so hand it the PRE-reduction block.
+                reduce_src[out_key] = src
+        outs = []
+        for p, (kind, _) in zip(esc_pos, out_kinds):
+            outs.append(reduce_src[("n", p)] if kind == "reduce" else env[("n", p)])
+        return outs
+
+    def driver(split_vals, bcast_vals):
+        note_trace()
+        return split_pipeline_call(
+            chain_fn, split_vals, bcast_vals, out_kinds, out_dtypes,
+            block_elems=batch, interpret=interpret)
+
+    return jax.jit(driver)
+
+
+def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
+                             executor: StageExecutor | None = None) -> bool:
     if not _eligible(stage, concrete):
         return False
 
@@ -91,6 +140,7 @@ def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
     batch = executor.choose_batch(stage, concrete, ctx, n)
 
     escape_ids = sorted(stage.escaping)
+    esc_pos = [stage.pos[nid] for nid in escape_ids]
     out_kinds = []
     out_dtypes = []
     for nid in escape_ids:
@@ -102,47 +152,16 @@ def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
             out_kinds.append(("concat", ""))
         out_dtypes.append(node.out_aval.dtype)
 
-    def chain_fn(blocks, bcasts):
-        env: dict[Any, Any] = {}
-        for k, b in zip(split_keys, blocks):
-            env[k] = b
-        for k, b in zip(bcast_keys, bcasts):
-            env[k] = b
-        reduce_src: dict[int, Any] = {}
-        for node in stage.nodes:
-            kw = {}
-            src = None
-            for name, v in node.bound.items():
-                if name in node.fn.sa.static:
-                    kw[name] = v
-                    continue
-                if isinstance(v, NodeRef) and ("node", v.node_id) in env:
-                    kw[name] = env[("node", v.node_id)]
-                else:
-                    kw[name] = env[_value_key(v)]
-                if src is None:
-                    src = kw[name]
-            if isinstance(stage.out_types[node.id], st.ReduceSplit):
-                # The kernel applies the masked reduction itself (padding must
-                # be excluded), so hand it the PRE-reduction block.
-                reduce_src[node.id] = src
-                env[("node", node.id)] = node.fn.fn(**kw)
-            else:
-                env[("node", node.id)] = node.fn.fn(**kw)  # unmodified library fn
-        outs = []
-        for nid, (kind, _) in zip(escape_ids, out_kinds):
-            outs.append(reduce_src[nid] if kind == "reduce" else env[("node", nid)])
-        return outs
+    interpret = jax.default_backend() != "tpu"
+    driver = pinned_jit(
+        stage, ctx, "pallas", (tuple(esc_pos), batch, interpret),
+        lambda: _build_pallas_driver(
+            stage, [stage.ckey(k) for k in split_keys],
+            [stage.ckey(k) for k in bcast_keys], esc_pos,
+            out_kinds, out_dtypes, batch, interpret))
 
-    results = split_pipeline_call(
-        chain_fn,
-        [concrete[k] for k in split_keys],
-        [concrete[k] for k in bcast_keys],
-        out_kinds,
-        out_dtypes,
-        block_elems=batch,
-        interpret=(jax.default_backend() != "tpu"),
-    )
+    results = driver([concrete[k] for k in split_keys],
+                     [concrete[k] for k in bcast_keys])
     for nid, res in zip(escape_ids, results):
         node = next(nd for nd in stage.nodes if nd.id == nid)
         node.result = res

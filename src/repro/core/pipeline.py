@@ -1,0 +1,240 @@
+"""The AOT pipeline API: ``mozart.pipeline`` — trace → plan → compile → call.
+
+``mozart.session`` scopes *configuration* and evaluates whatever lazy graph
+the enclosed code happens to build; every knob of the runtime is re-resolved
+per evaluation.  For serving-shaped workloads the pipeline is fixed and the
+per-call budget is tiny, so this module provides the ahead-of-time analogue
+of ``jax.jit``'s ``lower``/``compile`` protocol over a whole Mozart program:
+
+    p = mozart.pipeline(fn, executor="auto", plan_cache_path="plans.json")
+    p.lower(x, y)        # build the dataflow graph once, resolve a PlanEntry
+    p.compile()          # pin batches, executors AND compiled executables
+    out = p(x, y)        # hot path: split -> drive pinned drivers -> merge
+
+* ``lower(*args)`` traces ``fn`` lazily (nothing executes), fingerprints the
+  captured graph and resolves its plan-cache entry — planning happens here,
+  never on the hot path.
+* ``compile()`` runs the pipeline on the lowered example until it reaches a
+  fixed point: the chunk-size tuner has pinned, ``auto`` has measured and
+  pinned per-stage executors, and every per-stage compiled executable (the
+  fused/scan jitted drivers, Pallas launchers, ``shard_map`` closures) is
+  built and pinned into the plan entry's executable table.  Executables are
+  keyed by stage POSITION (``Stage.ckey``), not per-call node ids, so they
+  are reused verbatim by later calls.
+* ``__call__`` is the steady-state path: re-capture the (cheap, Python-level)
+  graph, hit the plan cache, split inputs, drive the pinned executables and
+  merge — zero planner calls and zero jit retraces, asserted via
+  ``stage_exec.trace_count()`` deltas in ``last_call_stats["jit_traces"]``.
+
+``mozart.session`` itself is reimplemented on top of this class: a session is
+an anonymous Pipeline's ``scope()`` (see ``runtime.session``), so both entry
+points share one lifecycle and one cache.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable
+
+from repro.core.future import Future
+from repro.core.runtime import MozartContext, _stack
+
+#: compile() runs at most this many passes while converging to the pinned
+#: steady state (plan -> measure/tune -> compile real shapes -> quiescent).
+MAX_COMPILE_PASSES = 6
+
+#: per-call counters that must all be zero for a call to count as "warm".
+WARM_STATS = ("planner_calls", "autotuned_stages", "auto_measured_stages",
+              "jit_traces")
+
+
+def _force(out: Any) -> Any:
+    """Materialize every Future in a (possibly nested) return value."""
+    if isinstance(out, Future):
+        return out.value
+    if isinstance(out, (list, tuple)):
+        forced = [_force(o) for o in out]
+        if hasattr(out, "_fields"):              # namedtuple
+            return type(out)(*forced)
+        return type(out)(forced)
+    if isinstance(out, dict):
+        return {k: _force(v) for k, v in out.items()}
+    return out
+
+
+class Pipeline:
+    """An ahead-of-time-compilable Mozart program (see module docstring)."""
+
+    def __init__(self, fn: Callable | None, **config):
+        self.fn = fn
+        self.ctx = MozartContext(**config)
+        self._lock = threading.RLock()
+        self._example: tuple | None = None       # (args, kwargs) from lower()
+        self._entry = None                       # resolved plan_cache.PlanEntry
+        self._n_stages: int | None = None
+        self.compiled = False
+        #: stat deltas of the most recent ``__call__`` (includes
+        #: ``jit_traces``, the stage_exec trace-counter delta).
+        self.last_call_stats: dict[str, int] = {}
+
+    # -- session compatibility ----------------------------------------------
+    @contextlib.contextmanager
+    def scope(self):
+        """Enter this pipeline's context as the ambient Mozart scope.
+
+        ``mozart.session(**cfg)`` is exactly ``Pipeline(None, **cfg).scope()``:
+        annotated calls made inside register against this pipeline's context,
+        evaluation is flushed at scope exit, and (when configured) plans are
+        persisted."""
+        ctx = self.ctx
+        _stack().append(ctx)
+        try:
+            yield ctx
+            ctx.evaluate()                       # flush at scope exit
+            if ctx.plan_cache_path:
+                from repro.core import plan_cache as _pc
+                _pc.save(ctx.plan_cache_path)    # persist plans + decisions
+        finally:
+            _stack().pop()
+
+    # -- AOT lifecycle -------------------------------------------------------
+    def lower(self, *args, **kwargs) -> "Pipeline":
+        """Trace ``fn`` into a dataflow graph and resolve its plan entry.
+
+        Nothing executes: the captured nodes are planned (or matched against
+        the plan cache) and then discarded.  The arguments become the example
+        ``compile()`` specializes to."""
+        self._require_fn()
+        with self._lock:
+            ctx = self.ctx
+            _stack().append(ctx)
+            try:
+                out = self.fn(*args, **kwargs)
+            finally:
+                _stack().pop()
+            pending = ctx.graph.pending()
+            entry = None
+            if pending:
+                from repro.core.plan_cache import lookup_or_plan
+                stages, entry = lookup_or_plan(pending, ctx.graph, ctx)
+                self._n_stages = len(stages)
+            # lower never executes: drop the traced nodes (their Futures die
+            # with `out`) so they cannot leak into the next evaluation.
+            for n in pending:
+                n.done = True
+            del out
+            ctx.graph.prune()
+            self._example = (args, kwargs)
+            self._entry = entry
+            return self
+
+    def compile(self, *args, **kwargs) -> "Pipeline":
+        """Drive the pipeline to its pinned steady state.
+
+        Runs the lowered example repeatedly (bounded by
+        ``MAX_COMPILE_PASSES``) until a pass performs zero planner calls,
+        zero tuning/measurement runs and zero jit traces — at which point
+        every chunk size, executor choice and compiled executable is pinned
+        and subsequent ``__call__``s are pure split/drive/merge."""
+        self._require_fn()
+        if args or kwargs:
+            self._example = (args, kwargs)
+        if self._example is None:
+            raise ValueError(
+                "compile() needs example arguments: call p.lower(*args) "
+                "first or pass them directly: p.compile(*args)")
+        a, kw = self._example
+        for _ in range(MAX_COMPILE_PASSES):
+            self(*a, **kw)
+            if all(self.last_call_stats.get(k, 0) == 0 for k in WARM_STATS):
+                break
+        else:
+            import warnings
+            warnings.warn(
+                f"{self!r} did not reach the warm fixed point after "
+                f"{MAX_COMPILE_PASSES} passes (last call: "
+                f"{self.last_call_stats}); the pipeline is likely "
+                "uncacheable (unfingerprintable values / plan_cache=False) "
+                "and every call will replan", RuntimeWarning, stacklevel=2)
+        if self.ctx.plan_cache_path:
+            from repro.core import plan_cache as _pc
+            _pc.save(self.ctx.plan_cache_path)
+        self.compiled = True
+        return self
+
+    def __call__(self, *args, **kwargs):
+        """Hot path: capture, cache-hit, split, drive pinned drivers, merge."""
+        self._require_fn()
+        from repro.core import stage_exec
+        with self._lock:
+            ctx = self.ctx
+            before = dict(ctx.stats)
+            traces_before = stage_exec.trace_count()
+            _stack().append(ctx)
+            try:
+                out = self.fn(*args, **kwargs)
+                ctx.evaluate()
+            finally:
+                _stack().pop()
+            result = _force(out)
+            ctx.graph.prune()
+            delta = {k: v - before.get(k, 0)
+                     for k, v in ctx.stats.items() if v != before.get(k, 0)}
+            delta["jit_traces"] = stage_exec.trace_count() - traces_before
+            self.last_call_stats = delta
+            return result
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def plan_entry(self):
+        """The resolved plan-cache entry (after ``lower``/first call)."""
+        return self._entry if self._entry is not None else self.ctx._plan_entry
+
+    @property
+    def stats(self):
+        """Cumulative context stats across every call of this pipeline."""
+        return self.ctx.stats
+
+    def warm(self) -> bool:
+        """True when the most recent call ran at pinned steady state."""
+        return bool(self.last_call_stats) and all(
+            self.last_call_stats.get(k, 0) == 0 for k in WARM_STATS)
+
+    def describe(self) -> str:
+        e = self.plan_entry
+        if e is None:
+            return f"Pipeline({getattr(self.fn, '__name__', self.fn)}): not lowered"
+        return (f"Pipeline({getattr(self.fn, '__name__', self.fn)}): "
+                f"{len(e.stage_templates)} stage(s), "
+                f"tuned_batch={dict(e.tuned_batch)}, "
+                f"chosen_exec={dict(e.chosen_exec)}, "
+                f"executables={sorted(e.exec_table())}")
+
+    def _require_fn(self) -> None:
+        if self.fn is None:
+            raise TypeError(
+                "this Pipeline wraps no function (session-scope pipeline); "
+                "construct it as mozart.pipeline(fn, ...)")
+
+    def __repr__(self) -> str:
+        name = getattr(self.fn, "__name__", None) or "session"
+        state = "compiled" if self.compiled else (
+            "lowered" if self._example is not None else "fresh")
+        return f"<mozart.Pipeline {name} [{state}]>"
+
+
+def pipeline(fn: Callable | None = None, **config):
+    """Build a :class:`Pipeline` over ``fn``; usable as a decorator.
+
+        p = mozart.pipeline(my_fn, executor="auto")
+
+        @mozart.pipeline(executor="scan", plan_cache_path="plans.json")
+        def my_fn(x, y): ...
+
+    ``config`` accepts every ``mozart.session`` knob (executor, chip, mesh,
+    batch_elements, plan_cache_path, ...).
+    """
+    if fn is None:
+        return lambda f: Pipeline(f, **config)
+    return Pipeline(fn, **config)

@@ -73,6 +73,15 @@ _lock = threading.Lock()
 _entries: "collections.OrderedDict[tuple, PlanEntry]" = collections.OrderedDict()
 _loaded_paths: set[str] = set()
 
+#: In-process side table of PINNED COMPILED EXECUTABLES (jitted fused/scan
+#: drivers, shard_map closures, Pallas kernel launchers), keyed by the same
+#: persisted fingerprint as the entries.  Executables cannot be serialized,
+#: so they live here rather than on ``PlanEntry``: a process that warm-starts
+#: from ``MOZART_PLAN_CACHE`` rehydrates the entry from disk, compiles each
+#: stage executable exactly once on its first execution, and then replays it
+#: for the life of the process.  Populated by ``stage_exec.pinned_jit``.
+_exec_tables: dict[tuple, dict] = {}
+
 #: monotone version of the persistable state; ``save`` skips the disk write
 #: when the target file already reflects the current version (steady-state
 #: serving sessions save on every exit — almost all are no-ops).
@@ -86,9 +95,11 @@ def _mark_dirty() -> None:
 
 
 def clear() -> None:
-    """Drop every cached plan and reset the global counters (tests)."""
+    """Drop every cached plan and reset the global counters (tests).  Pinned
+    executables go too: ``clear()`` simulates a full process restart."""
     with _lock:
         _entries.clear()
+        _exec_tables.clear()
         stats.clear()
         _loaded_paths.clear()
         _mark_dirty()
@@ -231,14 +242,65 @@ def fingerprint(pending: list[Node], graph: DataflowGraph, ctx) -> tuple | None:
         if aval_fp is None:
             return None
         node_fps.append((n.fn.name, tuple(arg_fps), tuple(type_fps), out_fp, aval_fp))
-    # Mesh geometry is part of the key: under "auto" a pinned `sharded`
-    # choice (or a batch tuned for one mesh extent) must never replay in a
-    # session with a different mesh — or none at all.
+    return context_key_prefix(ctx) + (tuple(node_fps),)
+
+
+def context_key_prefix(ctx) -> tuple:
+    """The context-knob part of every fingerprint: the planning/executor
+    configuration a plan was cached under.  Mesh geometry is included: under
+    "auto" a pinned `sharded` choice (or a batch tuned for one mesh extent)
+    must never replay in a session with a different mesh — or none at all.
+    ``configure()`` uses this prefix to re-key entries when knobs change
+    mid-session (``rekey_config``)."""
     mesh_fp = None
     if ctx.mesh is not None:
         mesh_fp = tuple((str(a), int(ctx.mesh.shape[a])) for a in ctx.data_axes)
-    return (ctx.executor, ctx.chip.name, bool(ctx.pipeline), mesh_fp,
-            tuple(node_fps))
+    return (ctx.executor, ctx.chip.name, bool(ctx.pipeline), mesh_fp)
+
+
+_PREFIX_LEN = 4
+
+
+def rekey_config(old_prefix: tuple, new_prefix: tuple,
+                 only_keys: set | None = None) -> int:
+    """Migrate cached plans across a mid-session ``configure()`` knob change.
+
+    Entries keyed under ``old_prefix`` would never be hit by the reconfigured
+    context again — without this, a knob change silently replans from
+    scratch while fresh entries accumulate beside the stale ones.  Stage
+    *templates* are executor-independent (the planner keys only off the
+    ``pipeline`` flag), so each matching entry is COPIED to ``new_prefix``
+    with its measured state (tuned batches, pinned executors, timings,
+    executables) dropped — it was measured under the old configuration.  The
+    originals stay in place: other sessions and compiled ``Pipeline``s may
+    still be executing under the old configuration, and popping their entry
+    (or its pinned executables) would break their zero-retrace guarantee
+    mid-flight.  A ``pipeline`` flag change alters plan structure itself, so
+    nothing is copied (the new config plans fresh).  ``only_keys`` scopes the
+    copy to the entries the configuring context actually used.  Returns the
+    number of entries re-keyed."""
+    if old_prefix == new_prefix:
+        return 0
+    structural = old_prefix[2] != new_prefix[2]      # pipeline flag
+    moved = 0
+    with _lock:
+        for key in [k for k in _entries if k[:_PREFIX_LEN] == old_prefix]:
+            if only_keys is not None and key not in only_keys:
+                continue
+            if structural:
+                stats["rekey_skipped_structural"] += 1
+                continue
+            new_key = new_prefix + key[_PREFIX_LEN:]
+            if new_key in _entries:
+                continue                             # existing entry wins
+            e = _entries[key]
+            stats["rekeyed"] += 1
+            _entries[new_key] = PlanEntry(
+                key=new_key, stage_templates=e.stage_templates,
+                fns=e.fns, fn_names=e.fn_names, loaded=e.loaded)
+            moved += 1
+        _mark_dirty()
+    return moved
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +403,19 @@ class PlanEntry:
             self.exec_timings.setdefault(stage_id, {})[str(name)] = float(seconds)
         _mark_dirty()
 
+    # -- pinned compiled executables (in-process, keyed by fingerprint) ------
+    def exec_table(self) -> dict:
+        """The entry's compiled-executable table (see ``_exec_tables``).
+
+        Keyed by ``(stage position, kind, *geometry)`` — never by per-call
+        node ids — so every instantiation of this template resolves to the
+        same jitted callable and warm calls never retrace."""
+        t = _exec_tables.get(self.key)
+        if t is None:
+            with _lock:
+                t = _exec_tables.setdefault(self.key, {})
+        return t
+
 
 def _make_templates(stages: list[Stage], pending: list[Node]) -> list[_StageTemplate] | None:
     pos = {n.id: i for i, n in enumerate(pending)}
@@ -439,6 +514,7 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
         if entry.fns is None:
             entry.bind_fns(pending)      # rehydrated entry: bind live identities
         ctx.stats["plan_cache_hits"] += 1
+        _note_entry_key(ctx, key)        # configure() rekeys only owned entries
         # O(graph) template instantiation happens outside the global lock so
         # concurrent sessions on different pipelines don't serialize here.
         return _instantiate(entry, pending, graph), entry
@@ -461,8 +537,20 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
             _entries[key] = entry
             _mark_dirty()
             while len(_entries) > _MAX_ENTRIES:
-                _entries.popitem(last=False)
+                evicted, _ = _entries.popitem(last=False)
+                _exec_tables.pop(evicted, None)
+    _note_entry_key(ctx, key)
     return stages, entry
+
+
+def _note_entry_key(ctx, key: tuple) -> None:
+    """Record that ``ctx`` used the entry at ``key`` (scopes ``configure()``
+    re-keying).  Bounded: when the set outgrows the cache capacity, drop the
+    keys whose entries the LRU has already evicted."""
+    ctx._entry_keys.add(key)
+    if len(ctx._entry_keys) > _MAX_ENTRIES:
+        with _lock:
+            ctx._entry_keys &= set(_entries)
 
 
 # ---------------------------------------------------------------------------
@@ -663,7 +751,8 @@ def _load(path: str) -> tuple[int, int]:
                 _entries[e.key] = e
                 loaded += 1
                 while len(_entries) > _MAX_ENTRIES:
-                    _entries.popitem(last=False)
+                    evicted, _ = _entries.popitem(last=False)
+                    _exec_tables.pop(evicted, None)
     stats["persist_loaded"] += loaded
     if loaded:
         _mark_dirty()

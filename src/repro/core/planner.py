@@ -41,6 +41,33 @@ class Stage:
     escaping: set[int]                       # node ids whose output leaves the stage
     arg_types: dict[tuple[int, str], st.SplitType]  # (node, arg) resolved
 
+    def __post_init__(self):
+        # Position-based canonical env keys.  Runtime value keys — ("ext",
+        # id(v)) and ("node", node_id) — are unique per *call*, so any jitted
+        # driver whose argument env used them would see a fresh pytree
+        # structure every evaluation and retrace.  Canonical keys depend only
+        # on the stage's *shape*: input position and node position, which are
+        # identical across every instantiation of the same plan template.
+        # All executor chunk envs are keyed canonically via ``ckey``.
+        self.canon: dict[tuple, tuple] = {}
+        for i, key in enumerate(self.inputs):
+            self.canon[key] = ("in", i)
+        self.pos: dict[int, int] = {}        # node_id -> position in the stage
+        for j, n in enumerate(self.nodes):
+            self.pos[n.id] = j
+            self.canon[("node", n.id)] = ("n", j)
+
+    def ckey(self, key: tuple) -> tuple:
+        """Canonical (position-based) form of a runtime env key."""
+        return self.canon[key]
+
+    def out_key(self, node: Node) -> tuple:
+        return ("n", self.pos[node.id])
+
+    def escape_positions(self) -> list[int]:
+        """Stage-local positions of escaping nodes, in deterministic order."""
+        return sorted(self.pos[nid] for nid in self.escaping)
+
     def internal(self, node: Node, argname: str) -> bool:
         v = node.bound.get(argname)
         return isinstance(v, NodeRef) and any(n.id == v.node_id for n in self.nodes)

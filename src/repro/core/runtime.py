@@ -67,6 +67,7 @@ class MozartContext:
         self._plan_entry = None                  # active plan_cache.PlanEntry
         self._batch_override: int | None = None  # set by the auto-tuner only
         self._n_cap: int | None = None           # set during sampled tuning only
+        self._entry_keys: set = set()            # cache keys this context used
         if self.plan_cache_path:
             from repro.core.plan_cache import load_once
             load_once(self.plan_cache_path)
@@ -148,29 +149,51 @@ def current_context() -> MozartContext | None:
 
 
 def configure(**kwargs) -> MozartContext:
-    """Reconfigure the innermost context (flushes pending work first)."""
+    """Reconfigure the innermost context (flushes pending work first).
+
+    Plan-cache-aware: when a knob that is part of the plan-cache key changes
+    (executor, chip, mesh/data_axes, pipeline), the entries THIS context has
+    used are re-keyed (copied) to the new configuration so the next
+    evaluation hits the cache instead of replanning — see
+    ``plan_cache.rekey_config``.  Scoped to this context's own entries:
+    other sessions and compiled Pipelines sharing the old configuration keep
+    their entries and pinned executables untouched."""
     ctx = current_context()
-    if ctx is not None:
-        ctx.evaluate()
+    if ctx is None:
+        if kwargs:
+            raise AttributeError("no active Mozart context to configure")
+        return ctx
+    ctx.evaluate()
+    from repro.core import plan_cache as _pc
+    old_prefix = _pc.context_key_prefix(ctx)
     for k, v in kwargs.items():
         if not hasattr(ctx, k):
             raise AttributeError(f"unknown Mozart option {k!r}")
         setattr(ctx, k, v)
+    new_prefix = _pc.context_key_prefix(ctx)
+    if old_prefix != new_prefix and getattr(ctx, "plan_cache", True):
+        ctx.stats["configure_rekeyed"] += _pc.rekey_config(
+            old_prefix, new_prefix, only_keys=ctx._entry_keys)
     return ctx
 
 
 @contextlib.contextmanager
 def session(**kwargs):
-    ctx = MozartContext(**kwargs)
-    _stack().append(ctx)
-    try:
+    """Scope a Mozart configuration (paper-style usage).
+
+    Implemented on top of the AOT pipeline API: a session is an anonymous
+    :class:`repro.core.pipeline.Pipeline`'s ``scope()`` — the same context,
+    evaluation flush and plan persistence drive both entry points."""
+    from repro.core.pipeline import Pipeline
+    with Pipeline(None, **kwargs).scope() as ctx:
         yield ctx
-        ctx.evaluate()                       # flush at scope exit
-        if ctx.plan_cache_path:
-            from repro.core import plan_cache as _pc
-            _pc.save(ctx.plan_cache_path)    # persist plans + pinned decisions
-    finally:
-        _stack().pop()
+
+
+def pipeline(fn=None, **config):
+    """AOT entry point: ``mozart.pipeline(fn, ...)`` with an explicit
+    ``lower → compile → call`` lifecycle.  See ``repro.core.pipeline``."""
+    from repro.core.pipeline import pipeline as _pipeline
+    return _pipeline(fn, **config)
 
 
 def evaluate() -> None:

@@ -7,27 +7,34 @@ associative merge becomes either "already sharded correctly" (concat-style
 merges) or a ``psum``-family collective (ReduceSplit).  Within each device
 the stage still runs the fast-memory chunk loop, so the two memory tiers
 (HBM across devices, VMEM within one) are both handled by the same SA.
+
+The jitted ``shard_map`` closure is built capture-safe (from ``chain_plan``)
+and pinned into the plan cache via ``pinned_jit``; the inner per-shard chunk
+loop participates in chunk-size auto-tuning (``tunable = True``), with
+sample slices rounded to the mesh extent so they stay shardable.
 """
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable
 
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro import hardware
 from repro.core import split_types as st
 from repro.core.planner import Stage
 from repro.core.stage_exec import (
     PedanticError,
+    SAMPLE_CHUNKS,
     StageExecutor,
     batch_ranges,
+    chain_plan,
     effective_elements,
+    note_trace,
+    pinned_jit,
     register_executor,
-    run_chain,
+    run_plan,
     split_axis_of,
-    stage_elem_bytes,
     stage_num_elements,
 )
 
@@ -36,10 +43,36 @@ from repro.core.stage_exec import (
 class ShardedExecutor(StageExecutor):
     """Splits = mesh shards; per-device chunk loop handles the VMEM tier."""
 
-    tunable = False          # batch feeds the inner per-shard loop only
+    tunable = True           # tunes the INNER per-shard chunk loop
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
-        execute_stage_sharded(stage, concrete, ctx)
+        execute_stage_sharded(stage, concrete, ctx, self)
+
+    # -- tuner integration ---------------------------------------------------
+    def _mesh_extent(self, ctx) -> int:
+        m = 1
+        if ctx.mesh is not None:
+            for a in ctx.data_axes:
+                m *= ctx.mesh.shape[a]
+        return m
+
+    def tuning_candidates(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                          est: int, n: int) -> list[int]:
+        # The tuned quantity is the PER-SHARD chunk size: bracket the §5.2
+        # estimate within one local shard's element count.
+        from repro.core.stage_exec import candidate_batches
+        n_local = max(1, n // max(self._mesh_extent(ctx), 1))
+        return candidate_batches(est, n_local)
+
+    def sample_elems(self, ctx, batch: int, n: int) -> int:
+        # Sample slices must stay divisible by the mesh extent or the
+        # shard_map split rejects them: give every shard SAMPLE_CHUNKS
+        # chunks and round to a multiple of the extent.
+        if n <= 0:
+            return 0
+        m = max(self._mesh_extent(ctx), 1)
+        s = min(n, SAMPLE_CHUNKS * batch * m)
+        return max(m, (s // m) * m)
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):
@@ -67,7 +100,53 @@ def _pspec_for(split_type: st.SplitType, ndim: int, axes: tuple[str, ...]):
     return P(*spec)
 
 
-def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
+def _build_sharded_driver(stage: Stage, mesh, axes, in_specs, out_specs,
+                          in_ckeys: list[tuple], in_split_types: list,
+                          esc_pos: list[int], out_types_by_pos: dict,
+                          n_local: int, batch: int, whole: bool) -> Callable:
+    plan = chain_plan(stage)
+    axis_name = axes if len(axes) > 1 else axes[0]
+
+    def local_fn(*vals):
+        note_trace()
+        env = dict(zip(in_ckeys, vals))
+        # Per-device fast-memory chunk loop over the local shard.
+        if whole or batch >= n_local:
+            run_plan(plan, env)
+            chunk_outs = {p: [env[("n", p)]] for p in esc_pos}
+        else:
+            chunk_outs = {p: [] for p in esc_pos}
+            for (s, e) in batch_ranges(n_local, batch):
+                cenv = {}
+                for ck, t in zip(in_ckeys, in_split_types):
+                    cenv[ck] = t.split(env[ck], s, e) if t is not None else env[ck]
+                run_plan(plan, cenv)
+                for p in esc_pos:
+                    chunk_outs[p].append(cenv[("n", p)])
+
+        outs = []
+        for p in esc_pos:
+            t = out_types_by_pos[p]
+            merged = t.merge(chunk_outs[p])
+            if split_axis_of(t) is None:
+                # ReduceSplit & friends: combine partials across shards.
+                if isinstance(t, st.ReduceSplit):
+                    merged = _psum_like(t, merged, axis_name)
+            outs.append(merged)
+        return tuple(outs)
+
+    return jax.jit(
+        _shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=tuple(in_specs),
+            out_specs=tuple(out_specs),
+        )
+    )
+
+
+def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx,
+                          executor: StageExecutor | None = None) -> None:
     mesh = ctx.mesh
     if mesh is None:
         raise ValueError("sharded executor requires mozart.session(mesh=...)")
@@ -81,6 +160,12 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None
         raise PedanticError(
             f"stage element count {n} not divisible by mesh data extent {n_shards}"
         )
+    n_local = n // n_shards
+    from repro.core.stage_exec import get_executor
+    executor = executor or get_executor("sharded")
+    # Inner per-shard chunk size: explicit override > auto-tuner pin > §5.2.
+    batch = executor.choose_batch(stage, concrete, ctx, max(n_local, 1))
+    whole = ctx.inner_executor == "whole"
 
     # Any input/output we cannot express as an axis-sharding falls back to
     # replicated-in / merged-out handling.
@@ -99,6 +184,7 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None
             )
 
     out_ids = sorted(stage.escaping)
+    esc_pos = [stage.pos[nid] for nid in out_ids]
     out_specs = []
     for nid in out_ids:
         t = stage.out_types[nid]
@@ -109,56 +195,30 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx) -> None
         else:
             out_specs.append(jax.tree_util.tree_map(lambda l: P(), aval))
 
-    axis_name = axes if len(axes) > 1 else axes[0]
+    in_ckeys = [stage.ckey(k) for k in in_keys]
+    in_split_types = [stage.inputs[k].split_type
+                      if stage.inputs[k].split_type.splittable else None
+                      for k in in_keys]
+    out_types_by_pos = {stage.pos[nid]: stage.out_types[nid] for nid in out_ids}
 
-    def local_fn(*vals):
-        env = {k: v for k, v in zip(in_keys, vals)}
-        # Per-device fast-memory chunk loop over the local shard.
-        n_local = n // n_shards
-        elem_bytes = stage_elem_bytes(stage, env, n)
-        batch = ctx.batch_elements or hardware.mozart_batch_elements(elem_bytes, ctx.chip)
-        batch = max(1, min(batch, n_local))
-
-        if ctx.inner_executor == "whole" or batch >= n_local:
-            run_chain(stage, env, jit_each=False)
-            chunk_outs = {nid: [env[("node", nid)]] for nid in out_ids}
-        else:
-            chunk_outs = {nid: [] for nid in out_ids}
-            for (s, e) in batch_ranges(n_local, batch):
-                cenv = {}
-                for k in in_keys:
-                    t = stage.inputs[k].split_type
-                    cenv[k] = t.split(env[k], s, e) if t.splittable else env[k]
-                run_chain(stage, cenv, jit_each=False)
-                for nid in out_ids:
-                    chunk_outs[nid].append(cenv[("node", nid)])
-
-        outs = []
-        for nid in out_ids:
-            t = stage.out_types[nid]
-            merged = t.merge(chunk_outs[nid])
-            if split_axis_of(t) is None:
-                # ReduceSplit & friends: combine partials across shards.
-                if isinstance(t, st.ReduceSplit):
-                    merged = _psum_like(t, merged, axis_name)
-            outs.append(merged)
-        return tuple(outs)
-
-    shard_fn = jax.jit(
-        _shard_map(
-            local_fn,
-            mesh=mesh,
-            in_specs=tuple(in_specs),
-            out_specs=tuple(out_specs),
-        )
-    )
+    # The plan-cache key records only mesh axis names/extents; the driver
+    # bakes the concrete Mesh into the shard_map closure, so two same-shape
+    # meshes over DIFFERENT devices must compile separate executables.
+    mesh_devices = tuple(d.id for d in mesh.devices.flat)
+    shard_fn = pinned_jit(
+        stage, ctx, "sharded",
+        (tuple(esc_pos), batch, n_local, whole, mesh_devices),
+        lambda: _build_sharded_driver(
+            stage, mesh, axes, in_specs, out_specs, in_ckeys, in_split_types,
+            esc_pos, out_types_by_pos, n_local, batch, whole))
     results = shard_fn(*[concrete[k] for k in in_keys])
     ctx.stats["sharded_stages"] += 1
-    partials = {nid: [res] for nid, res in zip(out_ids, results)}
     # merge() of a single piece is the identity for concat-style types.
+    by_pos = dict(zip(esc_pos, results))
     for node in stage.nodes:
-        if node.id in partials:
-            node.result = partials[node.id][0]
+        p = stage.pos[node.id]
+        if p in by_pos:
+            node.result = by_pos[p]
         node.done = True
 
 

@@ -144,8 +144,37 @@ def effective_elements(ctx, n: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Per-chunk chain driving
+# Jit trace accounting
 # ---------------------------------------------------------------------------
+
+#: process-global count of jax traces of Mozart-built drivers and annotated
+#: library functions.  The driver bodies call ``note_trace()`` as a Python
+#: side effect: it runs while jax is *tracing*, never on a compiled-cache
+#: hit, so the delta across a call counts exactly the (re)traces that call
+#: caused.  The zero-retrace guarantee of warm ``mozart.pipeline`` calls is
+#: asserted against this counter (tests/test_pipeline.py, the smoke gate).
+_TRACES = 0
+
+
+def note_trace() -> None:
+    global _TRACES
+    _TRACES += 1
+
+
+def trace_count() -> int:
+    return _TRACES
+
+
+# ---------------------------------------------------------------------------
+# Per-chunk chain driving (position-keyed)
+# ---------------------------------------------------------------------------
+#
+# Chunk envs are keyed CANONICALLY — ``("in", input_position)`` for stage
+# inputs and ``("n", node_position)`` for node outputs (``Stage.ckey``) —
+# never by per-call node ids or value ids.  Two instantiations of the same
+# plan template therefore produce envs with the identical pytree structure,
+# which is what lets a pinned jitted driver from an earlier call accept this
+# call's env without retracing.
 
 
 def chunk_env_for(stage: Stage, concrete: dict[tuple, Any], s: int, e: int,
@@ -157,45 +186,99 @@ def chunk_env_for(stage: Stage, concrete: dict[tuple, Any], s: int, e: int,
             piece = si.split_type.split(v, s, e)
             if pedantic and hasattr(piece, "shape") and 0 in piece.shape:
                 raise PedanticError(f"empty split for {key} range [{s},{e})")
-            env[key] = piece
+            env[stage.ckey(key)] = piece
         else:
-            env[key] = v                      # "_" values: pointer copy
+            env[stage.ckey(key)] = v          # "_" values: pointer copy
     return env
 
 
-def node_kwargs(node: Node, stage: Stage, env: dict[tuple, Any]) -> dict[str, Any]:
-    kw: dict[str, Any] = {}
-    for name, v in node.bound.items():
-        if name in node.fn.sa.static:
-            kw[name] = v
-        elif isinstance(v, NodeRef) and ("node", v.node_id) in env:
-            kw[name] = env[("node", v.node_id)]
-        else:
-            kw[name] = env[_value_key(v)]
-    return kw
+def chain_plan(stage: Stage) -> tuple:
+    """Capture-safe driving recipe for the stage chain.
 
-
-def run_chain(stage: Stage, env: dict[tuple, Any], jit_each: bool) -> dict[int, Any]:
-    """Drive one chunk through every function of the stage in order."""
-    outs: dict[int, Any] = {}
+    Per node: ``(fn, out_key, ((argname, env_key | None, static_value), ...),
+    raw)``.  The plan holds only ``AnnotatedFn`` identities, static argument
+    values and canonical env keys — no concrete call data and no ``Stage`` —
+    so a jitted driver closed over it can be pinned in the plan cache and
+    reused by every later instantiation of the same template without
+    retaining the first call's input arrays.
+    """
+    cached = getattr(stage, "_chain_plan", None)
+    if cached is not None:
+        return cached
+    steps = []
     for node in stage.nodes:
-        kw = node_kwargs(node, stage, env)
-        if getattr(node.fn.sa, "dynamic", False) or node.out_aval is None:
-            res = node.fn.call_raw(kw)
+        srcs = []
+        for name, v in node.bound.items():
+            if name in node.fn.sa.static:
+                srcs.append((name, None, v))
+            else:
+                srcs.append((name, stage.ckey(_value_key(v)), None))
+        raw = getattr(node.fn.sa, "dynamic", False) or node.out_aval is None
+        steps.append((node.fn, stage.out_key(node), tuple(srcs), raw))
+    stage._chain_plan = tuple(steps)
+    return stage._chain_plan
+
+
+def run_plan(plan: tuple, env: dict[tuple, Any], jit_each: bool = False) -> None:
+    """Drive one chunk env through every function of a chain plan in order."""
+    for fn, out_key, srcs, raw in plan:
+        kw = {name: (static if key is None else env[key])
+              for name, key, static in srcs}
+        if raw:
+            res = fn.call_raw(kw)
         elif jit_each:
-            res = node.fn.jitted(**kw)        # black-box library call
+            res = fn.jitted(**kw)             # black-box library call
         else:
-            res = node.fn.fn(**kw)            # traced into enclosing jit
-        env[("node", node.id)] = res
-        outs[node.id] = res
-    return outs
+            res = fn.fn(**kw)                 # traced into enclosing jit
+        env[out_key] = res
+
+
+def run_chain(stage: Stage, env: dict[tuple, Any], jit_each: bool) -> None:
+    """Drive one (canonically keyed) chunk env through the stage chain."""
+    run_plan(chain_plan(stage), env, jit_each=jit_each)
 
 
 def finish_stage(stage: Stage, partials: dict[int, list[Any]]) -> None:
+    """Merge per-chunk partials (keyed by stage-local node POSITION)."""
     for node in stage.nodes:
-        if node.id in partials:
-            node.result = stage.out_types[node.id].merge(partials[node.id])
+        p = stage.pos[node.id]
+        if p in partials:
+            node.result = stage.out_types[node.id].merge(partials[p])
         node.done = True
+
+
+# ---------------------------------------------------------------------------
+# Pinned compiled executables
+# ---------------------------------------------------------------------------
+
+
+def pinned_jit(stage: Stage, ctx, kind: str, extra_key: tuple,
+               build: Callable[[], Callable]) -> Callable:
+    """One compiled driver per (plan entry, stage position, kind, extra_key).
+
+    When the stage belongs to a cached plan, the driver built by ``build()``
+    is pinned into the plan cache's in-process executable table
+    (``PlanEntry.exec_table``, keyed by the persisted fingerprint): every
+    later instantiation of the same template — this session or any other —
+    reuses the SAME callable, so warm calls hit jax's compile cache instead
+    of retracing a fresh closure.  ``build`` must return a capture-safe
+    callable (close over ``chain_plan``, never over the Stage or concrete
+    values).  Without an entry (uncacheable pipeline) the driver is cached on
+    the Stage instance, preserving same-call reuse (tuner candidates,
+    warmup-then-time runs).
+    """
+    key = (stage.id, kind) + tuple(extra_key)
+    entry = getattr(ctx, "_plan_entry", None)
+    table = entry.exec_table() if entry is not None else None
+    if table is None:
+        table = getattr(stage, "_jit_cache", None)
+        if table is None:
+            table = stage._jit_cache = {}
+    fn = table.get(key)
+    if fn is None:
+        fn = table[key] = build()
+        ctx.stats["exec_builds"] += 1
+    return fn
 
 
 def has_dynamic(stage: Stage) -> bool:
@@ -317,7 +400,7 @@ class StageExecutor:
         try:
             n = stage_num_elements(stage, concrete, ctx.pedantic)
             est = self.estimate_batch(stage, concrete, ctx, n)
-            cands = candidate_batches(est, n)
+            cands = self.tuning_candidates(stage, concrete, ctx, est, n)
             if len(cands) == 1:
                 entry.pin(stage.id, cands[0])
                 pinned = True
@@ -344,6 +427,18 @@ class StageExecutor:
         self.execute(stage, concrete, ctx)
 
     # -- sampled measurement ------------------------------------------------
+    def tuning_candidates(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                          est: int, n: int) -> list[int]:
+        """Chunk-size candidates the tuner measures (§5.2 bracket by default;
+        executors with extra geometry constraints — e.g. ``sharded``'s
+        per-shard loop — override to reshape the candidate space)."""
+        return candidate_batches(est, n)
+
+    def sample_elems(self, ctx, batch: int, n: int) -> int:
+        """Elements one timed sample re-executes.  ``sharded`` rounds this to
+        the mesh extent so sample slices stay shardable."""
+        return min(n, SAMPLE_CHUNKS * batch) if n > 0 else 0
+
     def sampled_time(self, stage: Stage, concrete: dict[tuple, Any], ctx,
                      batch: int, n: int) -> float:
         """Estimated seconds for a full stage execution at ``batch``, measured
@@ -355,7 +450,7 @@ class StageExecutor:
         ``ctx.stats["tuning_sample_elems"]`` accrues the elements actually
         re-executed so tests can assert the overhead bound structurally."""
         batch = max(1, min(batch, n)) if n > 0 else 1
-        s = min(n, SAMPLE_CHUNKS * batch) if n > 0 else 0
+        s = self.sample_elems(ctx, batch, n)
         sample: dict[tuple, Any] = {}
         for key, si in stage.inputs.items():
             v = concrete[key]

@@ -64,6 +64,50 @@ CPU_HOST = Chip(
 TARGET = TPU_V5E
 
 
+# ---------------------------------------------------------------------------
+# Online dispatch-overhead calibration
+# ---------------------------------------------------------------------------
+#
+# ``Chip.dispatch_overhead_s`` is a guess baked into a dataclass; the actual
+# per-dispatch cost (Python jit-call + XLA launch) varies by an order of
+# magnitude across hosts and runtime versions.  The cost model therefore
+# blends the constant with a per-process measurement of a tiny jitted no-op:
+# the geometric mean keeps the prior's scale when the measurement is noisy
+# while still correcting a constant that is wrong by 10x.
+
+_measured_dispatch_s: float | None = None
+
+
+def measured_dispatch_overhead_s() -> float:
+    """Wall seconds of one warm jitted no-op dispatch, measured once per
+    process (median of a handful of calls; first call pays one compile)."""
+    global _measured_dispatch_s
+    if _measured_dispatch_s is None:
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        f = jax.jit(lambda x: x + 1)
+        x = jnp.zeros((), jnp.float32)
+        jax.block_until_ready(f(x))          # compile outside the timed loop
+        samples = []
+        for _ in range(7):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(x))
+            samples.append(time.perf_counter() - t0)
+        _measured_dispatch_s = max(sorted(samples)[len(samples) // 2], 1e-9)
+    return _measured_dispatch_s
+
+
+def effective_dispatch_overhead_s(chip: Chip = TARGET) -> float:
+    """Per-dispatch overhead the cost model should charge: the chip constant
+    blended (geometric mean) with the measured per-process no-op dispatch."""
+    import math
+
+    return math.sqrt(chip.dispatch_overhead_s * measured_dispatch_overhead_s())
+
+
 def fast_memory_bytes(chip: Chip = TARGET) -> int:
     """Size of the 'cache' tier Mozart batches must fit in."""
     return chip.vmem_bytes

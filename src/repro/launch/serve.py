@@ -5,8 +5,17 @@ each slot decodes until its request finishes, then a queued request takes
 the slot at the next refill boundary.  The decode step is the same
 ``serve_step`` that the dry-run lowers for the production mesh.
 
+Two drivers:
+
+* ``--driver jit``     — raw ``jax.jit`` around prefill/decode (baseline).
+* ``--driver mozart``  — the decode loop rides the AOT pipeline API
+  (``mozart.pipeline``): prefill and decode are annotated library calls,
+  lowered + compiled ahead of the request loop, and every decode step is a
+  warm ``Pipeline.__call__`` (zero planner calls, zero retraces).  With
+  ``MOZART_PLAN_CACHE`` set, a restarted replica replays the pinned plan.
+
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
-        --requests 8 --batch 4 --prompt-len 16 --max-new 16
+        --requests 8 --batch 4 --prompt-len 16 --max-new 16 --driver mozart
 """
 
 from __future__ import annotations
@@ -37,22 +46,66 @@ class Request:
     done: bool = False
 
 
+def _mozart_steps(cfg: ModelConfig):
+    """Annotate prefill/decode as opaque library calls for the pipeline API.
+
+    Every argument broadcasts ("_" — the values are whole-model state, not
+    splittable rows) and the return is ``Unknown`` (logits + caches pytree):
+    each step forms its own stage and runs the unmodified jitted function.
+    What the pipeline API adds over raw ``jax.jit`` is the lifecycle: the
+    plan is resolved ahead of the request loop and persists via the plan
+    cache, so a restarted replica's first decode is already planned."""
+    from repro.core import annotate
+    from repro.core.split_types import Unknown, _
+
+    decode = annotate(
+        lambda p, tok, caches: tfm.decode_step(p, cfg, tok, caches),
+        name="serve_decode_step", ret=Unknown(), p=_, tok=_, caches=_)
+    prefill = annotate(
+        lambda p, toks, caches: tfm.prefill(p, cfg, tokens=toks, caches=caches),
+        name="serve_prefill", ret=Unknown(), p=_, toks=_, caches=_)
+    return prefill, decode
+
+
 class Server:
-    def __init__(self, cfg: ModelConfig, params, batch: int, max_len: int):
+    def __init__(self, cfg: ModelConfig, params, batch: int, max_len: int,
+                 driver: str = "jit", plan_cache_path: str | None = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.max_len = max_len
-        self._decode = jax.jit(
-            lambda p, tok, caches: tfm.decode_step(p, cfg, tok, caches))
-        self._prefill = jax.jit(
-            lambda p, toks, caches: tfm.prefill(p, cfg, tokens=toks,
-                                                caches=caches))
+        self.driver = driver
+        if driver == "mozart":
+            from repro.core import mozart
+            prefill_fn, decode_fn = _mozart_steps(cfg)
+            self._prefill = mozart.pipeline(
+                prefill_fn, executor="eager", plan_cache_path=plan_cache_path)
+            self._decode = mozart.pipeline(
+                decode_fn, executor="eager", plan_cache_path=plan_cache_path)
+        else:
+            self._decode = jax.jit(
+                lambda p, tok, caches: tfm.decode_step(p, cfg, tok, caches))
+            self._prefill = jax.jit(
+                lambda p, toks, caches: tfm.prefill(p, cfg, tokens=toks,
+                                                    caches=caches))
+
+    def warmup(self, prompt_len: int) -> None:
+        """AOT: lower + compile both pipelines before the first request."""
+        if self.driver != "mozart":
+            return
+        caches = tfm.init_caches(self.cfg, self.batch, self.max_len)
+        toks = jnp.zeros((self.batch, prompt_len), jnp.int32)
+        logits, caches = self._prefill.lower(self.params, toks, caches) \
+                                      .compile()(self.params, toks, caches)
+        tok = jnp.zeros((self.batch, 1), jnp.int32)
+        self._decode.lower(self.params, tok, caches).compile()
 
     def run(self, requests: list[Request]) -> dict:
         t0 = time.time()
         queue = list(requests)
         tokens_out = 0
+        decode_calls = 0
+        decode_s = 0.0
         while queue:
             group = queue[: self.batch]
             queue = queue[self.batch:]
@@ -76,11 +129,19 @@ class Server:
                         tokens_out += 1
                         if len(r.out) >= r.max_new:
                             r.done = True
+                td = time.perf_counter()
                 logits, caches = self._decode(self.params, tok, caches)
                 tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+                decode_s += time.perf_counter() - td
+                decode_calls += 1
         wall = time.time() - t0
-        return {"wall_s": wall, "tokens": tokens_out,
-                "tokens_per_s": tokens_out / max(wall, 1e-9)}
+        stats = {"wall_s": wall, "tokens": tokens_out,
+                 "tokens_per_s": tokens_out / max(wall, 1e-9),
+                 "decode_us_per_call": decode_s * 1e6 / max(decode_calls, 1)}
+        if self.driver == "mozart":
+            stats["decode_warm"] = self._decode.warm()
+            stats["decode_last_call"] = dict(self._decode.last_call_stats)
+        return stats
 
 
 def main():
@@ -92,6 +153,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--driver", choices=("jit", "mozart"), default="jit")
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan-cache path for --driver mozart (also honours "
+                         "MOZART_PLAN_CACHE)")
     args = ap.parse_args()
 
     cfg = (get_smoke_config(args.arch) if args.smoke else get_config(args.arch))
@@ -102,10 +167,16 @@ def main():
                     max_new=args.max_new)
             for i in range(args.requests)]
     srv = Server(cfg, params, args.batch,
-                 max_len=args.prompt_len + args.max_new + 1)
+                 max_len=args.prompt_len + args.max_new + 1,
+                 driver=args.driver, plan_cache_path=args.plan_cache)
+    srv.warmup(args.prompt_len)
     stats = srv.run(reqs)
     print(f"served {stats['tokens']} tokens in {stats['wall_s']:.2f}s "
-          f"({stats['tokens_per_s']:.1f} tok/s)")
+          f"({stats['tokens_per_s']:.1f} tok/s, "
+          f"{stats['decode_us_per_call']:.0f}us/decode, driver={args.driver})")
+    if args.driver == "mozart":
+        print(f"decode warm={stats['decode_warm']} "
+              f"last_call={stats['decode_last_call']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,448 @@
+"""The AOT pipeline API (``mozart.pipeline``): lower/compile/call lifecycle,
+pipeline-vs-session differential parity across every registered executor,
+the zero-retrace warm-call guarantee (asserted via the stage_exec trace
+counter), plan-cache-aware ``configure()``, sharded-executor tuning, and the
+cross-process warm start (subprocess-asserted, mirroring test_plan_persist).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import hardware
+from repro.core import Pipeline, mozart, plan_cache, splittable, Along
+from repro.core import annotated_numpy as anp
+from repro.core import stage_exec
+from repro.core.stage_exec import available_executors
+
+TINY_CHIP = hardware.Chip(
+    name="tiny_test_chip",
+    peak_bf16_flops=1e11,
+    hbm_bandwidth=2e10,
+    ici_link_bandwidth=1e10,
+    ici_links=1,
+    hbm_bytes=2**30,
+    vmem_bytes=64 * 1024,
+    mozart_c=1.0,
+)
+
+
+@splittable(x=Along(0), y=Along(0), ret=Along(0), elementwise=True)
+def saxpy(x, y):
+    return 2.0 * x + y
+
+
+def quickstart(x, y):
+    a = saxpy(x, y)
+    b = anp.exp(a)
+    c = anp.multiply(b, 0.5)
+    return c, anp.sum(c)
+
+
+def _data(n=4096):
+    x = jnp.arange(n, dtype=jnp.float32) / n
+    y = jnp.ones(n, jnp.float32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycle:
+    def test_lower_resolves_a_plan_entry_without_executing(self):
+        x, y = _data()
+        p = mozart.pipeline(quickstart, executor="fused")
+        assert p.plan_entry is None
+        p.lower(x, y)
+        assert p.plan_entry is not None
+        assert len(p.plan_entry.stage_templates) >= 1
+        # nothing executed: lower only planned
+        assert p.ctx.stats["stages"] == 0
+        assert p.ctx.stats["planner_calls"] == 1
+
+    def test_call_without_compile_still_correct(self):
+        x, y = _data()
+        p = mozart.pipeline(quickstart, executor="fused")
+        c, s = p(x, y)
+        np.testing.assert_allclose(
+            np.asarray(c), np.exp(2 * np.asarray(x) + 1) * 0.5, rtol=2e-5)
+
+    def test_decorator_form(self):
+        @mozart.pipeline(executor="fused", batch_elements=512)
+        def pipe(x, y):
+            return anp.sum(saxpy(x, y))
+
+        x, y = _data(1024)
+        assert isinstance(pipe, Pipeline)
+        assert np.isclose(float(pipe(x, y)),
+                          float(np.sum(2 * np.asarray(x) + 1)), rtol=1e-5)
+
+    def test_compile_requires_example_args(self):
+        p = mozart.pipeline(quickstart, executor="fused")
+        with pytest.raises(ValueError, match="example arguments"):
+            p.compile()
+
+    def test_compile_warns_when_it_cannot_converge(self):
+        """An uncacheable pipeline (plan_cache=False) can never pin anything:
+        compile() must say so instead of silently claiming success."""
+        x, y = _data(1024)
+        p = mozart.pipeline(quickstart, executor="fused", batch_elements=256,
+                            plan_cache=False)
+        with pytest.warns(RuntimeWarning, match="warm fixed point"):
+            p.compile(x, y)
+        assert not p.warm()
+
+    def test_session_scope_pipeline_rejects_calls(self):
+        p = Pipeline(None, executor="fused")
+        with pytest.raises(TypeError, match="wraps no function"):
+            p(1)
+
+    def test_lower_leaves_no_pending_work_behind(self):
+        x, y = _data()
+        p = mozart.pipeline(quickstart, executor="fused")
+        p.lower(x, y)
+        assert p.ctx.graph.pending() == []
+        # and the next call is a plain cache hit, unpolluted by lower()'s nodes
+        c, s = p(x, y)
+        assert p.last_call_stats.get("planner_calls", 0) == 0
+        np.testing.assert_allclose(
+            np.asarray(c), np.exp(2 * np.asarray(x) + 1) * 0.5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Differential: pipeline output == session output, for every executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", sorted(available_executors()))
+def test_pipeline_matches_session_differential(executor):
+    x, y = _data()
+    kwargs = {"batch_elements": 512}
+    if executor == "sharded":
+        kwargs["mesh"] = jax.make_mesh((1,), ("data",))
+
+    with mozart.session(executor=executor, **kwargs):
+        c0, s0 = quickstart(x, y)
+        want_c, want_s = np.asarray(c0), float(s0)
+
+    plan_cache.clear()
+    p = mozart.pipeline(quickstart, executor=executor, **kwargs)
+    p.lower(x, y).compile()
+    c, s = p(x, y)
+    np.testing.assert_allclose(np.asarray(c), want_c, rtol=2e-5, atol=1e-6)
+    assert np.isclose(float(s), want_s, rtol=1e-5), (executor, float(s), want_s)
+
+
+# ---------------------------------------------------------------------------
+# The zero-retrace warm-call guarantee
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor",
+                         ["pipelined", "fused", "scan", "pallas", "auto", "eager"])
+def test_warm_calls_zero_planner_calls_and_zero_retraces(executor):
+    n = 30_000
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    y = jnp.ones(n, jnp.float32)
+    p = mozart.pipeline(quickstart, executor=executor, chip=TINY_CHIP)
+    p.lower(x, y).compile()
+    assert p.warm(), f"compile() did not converge: {p.last_call_stats}"
+
+    planner_before = p.ctx.stats["planner_calls"]
+    traces_before = stage_exec.trace_count()
+    for _ in range(3):
+        c, s = p(x, y)
+        assert p.last_call_stats.get("planner_calls", 0) == 0
+        assert p.last_call_stats["jit_traces"] == 0
+        assert p.last_call_stats.get("autotuned_stages", 0) == 0
+        assert p.last_call_stats.get("auto_measured_stages", 0) == 0
+    # the process-global counters agree with the per-call deltas
+    assert p.ctx.stats["planner_calls"] == planner_before
+    assert stage_exec.trace_count() == traces_before
+
+
+def test_warm_calls_hit_on_fresh_data_of_same_shape():
+    """Steady state must survive NEW input arrays (fresh ids, same shapes) —
+    the whole point of position-based keying over per-call ids."""
+    n = 10_000
+    p = mozart.pipeline(quickstart, executor="scan", chip=TINY_CHIP)
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    p.lower(x, jnp.ones(n, jnp.float32)).compile()
+    for i in range(3):
+        x2 = jnp.linspace(float(i), float(i) + 1.0, n, dtype=jnp.float32)
+        y2 = jnp.full((n,), float(i), jnp.float32)
+        c, s = p(x2, y2)
+        assert p.last_call_stats["jit_traces"] == 0
+        assert p.last_call_stats.get("planner_calls", 0) == 0
+        want = np.exp(2 * np.asarray(x2) + np.asarray(y2)) * 0.5
+        np.testing.assert_allclose(np.asarray(c), want, rtol=2e-5)
+
+
+def test_scan_driver_does_not_bake_broadcast_scalars():
+    """Pinned executables take broadcast values as arguments: changing a
+    scalar between warm calls must change the result without a retrace."""
+    n = 8192
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+
+    def scaled(x, k):
+        return anp.sum(anp.multiply(x, k))
+
+    p = mozart.pipeline(scaled, executor="scan", chip=TINY_CHIP)
+    p.lower(x, 2.0).compile()
+    base = float(np.sum(np.asarray(x)))
+    for k in (2.0, 3.0, 0.5):
+        v = float(p(x, k))
+        assert np.isclose(v, base * k, rtol=1e-5), (k, v, base * k)
+        assert p.last_call_stats["jit_traces"] == 0
+
+
+def test_session_path_shares_pinned_executables():
+    """session() is built on Pipeline: repeated sessions over the same
+    cached plan reuse the pinned executables too (zero retraces)."""
+    x = jnp.linspace(0.0, 1.0, 20_000, dtype=jnp.float32)
+
+    def run():
+        with mozart.session(executor="fused", chip=TINY_CHIP) as ctx:
+            v = float(anp.sum(anp.multiply(anp.exp(x), 0.5)))
+        return v, ctx
+
+    run()            # miss: plan + compile
+    run()            # first hit: tuning re-executions
+    run()            # steady
+    before = stage_exec.trace_count()
+    v, ctx = run()
+    assert stage_exec.trace_count() == before
+    assert ctx.stats["planner_calls"] == 0
+    assert ctx.stats["exec_builds"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache-aware configure()
+# ---------------------------------------------------------------------------
+
+
+class TestConfigureRekey:
+    def test_executor_change_rekeys_instead_of_stranding(self):
+        x = jnp.linspace(0.0, 1.0, 4096, dtype=jnp.float32)
+        with mozart.session(executor="fused", batch_elements=512) as ctx:
+            _ = float(anp.sum(anp.exp(x)))
+            assert ctx.stats["planner_calls"] == 1
+            mozart.configure(executor="scan")
+            v = float(anp.sum(anp.exp(x)))
+        # the re-keyed entry was hit: no second planner call
+        assert ctx.stats["planner_calls"] == 1
+        assert ctx.stats["plan_cache_hits"] == 1
+        assert ctx.stats["configure_rekeyed"] == 1
+        assert plan_cache.stats["rekeyed"] == 1
+        assert np.isclose(v, float(np.sum(np.exp(np.asarray(x)))), rtol=1e-5)
+
+    def test_rekey_drops_stale_tuner_state_but_keeps_original(self):
+        x = jnp.linspace(0.0, 1.0, 50_000, dtype=jnp.float32)
+        for _ in range(2):   # miss then tuning hit: pins a batch
+            with mozart.session(executor="fused", chip=TINY_CHIP):
+                _ = float(anp.sum(anp.exp(x)))
+        assert plan_cache.tuned_batches()
+        with mozart.session(executor="fused", chip=TINY_CHIP):
+            _ = float(anp.sum(anp.exp(x)))
+            mozart.configure(executor="pipelined")
+        by_exec = {e.key[0]: e for e in plan_cache.entries()}
+        assert set(by_exec) == {"fused", "pipelined"}   # copy, not move
+        assert by_exec["pipelined"].tuned_batch == {}   # measured under fused
+        assert by_exec["fused"].tuned_batch              # original keeps its pin
+
+    def test_pipeline_flag_change_plans_fresh(self):
+        x = jnp.linspace(0.0, 1.0, 1024, dtype=jnp.float32)
+        with mozart.session(executor="fused", batch_elements=256) as ctx:
+            _ = float(anp.sum(anp.exp(x)))
+            mozart.configure(pipeline=False)
+            _ = float(anp.sum(anp.exp(x)))
+        # structural change: nothing copied, the new config plans fresh
+        assert ctx.stats["planner_calls"] == 2
+        assert plan_cache.stats["rekey_skipped_structural"] == 1
+        assert {e.key[2] for e in plan_cache.entries()} == {True, False}
+
+    def test_unrelated_configs_untouched(self):
+        x = jnp.linspace(0.0, 1.0, 1024, dtype=jnp.float32)
+        with mozart.session(executor="scan", batch_elements=256):
+            _ = float(anp.sum(anp.exp(x)))        # entry A: scan
+        with mozart.session(executor="fused", batch_elements=256) as ctx:
+            _ = float(anp.sum(anp.exp(x)))        # entry B: fused
+            mozart.configure(executor="pipelined")
+        keys = {e.key[0] for e in plan_cache.entries()}
+        assert keys == {"scan", "fused", "pipelined"}
+
+    def test_configure_does_not_break_other_pipelines_warm_state(self):
+        """Another context reconfiguring the SAME knob prefix must not
+        strand a compiled Pipeline's entry or pinned executables."""
+        n = 20_000
+        x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+        y = jnp.ones(n, jnp.float32)
+        p = mozart.pipeline(quickstart, executor="fused", chip=TINY_CHIP)
+        p.lower(x, y).compile()
+        assert p.warm()
+        # an unrelated session with the same config prefix reconfigures
+        with mozart.session(executor="fused", chip=TINY_CHIP) as other:
+            _ = float(anp.sum(anp.exp(x)))
+            mozart.configure(executor="scan")
+        c, s = p(x, y)
+        assert p.last_call_stats.get("planner_calls", 0) == 0
+        assert p.last_call_stats["jit_traces"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Sharded executor tuning (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestShardedTuning:
+    def test_sharded_tunes_inner_chunk_loop(self):
+        mesh = jax.make_mesh((1,), ("data",))
+        x = jnp.linspace(0.0, 1.0, 100_000, dtype=jnp.float32)
+
+        def run():
+            with mozart.session(executor="sharded", chip=TINY_CHIP,
+                                mesh=mesh) as ctx:
+                v = float(anp.sum(anp.multiply(anp.exp(x), 0.5)))
+            return v, ctx
+
+        v1, c1 = run()          # miss
+        assert c1.stats["autotuned_stages"] == 0
+        v2, c2 = run()          # first hit: sampled tuning of the inner loop
+        assert c2.stats["autotuned_stages"] == 1
+        assert 0 < c2.stats["tuning_sample_elems"] < 100_000
+        assert plan_cache.tuned_batches(), "sharded tuner pinned nothing"
+        v3, c3 = run()          # pinned replay
+        assert c3.stats["autotuned_stages"] == 0
+        assert c3.stats["tuning_sample_elems"] == 0
+        want = float(np.sum(np.exp(np.linspace(0, 1, 100_000,
+                                               dtype=np.float32)) * 0.5))
+        assert all(np.isclose(v, want, rtol=1e-4) for v in (v1, v2, v3))
+
+    def test_sharded_sample_elems_rounded_to_mesh_extent(self):
+        from repro.core.stage_exec import get_executor
+        ex = get_executor("sharded")
+        mesh = jax.make_mesh((1,), ("data",))
+        ctx = mozart.MozartContext(executor="sharded", mesh=mesh,
+                                   data_axes=("data",))
+        m = 1
+        for a in ctx.data_axes:
+            m *= mesh.shape[a]
+        for batch, n in ((7, 1000), (100, 1000), (1, 5)):
+            s = ex.sample_elems(ctx, batch, n)
+            assert s % m == 0 and 0 < s <= n
+        assert ex.sample_elems(ctx, 8, 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Online dispatch-overhead calibration (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestDispatchCalibration:
+    def test_measured_once_per_process_and_positive(self):
+        a = hardware.measured_dispatch_overhead_s()
+        b = hardware.measured_dispatch_overhead_s()
+        assert a == b > 0
+
+    def test_effective_overhead_blends_constant_with_measurement(self):
+        m = hardware.measured_dispatch_overhead_s()
+        c = TINY_CHIP.dispatch_overhead_s
+        eff = hardware.effective_dispatch_overhead_s(TINY_CHIP)
+        assert np.isclose(eff, np.sqrt(m * c), rtol=1e-9)
+        assert min(m, c) <= eff <= max(m, c)
+
+    def test_cost_model_uses_calibrated_overhead(self):
+        from repro.core import cost_model
+        f = cost_model.StageFeatures(
+            n=100_000, elem_bytes=12, n_nodes=3, flops_per_elem=24.0,
+            dynamic=False, pallas_eligible=True, mesh_devices=0, on_tpu=False)
+        eff = hardware.effective_dispatch_overhead_s(TINY_CHIP)
+        got = cost_model.analytic_seconds("scan", f, TINY_CHIP)
+        stream = max(100_000 * 12 / TINY_CHIP.hbm_bandwidth,
+                     100_000 * 24.0 / TINY_CHIP.peak_bf16_flops)
+        assert np.isclose(got, stream + eff, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Cross-process warm start via MOZART_PLAN_CACHE (subprocess-asserted)
+# ---------------------------------------------------------------------------
+
+_PRELUDE = """
+import json, sys
+import jax.numpy as jnp
+import numpy as np
+from repro import hardware
+from repro.core import mozart, plan_cache, stage_exec
+from repro.core import annotated_numpy as anp
+
+TINY = hardware.Chip(name="tiny_subproc_chip", peak_bf16_flops=1e11,
+                     hbm_bandwidth=2e10, ici_link_bandwidth=1e10, ici_links=1,
+                     hbm_bytes=2**30, vmem_bytes=64 * 1024, mozart_c=1.0)
+
+def fn(x):
+    return anp.sum(anp.multiply(anp.exp(x), 0.5))
+
+x = jnp.linspace(0.0, 1.0, 50_000, dtype=jnp.float32)
+path = sys.argv[1]
+p = mozart.pipeline(fn, executor="auto", chip=TINY, plan_cache_path=path)
+"""
+
+_PROC_A = _PRELUDE + """
+p.lower(x)
+p.compile()
+v = float(p(x))
+print(json.dumps({"v": v, "warm": p.warm(), "last": p.last_call_stats,
+                  "ctx": dict(p.ctx.stats), "pc": dict(plan_cache.stats)}))
+"""
+
+_PROC_B = _PRELUDE + """
+# Replay: first call may compile executables (at most once), but never plans,
+# tunes or measures; the second call must be fully warm.
+v1 = float(p(x))
+first = dict(p.last_call_stats)
+v2 = float(p(x))
+second = dict(p.last_call_stats)
+print(json.dumps({"v": v2, "first": first, "second": second,
+                  "ctx": dict(p.ctx.stats), "pc": dict(plan_cache.stats)}))
+"""
+
+
+def _run_subprocess(code, path):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    existing = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + existing if existing else "")
+    out = subprocess.run([sys.executable, "-c", code, path],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_cross_process_pipeline_warm_start(tmp_path):
+    """Process A lowers, compiles and persists; a FRESH process B replays the
+    pinned plan: zero planner calls and zero tuning ever, at most one
+    compile pass, and warm from the second call on."""
+    path = str(tmp_path / "plans.json")
+    a = _run_subprocess(_PROC_A, path)
+    assert a["warm"], a
+    assert a["last"].get("jit_traces", 0) == 0
+    assert os.path.exists(path)
+
+    b = _run_subprocess(_PROC_B, path)
+    assert b["pc"].get("persist_loaded", 0) >= 1
+    assert b["ctx"].get("planner_calls", 0) == 0          # never planned
+    assert b["ctx"].get("autotuned_stages", 0) == 0       # never tuned
+    assert b["ctx"].get("auto_measured_stages", 0) == 0   # never measured
+    assert b["ctx"].get("auto_pinned_replays", 0) >= 1    # pinned choice reused
+    # recompiles at most once: the first call may trace, the second cannot
+    assert b["second"].get("jit_traces", 0) == 0
+    assert b["second"].get("planner_calls", 0) == 0
+    assert np.isclose(a["v"], b["v"], rtol=1e-5)
