@@ -10,7 +10,10 @@ pipeline under every registered StageExecutor (including ``auto``), checks
 numerical parity with the un-annotated "eager" oracle, exercises the plan
 cache + auto-tuner with repeated runs, verifies that ``auto`` matches or
 beats the fixed ``pipelined`` default in steady state, replays a persisted
-plan-cache file with zero planner calls, and exits nonzero on any mismatch.
+plan-cache file with zero planner calls, gates cross-stage chunk handoff
+(interior boundary ``bytes_materialized`` must drop to zero and warm
+wall-clock must not regress vs the merge-everything path), and exits
+nonzero on any mismatch.
 """
 
 from __future__ import annotations
@@ -40,6 +43,7 @@ MODULES = {
 def smoke() -> int:
     """Executor-parity + plan-cache smoke check.  Returns a process exit code."""
     import jax
+    import jax.numpy as jnp
     import numpy as np
 
     from benchmarks import workloads as w
@@ -125,8 +129,63 @@ def smoke() -> int:
         if not warm_ok:
             failures.append("warm-start")
 
-    # -- AOT pipeline: warm calls do ZERO planner calls and ZERO retraces ---
+    # -- cross-stage chunk handoff: interior boundaries stop materializing --
     from repro.core import stage_exec
+
+    n_h, b_h, evals = 400_000, 65_536, 3
+    xh = jnp.linspace(0.0, 1.0, n_h, dtype=jnp.float32)
+
+    def handoff_chain(handoff):
+        with mozart.session(executor="fused", batch_elements=b_h,
+                            handoff=handoff) as ctx:
+            cur = xh
+            for _ in range(evals):
+                cur = w.anp.multiply(w.anp.add(cur, 1.0), 0.5)
+                mozart.evaluate()       # stage boundary between evaluations
+            out = np.asarray(cur)
+        return out, ctx
+
+    import time as _time
+
+    def timed(handoff):
+        plan_cache.clear()
+        handoff_chain(handoff); handoff_chain(handoff)      # plan, then warm
+        b0 = stage_exec.bytes_materialized()
+        out, ctx = handoff_chain(handoff)
+        dbytes = stage_exec.bytes_materialized() - b0
+        samples = []
+        for _ in range(5):
+            t0 = _time.perf_counter()
+            handoff_chain(handoff)
+            samples.append(_time.perf_counter() - t0)
+        return out, ctx, dbytes, sorted(samples)[len(samples) // 2] * 1e6
+
+    on_out, on_ctx, on_bytes, on_us = timed(True)
+    off_out, off_ctx, off_bytes, off_us = timed(False)
+    final_bytes = int(xh.nbytes)
+    interior = on_bytes - final_bytes   # lazy merge at the observed output only
+    handoff_failures = []
+    if not np.allclose(on_out, off_out, rtol=2e-5):
+        handoff_failures.append("parity")
+    if interior != 0:
+        handoff_failures.append(f"interior_bytes={interior}")
+    if on_bytes >= off_bytes:
+        handoff_failures.append("no_traffic_reduction")
+    if on_ctx.stats["planner_calls"] != 0:
+        handoff_failures.append("warm_planned")
+    if on_us > off_us * 1.15:           # <= merge-everything path (+timer noise)
+        handoff_failures.append("slower_than_merge_path")
+    record("smoke/handoff", on_us,
+           f"merge_path_us={off_us:.0f};ratio={on_us / max(off_us, 1e-9):.2f};"
+           f"bytes_on={on_bytes};bytes_off={off_bytes};interior={interior};"
+           f"streamed={on_ctx.stats['streamed_outputs']};"
+           f"ingests={on_ctx.stats['stream_ingests']};"
+           f"donated={on_ctx.stats.get('donated_chunks', 0)};"
+           f"{'ok' if not handoff_failures else 'REGRESSED'}")
+    if handoff_failures:
+        failures.append(f"handoff:{handoff_failures}")
+
+    # -- AOT pipeline: warm calls do ZERO planner calls and ZERO retraces ---
     plan_cache.clear()
     p = mozart.pipeline(lambda: w.black_scholes(**d), executor="auto")
     p.lower()

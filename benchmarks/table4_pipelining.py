@@ -1,13 +1,16 @@
 """Table 4: the pipelining ablation.
 
-Three variants of Black Scholes / Haversine:
-  base      — un-annotated library (eager),
-  -pipe     — Mozart splits + chunk-drives each function SEPARATELY
-              (max_stage_nodes=1: parallelization without pipelining),
-  mozart    — full cross-function pipelining.
-The paper's LLC-miss counters become a derived bytes-moved model here:
-bytes moved ~ sum over stages of (stage inputs + escaping outputs), which
-the Mozart stats expose directly.
+Variants of Black Scholes / Haversine:
+  base           — un-annotated library (eager),
+  -pipe          — Mozart splits + chunk-drives each function SEPARATELY
+                   (max_stage_nodes=1: parallelization without pipelining),
+  -pipe+handoff  — same per-function stages, but cross-stage chunk handoff
+                   streams each stage's chunk list straight into the next
+                   (core/handoff.py): the per-boundary merge+re-split the
+                   ablation pays is removed without re-enabling fusion,
+  mozart         — full cross-function pipelining.
+The paper's LLC-miss counters become a derived bytes-moved model here: the
+``stage_exec.bytes_materialized`` counter reports actual boundary traffic.
 """
 
 from __future__ import annotations
@@ -17,7 +20,7 @@ import numpy as np
 from benchmarks import workloads as w
 from benchmarks.common import record, time_fn
 from repro import hardware
-from repro.core import mozart
+from repro.core import mozart, stage_exec
 
 
 def hbm_traffic_model(ctx) -> int:
@@ -28,7 +31,8 @@ def hbm_traffic_model(ctx) -> int:
 def bench(name, build, iters=3):
     variants = [
         ("base", dict(executor="eager")),
-        ("-pipe", dict(executor="scan", pipeline=False)),
+        ("-pipe", dict(executor="fused", pipeline=False, handoff=False)),
+        ("-pipe+handoff", dict(executor="fused", pipeline=False, handoff=True)),
         ("mozart", dict(executor="scan", pipeline=True)),
     ]
     base_us = None
@@ -40,12 +44,15 @@ def bench(name, build, iters=3):
                 vals = [np.asarray(o) for o in outs]
             return vals, ctx
         us = time_fn(lambda: once()[0], iters=iters)
+        b0 = stage_exec.bytes_materialized()
         _, ctx = once()
+        boundary_mb = (stage_exec.bytes_materialized() - b0) / 1e6
         if vname == "base":
             base_us = us
         record(f"table4/{name}/{vname}", us,
                f"speedup={base_us/us:.2f};stages={ctx.stats['stages']};"
-               f"chunks={ctx.stats['chunks']}")
+               f"chunks={ctx.stats['chunks']};boundary_mb={boundary_mb:.1f};"
+               f"streamed={ctx.stats.get('streamed_outputs', 0)}")
 
 
 def main(quick=False):

@@ -42,8 +42,10 @@ from repro.core.split_types import (
     _,
 )
 from repro.core.stage_exec import (
+    ChunkStream,
     StageExecutor,
     available_executors,
+    bytes_materialized,
     get_executor,
     register_executor,
 )
@@ -55,5 +57,6 @@ __all__ = [
     "ReduceSplit", "RuntimeInfo", "ScalarSplit", "SplitSpec", "SplitType",
     "TypeEnv", "UnificationError", "Unknown", "UnknownSplit",
     "default_split_type", "_",
-    "StageExecutor", "available_executors", "get_executor", "register_executor",
+    "ChunkStream", "StageExecutor", "available_executors", "bytes_materialized",
+    "get_executor", "register_executor",
 ]

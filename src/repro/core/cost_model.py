@@ -44,7 +44,9 @@ from repro.core.stage_exec import (
     StageExecutor,
     get_executor,
     has_dynamic,
+    materialize_inputs,
     register_executor,
+    resolve_stage_inputs,
     stage_elem_bytes,
     stage_num_elements,
 )
@@ -189,15 +191,22 @@ class AutoExecutor(StageExecutor):
     tunable = False              # the delegate's own tuner handles batch size
 
     def run(self, stage: Stage, graph: DataflowGraph, ctx) -> None:
-        concrete = {key: graph.resolve(si.value) for key, si in stage.inputs.items()}
+        # Streams pass through for scoring (features read types + avals, not
+        # values); the delegate's own run() re-resolves with its capability
+        # and owns the ingest/materialize stats (tally=False here).
+        concrete = resolve_stage_inputs(stage, graph, ctx, streams_ok=True,
+                                        tally=False)
         entry = getattr(ctx, "_plan_entry", None)
         name = entry.chosen_exec.get(stage.id) if entry is not None else None
+        if name is not None and self._aged_out(stage, concrete, ctx, entry):
+            name = None              # shape drift past a crossover: re-measure
         if name is not None:
             ctx.stats["auto_pinned_replays"] += 1
         elif (entry is not None and entry.hits > 0
                 and getattr(ctx, "autotune", True)
                 and not has_dynamic(stage)
                 and entry.try_claim_exec(stage.id)):
+            concrete = materialize_inputs(stage, concrete, ctx)
             name = self._measure_and_pin(stage, concrete, ctx, entry)
         if name is None:
             feats = features_of(stage, concrete, ctx)
@@ -208,6 +217,33 @@ class AutoExecutor(StageExecutor):
         if ctx.log:
             print(f"[mozart] stage {stage.id}: auto -> {name}")
         get_executor(name).run(stage, graph, ctx)
+
+    def _aged_out(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                  entry) -> bool:
+        """Re-measurement aging (ROADMAP follow-up): a pinned choice recorded
+        its measurement-time shape bucket (``PlanEntry.exec_meta``); when a
+        warm call's element count has drifted to a different power-of-two
+        bucket AND the analytic model's ranking flips between the two sizes
+        (a cost crossover was passed), the pin is dropped and the next
+        execution re-measures instead of blindly replaying."""
+        meta = entry.exec_meta.get(stage.id) if entry is not None else None
+        if not meta:
+            return False                      # pre-aging pin: nothing recorded
+        n = stage_num_elements(stage, concrete, ctx.pedantic)
+        if int(n).bit_length() == meta["bucket"]:
+            return False                      # same shape regime: replay
+        feats_now = features_of(stage, concrete, ctx)
+        if not drifted_past_crossover(feats_now, meta, ctx):
+            # drifted, but the model ranks the same winner at both sizes:
+            # refresh the recorded regime and keep replaying the pin
+            entry.pin_exec(stage.id, entry.chosen_exec[stage.id], n=n)
+            return False
+        if not (getattr(ctx, "autotune", True) and not has_dynamic(stage)):
+            return False                      # cannot re-measure here
+        entry.unpin_exec(stage.id)
+        ctx.stats["auto_repinned_drift"] += 1
+        return True
+
 
     def _measure_and_pin(self, stage: Stage, concrete: dict[tuple, Any], ctx,
                          entry) -> str:
@@ -223,7 +259,7 @@ class AutoExecutor(StageExecutor):
             cands = [c for c in cands
                      if scores[c] <= floor * _MEASURE_RATIO] or cands[:1]
             if feats.n == 0 or len(cands) == 1:
-                entry.pin_exec(stage.id, cands[0])
+                entry.pin_exec(stage.id, cands[0], n=feats.n)
                 pinned = True
                 return cands[0]
             n = feats.n
@@ -237,10 +273,19 @@ class AutoExecutor(StageExecutor):
                 entry.record_exec_timing(stage.id, c, secs)
             measured = entry.exec_timings.get(stage.id, {})
             name = choose(feats, ctx, measured)
-            entry.pin_exec(stage.id, name)
+            entry.pin_exec(stage.id, name, n=feats.n)
             pinned = True
             ctx.stats["auto_measured_stages"] += 1
             return name
         finally:
             if not pinned:
                 entry.release_exec(stage.id)
+
+
+def drifted_past_crossover(feats_now: StageFeatures, meta: dict, ctx) -> bool:
+    """True when the analytic model's winner differs between the shape a
+    pinned executor choice was measured at (``meta["n"]``) and the shape a
+    warm call is seeing now — i.e. the drift crossed a cost-model crossover
+    and the old measurement no longer supports the pin."""
+    feats_then = dataclasses.replace(feats_now, n=int(meta["n"]))
+    return choose(feats_now, ctx) != choose(feats_then, ctx)

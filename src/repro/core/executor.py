@@ -35,8 +35,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.graph import NodeRef
 from repro.core.planner import Stage
 from repro.core.stage_exec import (
+    ChunkStream,
     PedanticError,
     StageExecutor,
     batch_ranges,
@@ -46,6 +48,7 @@ from repro.core.stage_exec import (
     finish_stage,
     get_executor,
     has_dynamic,
+    note_materialized,
     note_trace,
     pinned_jit,
     register_executor,
@@ -66,6 +69,7 @@ class EagerExecutor(StageExecutor):
     """The un-annotated library baseline: every function runs whole."""
 
     tunable = False
+    stream_capable = False       # whole-value strategy: streams materialize
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         env = {stage.ckey(key): v for key, v in concrete.items()}
@@ -76,8 +80,22 @@ class EagerExecutor(StageExecutor):
             ctx.stats["calls"] += 1
 
 
-def _build_fused_driver(stage: Stage, esc: tuple[int, ...]) -> Callable:
+def _build_fused_driver(stage: Stage, esc: tuple[int, ...],
+                        donate: tuple = ()) -> Callable:
     plan = chain_plan(stage)
+
+    if donate:
+        # Handed-off chunk buffers whose stream dies after this stage arrive
+        # as a separate (donated) argument: XLA reuses the dead intermediate's
+        # memory for this chunk's outputs instead of allocating fresh buffers.
+        def fused_driver_donate(donated, env):
+            note_trace()
+            env = dict(env)
+            env.update(donated)
+            run_plan(plan, env)
+            return {p: env[("n", p)] for p in esc}
+
+        return jax.jit(fused_driver_donate, donate_argnums=(0,))
 
     def fused_driver(env):
         note_trace()
@@ -88,10 +106,109 @@ def _build_fused_driver(stage: Stage, esc: tuple[int, ...]) -> Callable:
 
 
 class ChunkedExecutor(StageExecutor):
-    """Shared Python-driver chunk loop; ``mode`` picks the per-chunk style."""
+    """Shared Python-driver chunk loop; ``mode`` picks the per-chunk style.
+
+    Chunk handoff: stream inputs (producer chunk lists) are iterated without
+    re-slicing.  The loop itself never blocks between chunks — jax dispatch
+    is asynchronous, so host-side split work for chunk *i+1* always overlaps
+    device compute of chunk *i* — and chunk buffers that die here are
+    donated to the fused driver (``_build_fused_driver``) so XLA reuses the
+    dead intermediate's memory for this chunk's outputs."""
 
     tunable = True
+    stream_capable = True
     mode = "pipelined"
+
+    #: a producer grid whose chunks are up to this factor over the consumer's
+    #: own batch estimate is adopted as-is: the §5.2 estimate deliberately
+    #: leaves fast-memory headroom, and adopting the grid costs zero copies
+    #: while re-gridding costs one per chunk.  Beyond it the stream is
+    #: re-gridded to protect the fast-memory budget.
+    GRID_SLACK = 2.0
+
+    def _ingest_streams(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                        n: int, batch: int):
+        """Align every stream input onto ONE chunk grid.
+
+        The producer's grid is adopted as-is when its chunks (approximately)
+        fit this stage's fast-memory budget — finer grids always fit, and up
+        to ``GRID_SLACK``x oversized chunks are tolerated; grids beyond that
+        (or streams disagreeing with the adopted grid) convert via
+        ``SplitType.rechunk`` — at most one copy, never the merge +
+        re-split two."""
+        streams = [(k, v) for k, v in concrete.items()
+                   if isinstance(v, ChunkStream)]
+        if not streams:
+            return concrete, batch_ranges(n, batch)
+        base = streams[0][1]
+        grid = base.ranges
+        ub = base.uniform_batch()
+        if ub is not None and ub > batch * self.GRID_SLACK and n > 0:
+            grid = batch_ranges(n, batch)
+        out = dict(concrete)
+        for k, v in streams:
+            if v.ranges != grid:
+                chunks, copied = v.split_type.rechunk(v.chunks, v.ranges, grid)
+                out[k] = ChunkStream(chunks, grid, v.split_type, v.aval)
+                note_materialized(copied)
+                ctx.stats["handoff_rechunks"] += 1
+        return out, grid
+
+    def _donatable(self, stage: Stage, ctx) -> tuple:
+        """Canonical env keys of inputs whose per-chunk buffers die here.
+
+        STRUCTURAL only — a pure function of the handoff plan (this stage is
+        the handed-off value's LAST in-plan consumer) and the stage template
+        (NodeRef-sourced, splittable, some escaping output chunk can absorb
+        the buffer) — so the pinned driver's variant key is identical on
+        every call and the zero-retrace warm-call invariant holds.  Whether
+        a producer is still observable is a *runtime* question answered per
+        chunk in ``execute`` (an observable stream donates a defensive COPY,
+        never its own buffers)."""
+        plan = getattr(ctx, "_handoff", None)
+        ho = plan.get(stage.id) if plan else None
+        if ho is None or not ho.last_use:
+            return ()
+
+        def _sig(aval):
+            return tuple((tuple(l.shape), str(l.dtype))
+                         for l in jax.tree_util.tree_leaves(aval)
+                         if hasattr(l, "shape"))
+
+        # XLA can only reuse a donated buffer for an output of the same
+        # shape/dtype: donate at most ONE chunk per matching escaping
+        # output chunk (else jax warns about unusable donations).
+        out_sigs: dict[tuple, int] = {}
+        for n in stage.nodes:
+            if (n.id in stage.escaping and n.out_aval is not None
+                    and stage.out_types[n.id].splittable):
+                sig = _sig(n.out_aval)
+                out_sigs[sig] = out_sigs.get(sig, 0) + 1
+        keys = []
+        for i, (key, si) in enumerate(stage.inputs.items()):
+            if not (i in ho.last_use and isinstance(si.value, NodeRef)
+                    and si.split_type.splittable):
+                continue
+            node = ctx.graph.nodes.get(si.value.node_id)
+            aval = node.out_aval if node is not None else None
+            if aval is not None and out_sigs.get(_sig(aval), 0) > 0:
+                out_sigs[_sig(aval)] -= 1
+                keys.append(stage.ckey(key))
+        return tuple(sorted(keys))
+
+    def _undonatable_streams(self, stage: Stage, concrete: dict[tuple, Any],
+                             ctx, donate: tuple) -> set:
+        """Donate-marked keys whose ChunkStream may still be observed (the
+        producer's Future is alive): their chunks are copied before donation
+        so the stream's own buffers survive."""
+        unsafe = set()
+        for key, si in stage.inputs.items():
+            ck = stage.ckey(key)
+            if ck in donate and isinstance(concrete.get(key), ChunkStream):
+                node = ctx.graph.nodes.get(si.value.node_id)
+                if node is None or node.future_alive():
+                    unsafe.add(ck)
+        return unsafe
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         mode = self.mode
@@ -99,30 +216,59 @@ class ChunkedExecutor(StageExecutor):
             mode = "pipelined"           # dynamic-shape fns cannot be traced
         n = effective_elements(ctx, stage_num_elements(stage, concrete, ctx.pedantic))
         batch = self.choose_batch(stage, concrete, ctx, n)
-        ranges = batch_ranges(n, batch)
+        concrete, ranges = self._ingest_streams(stage, concrete, ctx, n, batch)
         ctx.stats["chunks"] += len(ranges)
 
         esc = tuple(stage.escape_positions())
         fused_fn: Callable | None = None
+        donate: tuple = ()
+        unsafe: set = set()
         if mode == "fused":
-            fused_fn = pinned_jit(stage, ctx, "fused", (esc,),
-                                  lambda: _build_fused_driver(stage, esc))
+            # The donate key set is structural (plan-derived), so the pinned
+            # driver variant is the same on every warm call — zero retraces.
+            donate = self._donatable(stage, ctx)
+            if donate:
+                unsafe = self._undonatable_streams(stage, concrete, ctx, donate)
+            fused_fn = pinned_jit(stage, ctx, "fused", (esc, donate),
+                                  lambda: _build_fused_driver(stage, esc, donate))
 
         partials: dict[int, list[Any]] = {p: [] for p in esc}
-        for (s, e) in ranges:
-            env = chunk_env_for(stage, concrete, s, e, ctx.pedantic)
+        for i, (s, e) in enumerate(ranges):
+            env = chunk_env_for(stage, concrete, s, e, ctx.pedantic,
+                                chunk_index=i, force_slice=donate)
             if mode == "pipelined":
                 run_chain(stage, env, jit_each=True)
                 ctx.stats["calls"] += len(stage.nodes)
                 outs = {p: env[("n", p)] for p in esc}
             else:
-                outs = fused_fn(env)
+                if donate:
+                    # Observable streams donate a defensive COPY — their own
+                    # chunk buffers must survive a later Future.value.
+                    donated = {}
+                    for k in donate:
+                        v = env.pop(k)
+                        if k in unsafe:
+                            v = jax.tree_util.tree_map(jnp.array, v)
+                            ctx.stats["donation_copies"] += 1
+                        donated[k] = v
+                    outs = fused_fn(donated, env)
+                    ctx.stats["donated_chunks"] += len(donated)
+                else:
+                    outs = fused_fn(env)
                 ctx.stats["calls"] += 1
             for p, v in outs.items():
                 partials[p].append(v)
             if ctx.log:
                 print(f"[mozart] stage {stage.id} chunk [{s},{e}) done")
-        finish_stage(stage, partials)
+        for key, si in stage.inputs.items():
+            ck = stage.ckey(key)
+            v = concrete.get(key)
+            if (ck in donate and ck not in unsafe and isinstance(v, ChunkStream)):
+                v.consumed = True              # buffers are gone: mark both the
+                orig = ctx.graph.nodes[si.value.node_id].result
+                if isinstance(orig, ChunkStream):
+                    orig.consumed = True       # original and rechunked aliases
+        finish_stage(stage, partials, ranges, ctx)
 
 
 @register_executor("pipelined")
@@ -181,6 +327,10 @@ class ScanExecutor(StageExecutor):
     """
 
     tunable = True
+    # Stacking wants one contiguous array (the reshape into (chunks, batch)
+    # is free on a merged value but a real gather on a chunk list), so
+    # stream inputs materialize on ingest rather than stream through.
+    stream_capable = False
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         if has_dynamic(stage):
@@ -257,4 +407,4 @@ class ScanExecutor(StageExecutor):
             run_chain(stage, env, jit_each=False)
             for nid in stage.escaping:
                 partials[stage.pos[nid]].append(env[("n", stage.pos[nid])])
-        finish_stage(stage, partials)
+        finish_stage(stage, partials, ctx=ctx)

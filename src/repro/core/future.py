@@ -66,10 +66,19 @@ class Future:
     # -- forcing ------------------------------------------------------------
     @property
     def value(self) -> Any:
-        """Evaluate the pending graph (if needed) and return the result."""
+        """Evaluate the pending graph (if needed) and return the result.
+
+        A result left unmerged by cross-stage chunk handoff (a
+        ``ChunkStream``) merges here, lazily, exactly once — observation is
+        the only point a handed-off intermediate ever materializes."""
         if not self._node.done:
             self._ctx.evaluate()
-        return self._node.result
+        res = self._node.result
+        from repro.core.stage_exec import ChunkStream
+        if isinstance(res, ChunkStream):
+            res = res.materialize()
+            self._node.result = res
+        return res
 
     def block(self) -> Any:
         return self.value

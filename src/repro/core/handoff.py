@@ -1,0 +1,184 @@
+"""Cross-stage chunk handoff analysis (the merge→re-split eliminator).
+
+The paper's central claim (§3–§5) is that cache-sized chunks pipelined
+across library functions beat materializing every intermediate.  Within one
+stage Mozart already delivers that; at every stage *boundary*, however, the
+producer merges its partials into a full value and the consumer re-splits it
+— an O(data) round trip per boundary.  This pass walks the planned stages
+and decides, per producer→consumer edge, whether the consumer can ingest the
+producer's chunk list directly:
+
+* the producer's resolved output split type must ``can_handoff`` the
+  consumer's resolved input split type (same concrete geometry and
+  iteration axis — ``core/split_types.py``), and
+* a node is left unmerged (:class:`~repro.core.stage_exec.ChunkStream`)
+  only when EVERY in-plan consumer edge accepts the grid; values that any
+  consumer must see whole (broadcast args, whole-array sources, axis
+  changes) merge exactly as before.
+
+Nodes with no in-plan consumer at all (pure pipeline outputs) also stream:
+their merge happens lazily when the ``Future`` is observed, and not at all
+if it never is.  Grids that disagree between producer and consumer convert
+through ``SplitType.rechunk`` (integer-multiple regroup — at most one copy
+instead of the merge+re-split two).
+
+The analysis is pure and structural — a function of the stage templates
+only — so its result is recorded on the plan-cache entry
+(``PlanEntry.handoff``) and replayed by warm calls with zero analysis; it is
+also persisted (``plan_cache.save/load``), so ``MOZART_PLAN_CACHE`` warm
+starts stream from the first call.
+
+Cross-*evaluation* edges (a pending stage consuming a ``done`` node from an
+earlier ``evaluate()`` — the serve-decode shape) cannot be decided
+structurally: the producer ran under a different plan, so the entry records
+the ingest as *permitted* and ``stage_exec.resolve_stage_inputs`` re-checks
+the concrete stream's grid at run time (an O(1) type comparison, not a
+planner call).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import split_types as st
+from repro.core.graph import NodeRef
+from repro.core.planner import Stage
+
+
+@dataclasses.dataclass(frozen=True)
+class StageHandoff:
+    """Handoff decisions for one stage (positions, never node/value ids)."""
+
+    #: stage-local node positions whose output stays a ChunkStream.
+    stream_out: frozenset
+    #: stage input positions permitted to ingest a producer's chunk list.
+    stream_in: frozenset
+    #: input positions where this stage is the LAST in-plan consumer of the
+    #: handed-off stream — chunk buffers may be donated to the driver there
+    #: (re-checked against ``future_alive`` at run time).
+    last_use: frozenset
+
+    def to_json(self) -> dict:
+        return {"stream_out": sorted(self.stream_out),
+                "stream_in": sorted(self.stream_in),
+                "last_use": sorted(self.last_use)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "StageHandoff":
+        return cls(stream_out=frozenset(int(p) for p in d["stream_out"]),
+                   stream_in=frozenset(int(p) for p in d["stream_in"]),
+                   last_use=frozenset(int(p) for p in d["last_use"]))
+
+
+def resolve_decisions(ctx, entry, stages: list[Stage]):
+    """Handoff decisions for one evaluation of ``stages``.
+
+    Replays the entry's recorded analysis when present; otherwise analyzes
+    fresh and caches the result onto the entry (rekeyed or pre-analysis
+    entries), so warm calls never re-derive it.  None when the context has
+    handoff disabled.  The single policy point for ``runtime.evaluate`` and
+    the Pipeline fast path."""
+    if not getattr(ctx, "handoff", True):
+        return None
+    if entry is not None and entry.handoff is not None:
+        return entry.handoff
+    ho = analyze(stages)
+    if entry is not None:
+        entry.handoff = ho
+    return ho
+
+
+def _streamable_out(t: st.SplitType, stage_count: int | None) -> bool:
+    """Only concrete array-like grids stream; the chunk count of the output
+    must ride the stage's iteration grid (guarded via the static shape)."""
+    if not isinstance(t, (st.ArraySplit, st.PytreeSplit)):
+        return False
+    info_count = t.shape[t.axis] if isinstance(t, st.ArraySplit) and t.shape \
+        else (t.length if isinstance(t, st.PytreeSplit) else None)
+    return stage_count is None or info_count == stage_count
+
+
+def _stage_count(stage: Stage) -> int | None:
+    for si in stage.inputs.values():
+        t = si.split_type
+        if isinstance(t, st.ArraySplit) and t.shape:
+            return t.shape[t.axis]
+        if isinstance(t, st.PytreeSplit):
+            return t.length
+    return None
+
+
+def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
+    """Per-stage handoff decisions for one planned evaluation.
+
+    O(edges); runs once per plan-cache MISS (the result is stored on the
+    entry) or once per evaluation for uncacheable pipelines.
+    """
+    # node id -> (producer stage, position) over this plan
+    producer: dict[int, tuple[Stage, int]] = {}
+    for s in stages:
+        for n in s.nodes:
+            producer[n.id] = (s, s.pos[n.id])
+
+    # First pass: collect every in-plan edge and whether it accepts the grid.
+    accepts: dict[int, list[bool]] = {}            # node id -> per-edge verdicts
+    edges: dict[tuple[int, int], int] = {}         # (stage id, input pos) -> node id
+    done_edges: dict[tuple[int, int], int] = {}    # cross-evaluation ingests
+    for s in stages:
+        for i, (key, si) in enumerate(s.inputs.items()):
+            v = si.value
+            if not isinstance(v, NodeRef):
+                continue
+            prod = producer.get(v.node_id)
+            if prod is None:
+                # Cross-evaluation edge: the producer already ran.  Permit the
+                # ingest when the consumer's grid is a concrete array split;
+                # the runtime re-checks the actual stream's type.
+                if isinstance(si.split_type, (st.ArraySplit, st.PytreeSplit)):
+                    done_edges[(s.id, i)] = v.node_id
+                continue
+            ps, _pos = prod
+            if ps.id == s.id:
+                continue                           # self-edge: internal value
+            pt = ps.out_types[v.node_id]
+            ok = (_streamable_out(pt, _stage_count(ps))
+                  and pt.can_handoff(si.split_type)
+                  and si.split_type.splittable)
+            accepts.setdefault(v.node_id, []).append(ok)
+            if ok:
+                edges[(s.id, i)] = v.node_id
+
+    # A node streams iff every in-plan consumer edge accepts its grid.  Pure
+    # outputs (no in-plan consumer) stream too: merge only on observation.
+    streamed: set[int] = set()
+    for s in stages:
+        for n in s.nodes:
+            if n.id not in s.escaping:
+                continue
+            t = s.out_types[n.id]
+            if not _streamable_out(t, _stage_count(s)):
+                continue
+            if all(accepts.get(n.id, [])):
+                streamed.add(n.id)
+
+    # Last pending consumer of each handed-off value (the donation point).
+    last_consumer: dict[int, tuple[int, int]] = {}
+    for (sid, i), nid in list(edges.items()) + list(done_edges.items()):
+        if nid in streamed or (sid, i) in done_edges:
+            cur = last_consumer.get(nid)
+            if cur is None or sid > cur[0]:
+                last_consumer[nid] = (sid, i)
+
+    out: dict[int, StageHandoff] = {}
+    for s in stages:
+        stream_out = frozenset(
+            s.pos[n.id] for n in s.nodes if n.id in streamed)
+        stream_in = frozenset(
+            i for (sid, i), nid in edges.items()
+            if sid == s.id and nid in streamed
+        ) | frozenset(i for (sid, i) in done_edges if sid == s.id)
+        last_use = frozenset(
+            i for nid, (sid, i) in last_consumer.items() if sid == s.id)
+        if stream_out or stream_in:
+            out[s.id] = StageHandoff(stream_out, stream_in, last_use)
+    return out

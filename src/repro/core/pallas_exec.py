@@ -39,16 +39,51 @@ from repro.core.stage_exec import (
 )
 
 
+def _effective_block(batch: int, n: int) -> int:
+    """The hardware block an element-count candidate actually compiles to
+    (mirrors ``split_pipeline_call``: clamp to n, round up to the 8x128
+    sublane x lane tile)."""
+    from repro.kernels.split_pipeline import MIN_BLOCK, _round_up
+    return max(MIN_BLOCK, _round_up(min(batch, max(n, 1)), MIN_BLOCK))
+
+
 @register_executor("pallas")
 class PallasExecutor(StageExecutor):
     """Lower eligible elementwise stages onto the split-pipeline TPU kernel;
     anything the kernel cannot express falls back to the fused driver."""
 
     tunable = True
+    # The kernel pads + reshapes whole arrays into its (grid, BLOCK) layout;
+    # a chunk list would be concatenated first anyway, so streams materialize.
+    stream_capable = False
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         if not try_execute_stage_pallas(stage, concrete, ctx, self):
             get_executor("fused").execute(stage, concrete, ctx)
+
+    # -- block-shape-aware tuning (ROADMAP follow-up) ------------------------
+    def tuning_candidates(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                          est: int, n: int) -> list[int]:
+        """Round the §5.2 bracket to valid hardware block multiples.
+
+        The kernel only ever launches BLOCK = k x 1024 (8 sublanes x 128
+        lanes), so raw element-count candidates that resolve to the SAME
+        block are duplicates — measuring them would time one compiled shape
+        twice and call the timer noise a tuning decision.  Candidates are
+        therefore rounded to their effective block first and deduplicated;
+        the chosen block *shape* is recorded in the plan entry
+        (``PlanEntry.block_shape``)."""
+        from repro.core.stage_exec import candidate_batches
+        if n <= 0:
+            return [1]
+        seen: dict[int, int] = {}
+        for c in candidate_batches(est, n):
+            b = _effective_block(c, n)
+            seen.setdefault(b, min(b, n))
+        return sorted(set(seen.values()))
+
+    def note_pinned(self, stage: Stage, ctx, entry, batch: int, n: int) -> None:
+        entry.pin_block_shape(stage.id, (1, _effective_block(batch, n)))
 
 
 def _eligible(stage: Stage, concrete: dict[tuple, Any]) -> bool:
@@ -153,6 +188,11 @@ def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
         out_dtypes.append(node.out_aval.dtype)
 
     interpret = jax.default_backend() != "tpu"
+    entry = getattr(ctx, "_plan_entry", None)
+    if entry is not None:
+        # The block SHAPE this launch compiles to, persisted for warm starts
+        # and EXPLAIN tooling (idempotent: no-op when already recorded).
+        entry.pin_block_shape(stage.id, (1, _effective_block(batch, n)))
     driver = pinned_jit(
         stage, ctx, "pallas", (tuple(esc_pos), batch, interpret),
         lambda: _build_pallas_driver(

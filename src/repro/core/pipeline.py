@@ -34,8 +34,11 @@ points share one lifecycle and one cache.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
 from typing import Any, Callable
+
+import jax
 
 from repro.core.future import Future
 from repro.core.runtime import MozartContext, _stack
@@ -63,16 +66,62 @@ def _force(out: Any) -> Any:
     return out
 
 
+#: sentinel: the fast path declined this call (shape/alias/value mismatch).
+_NO_FAST = object()
+
+
+@dataclasses.dataclass
+class _FastReplay:
+    """Retained capture for the bound-arguments fast path.
+
+    When the wrapped fn is marked *arg-transparent* — its argument arrays
+    flow into annotated calls unmodified and the captured graph's structure
+    does not depend on argument values — re-capturing the graph and
+    re-fingerprinting it per call buys nothing: the plan-cache hit is
+    foregone, and the SAME node set is re-executed with this call's arrays
+    rebound in place.  Built once after ``compile()``; any call whose
+    argument treedef, array shapes/dtypes, alias pattern or non-array values
+    diverge from the example falls back to the full capture path."""
+
+    pending: list                        # retained (pinned) Node objects
+    stages: list                         # their instantiated Stage objects
+    entry: Any                           # resolved plan-cache entry (or None)
+    handoff: Any                         # handoff decisions used at build
+    out: Any                             # fn's return structure (holds Futures)
+    treedef: Any                         # example (args, kwargs) treedef
+    leaf_specs: list                     # per-leaf ("arr", shape, dtype) | ("val", v)
+    alias_sig: tuple                     # first-occurrence index per array leaf
+    node_bindings: list                  # (node index, argname, leaf slot)
+    input_bindings: list                 # (stage index, input key, leaf slot)
+
+
+def _leaf_spec(l: Any):
+    if hasattr(l, "shape") and hasattr(l, "dtype"):
+        return ("arr", tuple(l.shape), str(l.dtype))
+    return ("val", l)
+
+
+def _alias_sig(leaves: list) -> tuple:
+    first: dict[int, int] = {}
+    return tuple(first.setdefault(id(l), j) for j, l in enumerate(leaves)
+                 if hasattr(l, "shape"))
+
+
 class Pipeline:
     """An ahead-of-time-compilable Mozart program (see module docstring)."""
 
     def __init__(self, fn: Callable | None, **config):
         self.fn = fn
+        #: user promise: argument arrays reach annotated calls unmodified and
+        #: graph structure is value-independent -> warm calls may skip graph
+        #: capture + fingerprinting entirely (the bound-arguments fast path).
+        self.arg_transparent = bool(config.pop("arg_transparent", False))
         self.ctx = MozartContext(**config)
         self._lock = threading.RLock()
         self._example: tuple | None = None       # (args, kwargs) from lower()
         self._entry = None                       # resolved plan_cache.PlanEntry
         self._n_stages: int | None = None
+        self._fast: _FastReplay | None = None
         self.compiled = False
         #: stat deltas of the most recent ``__call__`` (includes
         #: ``jit_traces``, the stage_exec trace-counter delta).
@@ -110,6 +159,7 @@ class Pipeline:
             ctx = self.ctx
             _stack().append(ctx)
             try:
+                ctx.stats["graph_captures"] += 1
                 out = self.fn(*args, **kwargs)
             finally:
                 _stack().pop()
@@ -164,26 +214,146 @@ class Pipeline:
         return self
 
     def __call__(self, *args, **kwargs):
-        """Hot path: capture, cache-hit, split, drive pinned drivers, merge."""
+        """Hot path: capture, cache-hit, split, drive pinned drivers, merge.
+
+        With ``arg_transparent=True`` and a completed ``compile()``, warm
+        calls skip even the capture: the retained node set is re-executed
+        with this call's arrays rebound (``_FastReplay``) — zero graph
+        captures, zero fingerprints, zero planner calls, zero retraces."""
         self._require_fn()
         from repro.core import stage_exec
         with self._lock:
             ctx = self.ctx
             before = dict(ctx.stats)
             traces_before = stage_exec.trace_count()
-            _stack().append(ctx)
-            try:
-                out = self.fn(*args, **kwargs)
-                ctx.evaluate()
-            finally:
-                _stack().pop()
-            result = _force(out)
-            ctx.graph.prune()
+            result = _NO_FAST
+            if self._fast is not None:
+                result = self._fast_call(args, kwargs)
+            if result is _NO_FAST:
+                _stack().append(ctx)
+                try:
+                    ctx.stats["graph_captures"] += 1
+                    out = self.fn(*args, **kwargs)
+                    if (self.arg_transparent and self.compiled
+                            and self._fast is None):
+                        result = self._build_fast(out, args, kwargs)
+                    if result is _NO_FAST:
+                        ctx.evaluate()
+                        result = _force(out)
+                finally:
+                    _stack().pop()
+                ctx.graph.prune()
             delta = {k: v - before.get(k, 0)
                      for k, v in ctx.stats.items() if v != before.get(k, 0)}
             delta["jit_traces"] = stage_exec.trace_count() - traces_before
             self.last_call_stats = delta
             return result
+
+    # -- bound-arguments fast path (arg_transparent, ROADMAP follow-up) ------
+    def _build_fast(self, out, args, kwargs):
+        """One instrumented execution that RETAINS the captured node set.
+
+        Runs inside the capture scope.  Returns the forced result, or
+        ``_NO_FAST`` when the pipeline's bindings cannot be proven
+        re-executable (an argument array never reaches a node's bound
+        arguments, or is bound to a static parameter) — in which case the
+        caller falls through to the normal evaluate path and the fast path
+        stays disabled."""
+        from repro.core.graph import NodeRef
+        from repro.core.plan_cache import lookup_or_plan
+        from repro.core.stage_exec import get_executor
+
+        ctx = self.ctx
+        pending = ctx.graph.pending()
+        if not pending:
+            return _NO_FAST
+        pending_ids = {n.id for n in pending}
+        for n in pending:
+            for v in n.bound.values():
+                if isinstance(v, NodeRef) and v.node_id not in pending_ids:
+                    # The fn forces evaluation internally (mozart.evaluate()/
+                    # Future access): the retained set would reference DONE
+                    # producers from the build call — pruned later (KeyError)
+                    # or silently stale on replay.  Not replayable.
+                    return _NO_FAST
+        leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+        slot_of = {id(l): j for j, l in enumerate(leaves)}
+        node_bindings, bound_ids = [], set()
+        for idx, n in enumerate(pending):
+            for name, v in n.bound.items():
+                if isinstance(v, NodeRef) or id(v) not in slot_of:
+                    continue
+                if name in n.fn.sa.static:
+                    return _NO_FAST      # value baked into compiled plans
+                node_bindings.append((idx, name, slot_of[id(v)]))
+                bound_ids.add(id(v))
+        for j, l in enumerate(leaves):
+            if hasattr(l, "shape") and id(l) not in bound_ids:
+                return _NO_FAST          # array arg never reaches a node
+        stages, entry = lookup_or_plan(pending, ctx.graph, ctx)
+        input_bindings = []
+        for s_idx, s in enumerate(stages):
+            for key, si in s.inputs.items():
+                if not isinstance(si.value, NodeRef) and id(si.value) in slot_of:
+                    input_bindings.append((s_idx, key, slot_of[id(si.value)]))
+        from repro.core.handoff import resolve_decisions
+        ho = resolve_decisions(ctx, entry, stages)
+        prev = (ctx._plan_entry, ctx._handoff)
+        ctx._plan_entry, ctx._handoff = entry, ho
+        try:
+            for s in stages:
+                get_executor(ctx.executor).run(s, ctx.graph, ctx)
+        finally:
+            ctx._plan_entry, ctx._handoff = prev
+        for n in pending:
+            n.pinned = True              # survive prune(): re-executed per call
+        self._fast = _FastReplay(
+            pending=pending, stages=stages, entry=entry, handoff=ho, out=out,
+            treedef=treedef, leaf_specs=[_leaf_spec(l) for l in leaves],
+            alias_sig=_alias_sig(leaves), node_bindings=node_bindings,
+            input_bindings=input_bindings)
+        return _force(out)
+
+    def _fast_call(self, args, kwargs):
+        """Re-execute the retained node set with this call's arrays rebound.
+
+        Validates treedef, per-leaf shapes/dtypes, the identity-alias
+        pattern of array leaves and equality of non-array leaves against the
+        build-time example; any divergence returns ``_NO_FAST`` (full
+        capture handles the call, the retained replay stays valid)."""
+        from repro.core.stage_exec import get_executor
+        f = self._fast
+        leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+        if treedef != f.treedef or _alias_sig(leaves) != f.alias_sig:
+            return _NO_FAST
+        for l, spec in zip(leaves, f.leaf_specs):
+            if spec[0] == "arr":
+                if (not hasattr(l, "shape")
+                        or (tuple(l.shape), str(l.dtype)) != spec[1:]):
+                    return _NO_FAST
+            else:
+                try:
+                    if not bool(l == spec[1]):
+                        return _NO_FAST  # non-array args are specialized
+                except Exception:
+                    return _NO_FAST
+        ctx = self.ctx
+        for idx, name, slot in f.node_bindings:
+            f.pending[idx].bound[name] = leaves[slot]
+        for s_idx, key, slot in f.input_bindings:
+            f.stages[s_idx].inputs[key].value = leaves[slot]
+        for n in f.pending:
+            n.result = None
+            n.done = False
+        prev = (ctx._plan_entry, ctx._handoff)
+        ctx._plan_entry, ctx._handoff = f.entry, f.handoff
+        try:
+            for s in f.stages:
+                get_executor(ctx.executor).run(s, ctx.graph, ctx)
+        finally:
+            ctx._plan_entry, ctx._handoff = prev
+        ctx.stats["fast_path_calls"] += 1
+        return _force(f.out)
 
     # -- introspection -------------------------------------------------------
     @property

@@ -64,7 +64,8 @@ from repro.core.planner import Stage, StageInput, _value_key, plan
 _MAX_ENTRIES = 256
 
 #: serialized file format version; bump on any layout change.
-SCHEMA_VERSION = 1
+#: v2: handoff decisions, pallas block shapes, auto exec_meta shape buckets.
+SCHEMA_VERSION = 2
 
 #: process-global cache statistics (benchmarks report these).
 stats: collections.Counter = collections.Counter()
@@ -250,15 +251,21 @@ def context_key_prefix(ctx) -> tuple:
     configuration a plan was cached under.  Mesh geometry is included: under
     "auto" a pinned `sharded` choice (or a batch tuned for one mesh extent)
     must never replay in a session with a different mesh — or none at all.
-    ``configure()`` uses this prefix to re-key entries when knobs change
-    mid-session (``rekey_config``)."""
+    The ``handoff`` flag is included because recorded handoff decisions only
+    apply under the configuration they were analyzed for.  ``configure()``
+    uses this prefix to re-key entries when knobs change mid-session
+    (``rekey_config``)."""
     mesh_fp = None
     if ctx.mesh is not None:
         mesh_fp = tuple((str(a), int(ctx.mesh.shape[a])) for a in ctx.data_axes)
-    return (ctx.executor, ctx.chip.name, bool(ctx.pipeline), mesh_fp)
+    return (ctx.executor, ctx.chip.name, bool(ctx.pipeline), mesh_fp,
+            bool(getattr(ctx, "handoff", True)))
 
 
-_PREFIX_LEN = 4
+_PREFIX_LEN = 5
+
+#: prefix component indices (kept in sync with ``context_key_prefix``).
+_P_EXEC, _P_CHIP, _P_PIPE, _P_MESH, _P_HANDOFF = range(_PREFIX_LEN)
 
 
 def rekey_config(old_prefix: tuple, new_prefix: tuple,
@@ -269,19 +276,27 @@ def rekey_config(old_prefix: tuple, new_prefix: tuple,
     context again — without this, a knob change silently replans from
     scratch while fresh entries accumulate beside the stale ones.  Stage
     *templates* are executor-independent (the planner keys only off the
-    ``pipeline`` flag), so each matching entry is COPIED to ``new_prefix``
-    with its measured state (tuned batches, pinned executors, timings,
-    executables) dropped — it was measured under the old configuration.  The
-    originals stay in place: other sessions and compiled ``Pipeline``s may
-    still be executing under the old configuration, and popping their entry
-    (or its pinned executables) would break their zero-retrace guarantee
-    mid-flight.  A ``pipeline`` flag change alters plan structure itself, so
-    nothing is copied (the new config plans fresh).  ``only_keys`` scopes the
-    copy to the entries the configuring context actually used.  Returns the
-    number of entries re-keyed."""
+    ``pipeline`` flag), so each matching entry is COPIED to ``new_prefix``.
+    Executor-AGNOSTIC measured state migrates with it: tuned chunk sizes,
+    their trial history and pinned Pallas block shapes were measured by
+    re-running the library functions on this chip/mesh and stay valid when
+    only the executor (or handoff) knob changed; they are dropped when the
+    chip or mesh changed (measured on different hardware).  Executor-
+    SELECTION state (``chosen_exec``/``exec_timings``) never migrates — it
+    is what the knob change invalidates.  Handoff decisions are structural
+    (a function of the templates) and always migrate.  The originals stay
+    in place: other sessions and compiled ``Pipeline``s may still be
+    executing under the old configuration, and popping their entry (or its
+    pinned executables) would break their zero-retrace guarantee mid-flight.
+    A ``pipeline`` flag change alters plan structure itself, so nothing is
+    copied (the new config plans fresh).  ``only_keys`` scopes the copy to
+    the entries the configuring context actually used.  Returns the number
+    of entries re-keyed."""
     if old_prefix == new_prefix:
         return 0
-    structural = old_prefix[2] != new_prefix[2]      # pipeline flag
+    structural = old_prefix[_P_PIPE] != new_prefix[_P_PIPE]
+    same_hw = (old_prefix[_P_CHIP] == new_prefix[_P_CHIP]
+               and old_prefix[_P_MESH] == new_prefix[_P_MESH])
     moved = 0
     with _lock:
         for key in [k for k in _entries if k[:_PREFIX_LEN] == old_prefix]:
@@ -295,9 +310,17 @@ def rekey_config(old_prefix: tuple, new_prefix: tuple,
                 continue                             # existing entry wins
             e = _entries[key]
             stats["rekeyed"] += 1
-            _entries[new_key] = PlanEntry(
+            copy = PlanEntry(
                 key=new_key, stage_templates=e.stage_templates,
-                fns=e.fns, fn_names=e.fn_names, loaded=e.loaded)
+                fns=e.fns, fn_names=e.fn_names, loaded=e.loaded,
+                handoff=e.handoff)
+            if same_hw:
+                with e._lock:
+                    copy.tuned_batch = dict(e.tuned_batch)
+                    copy.trials = {k: list(v) for k, v in e.trials.items()}
+                    copy.block_shape = dict(e.block_shape)
+                stats["rekey_migrated_tuned"] += len(copy.tuned_batch)
+            _entries[new_key] = copy
             moved += 1
         _mark_dirty()
     return moved
@@ -332,6 +355,17 @@ class PlanEntry:
     chosen_exec: dict[int, str] = dataclasses.field(default_factory=dict)
     #: executor="auto": measured seconds per (stage, candidate executor).
     exec_timings: dict[int, dict[str, float]] = dataclasses.field(default_factory=dict)
+    #: executor="auto": shape context a pinned choice was measured at
+    #: (element count + log2 bucket) — the re-measurement aging policy
+    #: compares warm-call shapes against it (``cost_model``).
+    exec_meta: dict[int, dict] = dataclasses.field(default_factory=dict)
+    #: pallas: pinned (sublane, lane-multiple) block shape per stage — the
+    #: tuner rounds candidates to valid block multiples and records the
+    #: winner here (``pallas_exec.PallasExecutor``).
+    block_shape: dict[int, tuple] = dataclasses.field(default_factory=dict)
+    #: cross-stage chunk handoff decisions (``handoff.analyze``), keyed by
+    #: stage id; None = not analyzed (handoff disabled / pre-analysis entry).
+    handoff: dict | None = None
     hits: int = 0
     loaded: bool = False                             # rehydrated from disk
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
@@ -391,10 +425,28 @@ class PlanEntry:
         with self._lock:
             self._tuning.discard(("exec", stage_id))
 
-    def pin_exec(self, stage_id: int, name: str) -> None:
+    def pin_exec(self, stage_id: int, name: str, n: int | None = None) -> None:
         with self._lock:
             self.chosen_exec[stage_id] = str(name)
+            if n is not None:
+                self.exec_meta[stage_id] = {
+                    "n": int(n), "bucket": int(n).bit_length()}
             self._tuning.discard(("exec", stage_id))
+        _mark_dirty()
+
+    def unpin_exec(self, stage_id: int) -> None:
+        """Age out a pinned executor choice (shape-drift re-measurement)."""
+        with self._lock:
+            self.chosen_exec.pop(stage_id, None)
+            self.exec_meta.pop(stage_id, None)
+        _mark_dirty()
+
+    def pin_block_shape(self, stage_id: int, shape: tuple) -> None:
+        shape = tuple(int(x) for x in shape)
+        with self._lock:
+            if self.block_shape.get(stage_id) == shape:
+                return                   # idempotent: no save-dirtying spam
+            self.block_shape[stage_id] = shape
         _mark_dirty()
 
     def record_exec_timing(self, stage_id: int, name: str, seconds: float) -> None:
@@ -526,6 +578,12 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
         with _lock:
             stats["uncacheable"] += 1
         return stages, None
+    # Handoff analysis is structural: run it once at plan time and record the
+    # decisions on the entry so warm calls replay them with zero analysis.
+    ho = None
+    if getattr(ctx, "handoff", True):
+        from repro.core import handoff as _ho
+        ho = _ho.analyze(stages)
     with _lock:
         existing = _entries.get(key)
         if existing is not None and existing.matches(pending):
@@ -533,7 +591,8 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
         else:
             entry = PlanEntry(key=key, stage_templates=templates,
                               fns=tuple(n.fn for n in pending),
-                              fn_names=tuple(n.fn.name for n in pending))
+                              fn_names=tuple(n.fn.name for n in pending),
+                              handoff=ho)
             _entries[key] = entry
             _mark_dirty()
             while len(_entries) > _MAX_ENTRIES:
@@ -618,12 +677,18 @@ def _entry_enc(e: PlanEntry) -> dict:
         tuned = dict(e.tuned_batch)
         chosen = dict(e.chosen_exec)
         timings = {k: dict(v) for k, v in e.exec_timings.items()}
+        meta = {k: dict(v) for k, v in e.exec_meta.items()}
+        blocks = dict(e.block_shape)
     return {
         "key": _enc(e.key),
         "fn_names": list(e.fn_names),
         "tuned_batch": {str(k): v for k, v in tuned.items()},
         "chosen_exec": {str(k): v for k, v in chosen.items()},
         "exec_timings": {str(k): v for k, v in timings.items()},
+        "exec_meta": {str(k): v for k, v in meta.items()},
+        "block_shape": {str(k): list(v) for k, v in blocks.items()},
+        "handoff": None if e.handoff is None else {
+            str(sid): ho.to_json() for sid, ho in e.handoff.items()},
         "templates": [
             {
                 "positions": tm.positions,
@@ -650,6 +715,8 @@ def _entry_dec(d: dict, classes: dict[str, type]) -> PlanEntry:
         )
         for tm in d["templates"]
     ]
+    from repro.core.handoff import StageHandoff
+    raw_ho = d.get("handoff")
     return PlanEntry(
         key=_dec(d["key"]),
         stage_templates=templates,
@@ -659,6 +726,12 @@ def _entry_dec(d: dict, classes: dict[str, type]) -> PlanEntry:
         chosen_exec={int(k): str(v) for k, v in d["chosen_exec"].items()},
         exec_timings={int(k): {str(n): float(s) for n, s in v.items()}
                       for k, v in d["exec_timings"].items()},
+        exec_meta={int(k): {str(n): int(s) for n, s in v.items()}
+                   for k, v in d.get("exec_meta", {}).items()},
+        block_shape={int(k): tuple(int(x) for x in v)
+                     for k, v in d.get("block_shape", {}).items()},
+        handoff=None if raw_ho is None else {
+            int(sid): StageHandoff.from_json(ho) for sid, ho in raw_ho.items()},
         loaded=True,
     )
 

@@ -43,6 +43,7 @@ class MozartContext:
         plan_cache: bool = True,
         autotune: bool = True,
         plan_cache_path: str | None = None,
+        handoff: bool = True,
     ):
         self.executor = executor
         self.chip = chip
@@ -56,6 +57,7 @@ class MozartContext:
         self.pipeline = pipeline                 # False: Table-4 "-pipe" ablation
         self.plan_cache = plan_cache             # reuse plans across evaluations
         self.autotune = autotune                 # measure+pin chunk sizes on cached plans
+        self.handoff = handoff                   # cross-stage chunk handoff (core/handoff.py)
         # Persist plans/tuned batches/executor choices across processes.  The
         # MOZART_PLAN_CACHE env var pre-warms every context (serving replicas
         # restart with pinned plans: zero planner calls, zero tuning runs).
@@ -65,6 +67,7 @@ class MozartContext:
         self.graph = DataflowGraph()
         self.stats: collections.Counter = collections.Counter()
         self._plan_entry = None                  # active plan_cache.PlanEntry
+        self._handoff = None                     # active handoff decisions
         self._batch_override: int | None = None  # set by the auto-tuner only
         self._n_cap: int | None = None           # set during sampled tuning only
         self._entry_keys: set = set()            # cache keys this context used
@@ -114,18 +117,23 @@ class MozartContext:
                 names = ",".join(n.fn.name for n in s.nodes)
                 print(f"[mozart] stage {s.id}: [{names}] inputs="
                       f"{[str(si.split_type) for si in s.inputs.values()]}")
+        # Handoff decisions: replayed from the cache entry (zero analysis on
+        # warm calls); uncacheable pipelines analyze fresh per evaluation.
+        from repro.core.handoff import resolve_decisions
+        ho = resolve_decisions(self, entry, stages)
         # Save/restore (not clear): a dynamic node forcing a Future of this
         # same session re-enters evaluate(), and the outer plan's entry must
         # survive the nested call.
-        prev_entry = self._plan_entry
+        prev_entry, prev_ho = self._plan_entry, self._handoff
         self._plan_entry = entry
+        self._handoff = ho
         try:
             # Dispatch PER STAGE: under ``executor="auto"`` each stage is
             # scored and routed independently (cost_model.AutoExecutor).
             for s in stages:
                 get_executor(self.executor).run(s, self.graph, self)
         finally:
-            self._plan_entry = prev_entry
+            self._plan_entry, self._handoff = prev_entry, prev_ho
         self.graph.prune()
 
     def last_plan(self):

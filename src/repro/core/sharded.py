@@ -44,6 +44,10 @@ class ShardedExecutor(StageExecutor):
     """Splits = mesh shards; per-device chunk loop handles the VMEM tier."""
 
     tunable = True           # tunes the INNER per-shard chunk loop
+    # shard_map partitions one whole array across the mesh; a host-side chunk
+    # list has no sharding story, so handed-off streams materialize on ingest
+    # (resolve_stage_inputs) before the shard_map launch.
+    stream_capable = False
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         execute_stage_sharded(stage, concrete, ctx, self)

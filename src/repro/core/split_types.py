@@ -77,6 +77,57 @@ class SplitType:
     def merge(self, pieces: Sequence[Any]) -> Any:
         raise NotImplementedError
 
+    # -- cross-stage chunk handoff (core/handoff.py) -----------------------
+    def can_handoff(self, consumer: "SplitType") -> bool:
+        """True when pieces of a value split by ``self`` may be ingested
+        directly by a consumer whose input split type is ``consumer`` —
+        i.e. corresponding chunks of the producer's grid ARE what the
+        consumer's ``split`` would have produced, so the merge→re-split
+        round trip at the stage boundary can be skipped entirely."""
+        return False
+
+    def rechunk(self, chunks: Sequence[Any],
+                src_ranges: Sequence[tuple[int, int]],
+                dst_ranges: Sequence[tuple[int, int]]) -> tuple[list[Any], int]:
+        """Regroup a chunk list from one grid onto another.
+
+        Converts pieces laid out on ``src_ranges`` to pieces on
+        ``dst_ranges`` (both sorted, covering the same [0, n) extent) using
+        only ``split``/``merge`` in chunk-local coordinates — a destination
+        chunk aligned with a single source chunk is passed through by
+        reference (zero copy); spanning or sub-slicing chunks pay a partial
+        copy.  Returns ``(new_chunks, bytes_copied)`` so callers can account
+        the partial materialization (``stage_exec.bytes_materialized``).
+        Grids that are integer multiples of each other regroup with at most
+        one copy of the data; a full merge + re-split always pays two.
+        """
+        out: list[Any] = []
+        copied = 0
+        si = 0
+        for ds, de in dst_ranges:
+            parts: list[Any] = []
+            while si < len(src_ranges) and src_ranges[si][1] <= ds:
+                si += 1
+            j = si
+            aligned = j < len(src_ranges) and src_ranges[j] == (ds, de)
+            while j < len(src_ranges) and src_ranges[j][0] < de:
+                ss, se = src_ranges[j]
+                lo, hi = max(ds, ss), min(de, se)
+                c = chunks[j]
+                if lo == ss and hi == se:
+                    parts.append(c)
+                else:                      # partial overlap: chunk-local slice
+                    parts.append(self.split(c, lo - ss, hi - ss))
+                j += 1
+            if aligned:
+                piece = parts[0]           # exact alignment: pass through
+            else:
+                piece = self.merge(parts) if len(parts) > 1 else parts[0]
+                copied += sum(nbytes_of(l) for l in
+                              jax.tree_util.tree_leaves(piece))
+            out.append(piece)
+        return out, copied
+
 
 class ScalarSplit(SplitType):
     """The paper's "_" type: the value is copied to every pipeline."""
@@ -144,6 +195,11 @@ class ArraySplit(SplitType):
         if len(pieces) == 1:
             return pieces[0]
         return jnp.concatenate(list(pieces), axis=self.axis)
+
+    def can_handoff(self, consumer: "SplitType") -> bool:
+        # Identical geometry AND iteration axis: chunk i of the producer's
+        # grid is exactly what the consumer's split(v, s, e) would yield.
+        return isinstance(consumer, ArraySplit) and consumer.key() == self.key()
 
 
 class ReduceSplit(SplitType):
@@ -286,6 +342,9 @@ class PytreeSplit(SplitType):
         return jax.tree_util.tree_map(
             lambda *ls: jnp.concatenate(ls, axis=self.axis), *pieces
         )
+
+    def can_handoff(self, consumer: "SplitType") -> bool:
+        return isinstance(consumer, PytreeSplit) and consumer.key() == self.key()
 
 
 # ---------------------------------------------------------------------------

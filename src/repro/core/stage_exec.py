@@ -93,12 +93,19 @@ def available_executors() -> tuple[str, ...]:
 # ---------------------------------------------------------------------------
 
 
+def _info_arg(v: Any) -> Any:
+    """What to hand a split type's ``info``: a handed-off ChunkStream stands
+    in for its full value via its aval (same shapes/dtypes, and pytree avals
+    flatten where the stream object itself would not)."""
+    return v.aval if isinstance(v, ChunkStream) else v
+
+
 def stage_num_elements(stage: Stage, concrete: dict[tuple, Any], pedantic: bool) -> int:
     counts = set()
     for key, si in stage.inputs.items():
         if not si.split_type.splittable:
             continue
-        info = si.split_type.info(concrete[key])
+        info = si.split_type.info(_info_arg(concrete[key]))
         if info is not None:
             counts.add(info.num_elements)
     if len(counts) > 1:
@@ -112,7 +119,7 @@ def stage_elem_bytes(stage: Stage, concrete: dict[tuple, Any], n: int) -> int:
     for key, si in stage.inputs.items():
         if not si.split_type.splittable:
             continue
-        info = si.split_type.info(concrete[key])
+        info = si.split_type.info(_info_arg(concrete[key]))
         if info is not None:
             total += info.elem_bytes
     for node in stage.nodes:
@@ -166,6 +173,116 @@ def trace_count() -> int:
 
 
 # ---------------------------------------------------------------------------
+# Stage-boundary traffic accounting
+# ---------------------------------------------------------------------------
+
+#: process-global count of bytes moved at stage BOUNDARIES: bytes written by
+#: merges of multi-chunk partials (``finish_stage``, ``ChunkStream.
+#: materialize``, ``SplitType.rechunk`` copies) plus bytes re-sliced when a
+#: stage splits a value that another stage produced.  Splitting EXTERNAL
+#: pipeline inputs is not counted (that split is inherent to chunking, not a
+#: boundary round trip).  Cross-stage chunk handoff exists to drive the
+#: interior-boundary component of this counter to zero — asserted by
+#: ``benchmarks.run --smoke`` (the ``smoke/handoff`` row) and
+#: tests/test_handoff.py.
+_BYTES_MATERIALIZED = 0
+
+
+def note_materialized(nbytes: int) -> None:
+    global _BYTES_MATERIALIZED
+    _BYTES_MATERIALIZED += int(nbytes)
+
+
+def bytes_materialized() -> int:
+    return _BYTES_MATERIALIZED
+
+
+def _value_nbytes(v: Any) -> int:
+    return sum(st.nbytes_of(l) for l in jax.tree_util.tree_leaves(v)
+               if hasattr(l, "shape") or isinstance(l, (int, float, complex, bool)))
+
+
+# ---------------------------------------------------------------------------
+# ChunkStream: the unmerged stage-output value form (cross-stage handoff)
+# ---------------------------------------------------------------------------
+
+
+class ChunkStream:
+    """A stage output left as its chunk list + grid metadata.
+
+    When every consumer of a node can ingest the producer's chunk grid
+    directly (``core/handoff.py`` records the decision in the plan entry),
+    ``finish_stage`` stores one of these instead of merging — the
+    merge→re-split round trip at the stage boundary disappears.  The merge
+    happens lazily, and only if the value is actually *observed* (a
+    ``Future`` forces it, or a stream-incapable executor resolves it);
+    ``materialize`` caches the merged value so it is paid at most once.
+    """
+
+    __slots__ = ("chunks", "ranges", "split_type", "aval", "_merged", "consumed")
+
+    def __init__(self, chunks: list, ranges: list, split_type: st.SplitType,
+                 aval: Any):
+        self.chunks = list(chunks)
+        self.ranges = list(ranges)
+        self.split_type = split_type
+        self.aval = aval                   # full-value ShapeDtypeStruct pytree
+        self._merged = None
+        self.consumed = False              # chunk buffers donated to a driver
+
+    # -- aval-like surface (batch sizing reads .shape/.dtype) ---------------
+    @property
+    def shape(self):
+        return self.aval.shape
+
+    @property
+    def dtype(self):
+        return self.aval.dtype
+
+    @property
+    def ndim(self):
+        return len(self.aval.shape)
+
+    @property
+    def n(self) -> int:
+        return self.ranges[-1][1] if self.ranges else 0
+
+    def uniform_batch(self) -> int | None:
+        """Chunk size when the grid is regular (ragged tail allowed)."""
+        if not self.ranges:
+            return None
+        sizes = [e - s for s, e in self.ranges]
+        body = sizes[:-1] or sizes
+        return body[0] if len(set(body)) == 1 else None
+
+    def compatible(self, consumer_type: st.SplitType) -> bool:
+        return (not self.consumed
+                and self.split_type.can_handoff(consumer_type))
+
+    def materialize(self) -> Any:
+        """Merge (once) and return the full value; counts boundary bytes."""
+        if self._merged is None:
+            if self.consumed:
+                raise RuntimeError(
+                    "ChunkStream buffers were donated to a driver and can no "
+                    "longer be merged (handoff analysis bug: a donated stream "
+                    "was observed afterwards)")
+            self._merged = self.split_type.merge(self.chunks)
+            if len(self.chunks) > 1:
+                note_materialized(_value_nbytes(self._merged))
+        return self._merged
+
+    def __repr__(self) -> str:
+        return (f"ChunkStream({len(self.chunks)} chunks, n={self.n}, "
+                f"{self.split_type})")
+
+
+def materialize(v: Any) -> Any:
+    """ChunkStream -> merged value; anything else passes through."""
+    return v.materialize() if isinstance(v, ChunkStream) else v
+
+
+# ---------------------------------------------------------------------------
 # Per-chunk chain driving (position-keyed)
 # ---------------------------------------------------------------------------
 #
@@ -178,12 +295,32 @@ def trace_count() -> int:
 
 
 def chunk_env_for(stage: Stage, concrete: dict[tuple, Any], s: int, e: int,
-                  pedantic: bool) -> dict[tuple, Any]:
+                  pedantic: bool, chunk_index: int | None = None,
+                  force_slice: frozenset | tuple = ()) -> dict[tuple, Any]:
+    """Build one chunk's canonical env.  ``force_slice`` lists canonical keys
+    that must be REAL slices even for identity ranges — buffers about to be
+    donated must never alias a producer's retained result."""
     env: dict[tuple, Any] = {}
     for key, si in stage.inputs.items():
         v = concrete[key]
+        if isinstance(v, ChunkStream):
+            # Handed-off input: chunk ``chunk_index`` of the producer's grid
+            # IS this range's piece — no slice, no boundary traffic.
+            env[stage.ckey(key)] = v.chunks[chunk_index]
+            continue
         if si.split_type.splittable:
+            if s == 0 and not pedantic and stage.ckey(key) not in force_slice:
+                info = si.split_type.info(v)
+                if info is not None and e == info.num_elements:
+                    # Identity slice (single-chunk stage): pass the whole
+                    # value through — no dispatch, no boundary traffic.
+                    env[stage.ckey(key)] = v
+                    continue
             piece = si.split_type.split(v, s, e)
+            if isinstance(si.value, NodeRef):
+                # Re-slicing another stage's merged output: the round trip
+                # the handoff subsystem exists to remove.
+                note_materialized(_value_nbytes(piece))
             if pedantic and hasattr(piece, "shape") and 0 in piece.shape:
                 raise PedanticError(f"empty split for {key} range [{s},{e})")
             env[stage.ckey(key)] = piece
@@ -238,12 +375,32 @@ def run_chain(stage: Stage, env: dict[tuple, Any], jit_each: bool) -> None:
     run_plan(chain_plan(stage), env, jit_each=jit_each)
 
 
-def finish_stage(stage: Stage, partials: dict[int, list[Any]]) -> None:
-    """Merge per-chunk partials (keyed by stage-local node POSITION)."""
+def finish_stage(stage: Stage, partials: dict[int, list[Any]],
+                 ranges: list[tuple[int, int]] | None = None,
+                 ctx=None) -> None:
+    """Merge per-chunk partials (keyed by stage-local node POSITION).
+
+    With a handoff plan active (``ctx._handoff``), nodes whose every
+    consumer accepts the producer grid are left UNMERGED as a
+    :class:`ChunkStream` over ``ranges`` — the boundary merge happens lazily
+    and only if the value is actually observed."""
+    ho = None
+    if ctx is not None and ranges is not None:
+        plan = getattr(ctx, "_handoff", None)
+        ho = plan.get(stage.id) if plan else None
     for node in stage.nodes:
         p = stage.pos[node.id]
         if p in partials:
-            node.result = stage.out_types[node.id].merge(partials[p])
+            t = stage.out_types[node.id]
+            pieces = partials[p]
+            if (ho is not None and p in ho.stream_out
+                    and len(pieces) == len(ranges) and len(pieces) > 1):
+                node.result = ChunkStream(pieces, ranges, t, node.out_aval)
+                ctx.stats["streamed_outputs"] += 1
+            else:
+                node.result = t.merge(pieces)
+                if len(pieces) > 1 and not isinstance(t, st.ScalarSplit):
+                    note_materialized(_value_nbytes(node.result))
         node.done = True
 
 
@@ -288,6 +445,53 @@ def has_dynamic(stage: Stage) -> bool:
     )
 
 
+# ---------------------------------------------------------------------------
+# Stream-aware input resolution (cross-stage handoff)
+# ---------------------------------------------------------------------------
+
+
+def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
+                         streams_ok: bool, tally: bool = True) -> dict[tuple, Any]:
+    """Resolve stage inputs, ingesting producer ChunkStreams where allowed.
+
+    An input keeps its stream form only when (a) the executor can iterate a
+    chunk list (``streams_ok``), (b) the handoff plan marked this input
+    position as a stream ingest, and (c) the stream's grid actually fits the
+    input's split type at run time (always re-checked: cross-evaluation
+    edges carry whatever grid the *previous* evaluation produced).  Anything
+    else is materialized — correct by construction, merely the old cost.
+    ``tally=False`` skips the ingest/materialize stats (scoring-only
+    resolves, e.g. ``AutoExecutor``, whose delegate re-resolves and counts)."""
+    plan = getattr(ctx, "_handoff", None)
+    ho = plan.get(stage.id) if plan else None
+    concrete: dict[tuple, Any] = {}
+    for i, (key, si) in enumerate(stage.inputs.items()):
+        v = graph.resolve(si.value)
+        if isinstance(v, ChunkStream):
+            if (streams_ok and ho is not None and i in ho.stream_in
+                    and v.compatible(si.split_type)):
+                if tally:
+                    ctx.stats["stream_ingests"] += 1
+            else:
+                v = v.materialize()
+                if tally:
+                    ctx.stats["stream_materialized"] += 1
+        concrete[key] = v
+    return concrete
+
+
+def materialize_inputs(stage: Stage, concrete: dict[tuple, Any],
+                       ctx=None) -> dict[tuple, Any]:
+    """Merge any stream inputs (tuning/measurement paths need real arrays)."""
+    out = dict(concrete)
+    for key, v in concrete.items():
+        if isinstance(v, ChunkStream):
+            out[key] = v.materialize()
+            if ctx is not None:
+                ctx.stats["stream_materialized"] += 1
+    return out
+
+
 def split_axis_of(t: st.SplitType) -> int | None:
     if isinstance(t, st.ArraySplit):
         return t.axis
@@ -301,7 +505,8 @@ def _block_stage_outputs(stage: Stage) -> None:
     for node in stage.nodes:
         if node.id in stage.escaping and node.result is not None:
             try:
-                jax.block_until_ready(node.result)
+                r = node.result
+                jax.block_until_ready(r.chunks if isinstance(r, ChunkStream) else r)
             except Exception:
                 pass  # non-array results (tables, corpora): nothing async
 
@@ -342,12 +547,18 @@ class StageExecutor:
     #: whether ``choose_batch`` output meaningfully affects this strategy —
     #: only tunable executors participate in chunk-size auto-tuning.
     tunable: bool = False
+    #: whether ``execute`` can iterate a ChunkStream input directly (the
+    #: chunk-loop drivers can; whole-array strategies materialize instead).
+    stream_capable: bool = False
 
     # -- template method ----------------------------------------------------
     def run(self, stage: Stage, graph: DataflowGraph, ctx) -> None:
-        concrete = {key: graph.resolve(si.value) for key, si in stage.inputs.items()}
+        concrete = resolve_stage_inputs(stage, graph, ctx, self.stream_capable)
         entry = getattr(ctx, "_plan_entry", None)
         if self._should_tune(stage, ctx, entry):
+            # Sampled tuning re-slices inputs at arbitrary offsets: a one-time
+            # event, so streams are merged rather than complicating sampling.
+            concrete = materialize_inputs(stage, concrete, ctx)
             self._tune(stage, concrete, ctx, entry)
         else:
             self.execute(stage, concrete, ctx)
@@ -403,6 +614,7 @@ class StageExecutor:
             cands = self.tuning_candidates(stage, concrete, ctx, est, n)
             if len(cands) == 1:
                 entry.pin(stage.id, cands[0])
+                self.note_pinned(stage, ctx, entry, cands[0], n)
                 pinned = True
                 self.execute(stage, concrete, ctx)
                 return
@@ -415,7 +627,9 @@ class StageExecutor:
                 entry.record_trial(stage.id, b, dt)
                 if best_dt is None or dt < best_dt:
                     best, best_dt = b, dt
-            entry.pin(stage.id, best if best is not None else est)
+            chosen = best if best is not None else est
+            entry.pin(stage.id, chosen)
+            self.note_pinned(stage, ctx, entry, chosen, n)
             pinned = True
             if best is not None:
                 ctx.stats["autotuned_stages"] += 1
@@ -431,8 +645,13 @@ class StageExecutor:
                           est: int, n: int) -> list[int]:
         """Chunk-size candidates the tuner measures (§5.2 bracket by default;
         executors with extra geometry constraints — e.g. ``sharded``'s
-        per-shard loop — override to reshape the candidate space)."""
+        per-shard loop, ``pallas``'s hardware block multiples — override to
+        reshape the candidate space)."""
         return candidate_batches(est, n)
+
+    def note_pinned(self, stage: Stage, ctx, entry, batch: int, n: int) -> None:
+        """Hook after the tuner pins ``batch`` (e.g. ``pallas`` records the
+        hardware block *shape* the winning element count resolves to)."""
 
     def sample_elems(self, ctx, batch: int, n: int) -> int:
         """Elements one timed sample re-executes.  ``sharded`` rounds this to

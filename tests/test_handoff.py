@@ -1,0 +1,468 @@
+"""Cross-stage chunk handoff: the merge→re-split eliminator.
+
+Covers: the SplitType ``can_handoff``/``rechunk`` protocol; differential
+parity (handoff on vs off) across every registered executor and across
+ElementSplit/ReduceSplit/broadcast/axis-mismatch edges with empty and
+odd-size inputs; boundary-traffic accounting (``stage_exec.
+bytes_materialized`` — interior boundaries drop to zero under handoff);
+chunk-buffer donation safety; and a ``MOZART_PLAN_CACHE`` round trip
+asserting recorded handoff decisions replay in a fresh process with zero
+planner calls.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mozart, plan_cache, stage_exec
+from repro.core import annotated_numpy as anp
+from repro.core import split_types as st
+from repro.core.stage_exec import ChunkStream, available_executors
+
+
+def _ranges(n, b):
+    return [(s, min(s + b, n)) for s in range(0, n, b)]
+
+
+# ---------------------------------------------------------------------------
+# The SplitType handoff protocol
+# ---------------------------------------------------------------------------
+
+
+class TestCanHandoff:
+    def test_array_split_same_grid(self):
+        a = st.ArraySplit((100,), 0)
+        assert a.can_handoff(st.ArraySplit((100,), 0))
+
+    def test_array_split_axis_mismatch(self):
+        assert not st.ArraySplit((8, 8), 0).can_handoff(st.ArraySplit((8, 8), 1))
+
+    def test_array_split_shape_mismatch(self):
+        assert not st.ArraySplit((100,), 0).can_handoff(st.ArraySplit((99,), 0))
+
+    def test_non_splittable_consumers_refuse(self):
+        a = st.ArraySplit((100,), 0)
+        assert not a.can_handoff(st.BROADCAST)
+        assert not a.can_handoff(st.ReduceSplit("add"))
+        assert not a.can_handoff(st.ConcatSplit("t", 0))
+
+    def test_non_array_producers_refuse(self):
+        c = st.ArraySplit((100,), 0)
+        assert not st.BROADCAST.can_handoff(c)
+        assert not st.ReduceSplit("add").can_handoff(c)
+        assert not st.UnknownSplit().can_handoff(c)
+
+    def test_pytree_split(self):
+        p = st.PytreeSplit("td", 10, 0)
+        assert p.can_handoff(st.PytreeSplit("td", 10, 0))
+        assert not p.can_handoff(st.PytreeSplit("td", 11, 0))
+        assert not p.can_handoff(st.ArraySplit((10,), 0))
+
+
+class TestRechunk:
+    def _chunks(self, t, x, grid):
+        return [t.split(x, s, e) for s, e in grid]
+
+    @pytest.mark.parametrize("src_b,dst_b", [(4, 4), (4, 8), (8, 4), (10, 4), (4, 10)])
+    def test_round_trips_any_aligned_grids(self, src_b, dst_b):
+        n = 20
+        t = st.ArraySplit((n,), 0)
+        x = jnp.arange(n, dtype=jnp.float32)
+        out, copied = t.rechunk(self._chunks(t, x, _ranges(n, src_b)),
+                                _ranges(n, src_b), _ranges(n, dst_b))
+        assert len(out) == len(_ranges(n, dst_b))
+        np.testing.assert_array_equal(np.asarray(t.merge(out)), np.asarray(x))
+        if src_b == dst_b:
+            assert copied == 0          # identical grids: pure pass-through
+        else:
+            assert copied > 0
+
+    def test_identity_passthrough_by_reference(self):
+        n, b = 16, 4
+        t = st.ArraySplit((n,), 0)
+        chunks = self._chunks(t, jnp.arange(n, dtype=jnp.float32), _ranges(n, b))
+        out, copied = t.rechunk(chunks, _ranges(n, b), _ranges(n, b))
+        assert copied == 0
+        assert all(o is c for o, c in zip(out, chunks))
+
+    def test_coarsen_costs_at_most_one_copy(self):
+        n, src_b, dst_b = 64, 8, 16
+        t = st.ArraySplit((n,), 0)
+        x = jnp.arange(n, dtype=jnp.float32)
+        out, copied = t.rechunk(self._chunks(t, x, _ranges(n, src_b)),
+                                _ranges(n, src_b), _ranges(n, dst_b))
+        assert copied == int(x.nbytes)  # one copy — merge+re-split pays two
+        np.testing.assert_array_equal(np.asarray(t.merge(out)), np.asarray(x))
+
+    def test_pytree_split_rechunk(self):
+        n = 12
+        leaves = {"a": jnp.arange(n, dtype=jnp.float32),
+                  "b": jnp.ones((n, 2), jnp.float32)}
+        t = st.PytreeSplit("td", n, 0)
+        out, copied = t.rechunk([t.split(leaves, s, e) for s, e in _ranges(n, 3)],
+                                _ranges(n, 3), _ranges(n, 6))
+        merged = t.merge(out)
+        np.testing.assert_array_equal(np.asarray(merged["a"]),
+                                      np.asarray(leaves["a"]))
+        assert copied > 0
+
+
+# ---------------------------------------------------------------------------
+# Differential: handoff on == handoff off, everywhere
+# ---------------------------------------------------------------------------
+
+
+def _eval_chain(x, evals=3):
+    """Multi-evaluation elementwise chain: every evaluation boundary is a
+    producer→consumer edge with identical ArraySplit grids (the serve-decode
+    shape — exactly where the merge→re-split round trip used to live)."""
+    cur = x
+    for _ in range(evals):
+        cur = anp.multiply(anp.add(cur, 1.0), 0.5)
+        mozart.evaluate()
+    return cur
+
+
+def _reduce_edge(x):
+    """ElementSplit stage → ReduceSplit output → broadcast into the next
+    evaluation: the boundary must merge (partials), never stream."""
+    s = anp.sum(anp.exp(x))
+    mozart.evaluate()
+    return anp.multiply(x, s)
+
+
+def _axis_mismatch(m):
+    """Row-split then column-split: boundary with INCOMPATIBLE grids."""
+    a = anp.normalize_axis(m, axis=1)
+    mozart.evaluate()
+    return anp.normalize_axis(a, axis=0)
+
+
+SURFACES = {
+    "element_chain": (lambda: jnp.linspace(0., 1., 10_000, dtype=jnp.float32),
+                      _eval_chain),
+    "reduce_edge": (lambda: jnp.linspace(0., 1., 10_000, dtype=jnp.float32),
+                    _reduce_edge),
+    "axis_mismatch": (lambda: jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32),
+                      _axis_mismatch),
+    "empty": (lambda: jnp.zeros((0,), jnp.float32), _eval_chain),
+    "odd_size": (lambda: jnp.linspace(0., 1., 17, dtype=jnp.float32),
+                 lambda x: _eval_chain(x, evals=2)),
+}
+
+
+@pytest.mark.parametrize("surface", sorted(SURFACES))
+@pytest.mark.parametrize("executor", sorted(available_executors()))
+def test_differential_handoff_on_off(executor, surface):
+    make, fn = SURFACES[surface]
+    if executor == "sharded" and surface in ("empty", "odd_size", "axis_mismatch"):
+        pytest.skip("sharded requires mesh-divisible element counts")
+    kwargs = {"batch_elements": 2048 if surface != "odd_size" else 4}
+    if executor == "sharded":
+        kwargs["mesh"] = jax.make_mesh((1,), ("data",))
+    outs = {}
+    for handoff in (True, False):
+        plan_cache.clear()
+        with mozart.session(executor=executor, handoff=handoff, **kwargs) as ctx:
+            out = np.asarray(fn(make()))
+        outs[handoff] = (out, dict(ctx.stats))
+    np.testing.assert_allclose(outs[True][0], outs[False][0],
+                               rtol=2e-5, atol=1e-6)
+    # handoff=False must never stream or ingest
+    assert outs[False][1].get("streamed_outputs", 0) == 0
+    assert outs[False][1].get("stream_ingests", 0) == 0
+
+
+def test_pytree_split_streams_end_to_end():
+    """PytreeSplit outputs hand off like arrays: a chained pytree pipeline
+    (optimizer-state shape) streams across evaluation boundaries, and batch
+    sizing reads the stream's AVAL (the stream object is not a pytree)."""
+    from repro.core import splittable
+    from repro.core import split_types as _st
+
+    @splittable(s=_st.Pytree(0), ret=_st.Pytree(0))
+    def tree_step(s):
+        return {"p": s["p"] * 0.5 + 1.0, "m": s["m"] + s["p"][:, None]}
+
+    n = 4096
+    state = {"p": jnp.arange(n, dtype=jnp.float32),
+             "m": jnp.ones((n, 2), jnp.float32)}
+    outs = {}
+    for handoff in (True, False):
+        plan_cache.clear()
+        with mozart.session(executor="fused", batch_elements=512,
+                            handoff=handoff) as ctx:
+            cur = state
+            for _ in range(3):
+                cur = tree_step(cur)
+                mozart.evaluate()
+            outs[handoff] = (jax.tree_util.tree_map(np.asarray, cur.value),
+                             dict(ctx.stats))
+    assert outs[True][1].get("streamed_outputs", 0) == 3
+    assert outs[True][1].get("stream_ingests", 0) == 2
+    for k in ("p", "m"):
+        np.testing.assert_allclose(outs[True][0][k], outs[False][0][k],
+                                   rtol=1e-6)
+
+
+def test_auto_executor_stream_stats_not_double_counted():
+    """AutoExecutor resolves once for scoring and the delegate resolves
+    again for execution — only the delegate's resolve may tally.  Delegates
+    are pinned to the stream-capable `fused` so the streams actually exist
+    (auto's own measured pick on this host is `eager`, which never chunks)."""
+    n = 20_000
+    x = jnp.linspace(0., 1., n, dtype=jnp.float32)
+    plan_cache.clear()
+
+    def once():
+        with mozart.session(executor="auto", batch_elements=4096) as ctx:
+            out = np.asarray(_eval_chain(x))
+        return out, ctx
+
+    out1, _ = once()
+    for e in plan_cache.entries():      # pin every stage to the fused driver
+        for tm_id in range(len(e.stage_templates)):
+            e.pin_exec(tm_id, "fused")
+    out2, ctx = once()                  # warm: auto replays the pins
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+    assert ctx.stats["auto_pinned_replays"] == 3
+    assert ctx.stats["streamed_outputs"] == 3
+    # 2 interior edges: exactly ONE ingest event per edge, no double tally
+    assert ctx.stats.get("stream_ingests", 0) == 2
+    assert ctx.stats.get("stream_materialized", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Boundary traffic: interior boundaries drop to zero
+# ---------------------------------------------------------------------------
+
+
+class TestBoundaryTraffic:
+    N, BATCH = 50_000, 8192
+
+    def _run(self, handoff, observe=True):
+        def once():
+            with mozart.session(executor="fused", batch_elements=self.BATCH,
+                                handoff=handoff) as ctx:
+                cur = _eval_chain(jnp.linspace(0., 1., self.N, dtype=jnp.float32))
+                out = np.asarray(cur) if observe else None
+            return out, ctx
+        plan_cache.clear()
+        once(); once()                   # plan, then warm the cache
+        before = stage_exec.bytes_materialized()
+        out, ctx = once()
+        return out, ctx, stage_exec.bytes_materialized() - before
+
+    def test_interior_boundaries_zero_bytes(self):
+        final_bytes = self.N * 4
+        _, ctx, on_bytes = self._run(handoff=True)
+        assert on_bytes == final_bytes   # ONLY the observed output merged
+        assert ctx.stats["streamed_outputs"] == 3
+        assert ctx.stats["stream_ingests"] == 2
+        _, _, off_bytes = self._run(handoff=False)
+        # merge-everything pays ≥ (3 merges + 2 re-splits) x n bytes
+        assert off_bytes >= 5 * final_bytes
+
+    def test_unobserved_output_never_materializes(self):
+        _, ctx, on_bytes = self._run(handoff=True, observe=False)
+        assert on_bytes == 0             # nothing observed: zero merges total
+
+    def test_zero_planner_calls_on_warm_handoff(self):
+        _, ctx, _ = self._run(handoff=True)
+        assert ctx.stats["planner_calls"] == 0
+        assert ctx.stats.get("plan_cache_hits", 0) >= 3
+
+    def test_pipe_ablation_streams_interior(self):
+        """pipeline=False (Table-4 "-pipe") makes every op its own stage;
+        handoff then removes the per-boundary round trips the ablation used
+        to pay INSIDE one evaluation."""
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+
+        def once(handoff):
+            with mozart.session(executor="fused", batch_elements=self.BATCH,
+                                pipeline=False, handoff=handoff) as ctx:
+                out = np.asarray(anp.multiply(anp.exp(anp.add(x, 1.0)), 0.5))
+            return out, ctx
+        plan_cache.clear()
+        once(True); once(True)
+        before = stage_exec.bytes_materialized()
+        on_out, ctx = once(True)
+        on_bytes = stage_exec.bytes_materialized() - before
+        assert ctx.stats["streamed_outputs"] >= 2
+        assert on_bytes == self.N * 4
+        plan_cache.clear()
+        once(False); once(False)
+        before = stage_exec.bytes_materialized()
+        off_out, _ = once(False)
+        assert stage_exec.bytes_materialized() - before >= 5 * self.N * 4
+        np.testing.assert_allclose(on_out, off_out, rtol=2e-5)
+
+    def test_incapable_executor_materializes_on_ingest(self):
+        """A stream handed to a whole-value executor merges on ingest —
+        correct, merely the old cost."""
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        plan_cache.clear()
+        with mozart.session(executor="fused", batch_elements=self.BATCH) as ctx:
+            a = anp.multiply(anp.add(x, 1.0), 0.5)
+            mozart.evaluate()            # `a` streams (pure output, fused)
+            assert isinstance(ctx.graph.nodes[a._node.id].result, ChunkStream)
+            mozart.configure(executor="scan")
+            out = np.asarray(anp.exp(a))
+        assert ctx.stats["stream_materialized"] >= 1
+        want = np.exp((np.linspace(0., 1., self.N, dtype=np.float32) + 1) * 0.5)
+        np.testing.assert_allclose(out, want, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Donation safety
+# ---------------------------------------------------------------------------
+
+
+class TestDonation:
+    def test_alive_future_donates_copies_only(self):
+        """A stream whose producer Future is still observable must keep its
+        own buffers — the driver gets defensive COPIES to donate, and
+        observing the producer after consumption still works."""
+        n, b = 20_000, 4096
+        x = jnp.linspace(0., 1., n, dtype=jnp.float32)
+        plan_cache.clear()
+        for _ in range(3):
+            with mozart.session(executor="fused", batch_elements=b) as ctx:
+                a = anp.multiply(anp.add(x, 1.0), 0.5)
+                mozart.evaluate()
+                out = np.asarray(anp.exp(a))     # consumes a's stream
+                a_val = np.asarray(a)            # a observed AFTER consumption
+            if ctx.stats.get("donated_chunks", 0):
+                assert ctx.stats["donation_copies"] == ctx.stats["donated_chunks"]
+        want_a = (np.linspace(0., 1., n, dtype=np.float32) + 1) * 0.5
+        np.testing.assert_allclose(a_val, want_a, rtol=2e-5)
+        np.testing.assert_allclose(out, np.exp(want_a), rtol=2e-5)
+
+    def test_liveness_flap_does_not_retrace(self):
+        """The donate key set is structural: whether the producer's Future
+        happens to be alive on a given call must not change the pinned
+        driver variant (zero retraces on warm calls either way)."""
+        n, b = 20_000, 4096
+        x = jnp.linspace(0., 1., n, dtype=jnp.float32)
+        plan_cache.clear()
+
+        def once(hold):
+            with mozart.session(executor="fused", batch_elements=b) as ctx:
+                a = anp.multiply(anp.add(x, 1.0), 0.5)
+                mozart.evaluate()
+                e = anp.exp(a)                   # registered; holds a NodeRef
+                if not hold:
+                    del a                        # Future dies pre-consumption
+                out = np.asarray(e)
+                if hold:
+                    _ = np.asarray(a)            # observe AFTER consumption
+            return out, ctx
+
+        once(True); once(True)                   # plan + warm the cache
+        before = stage_exec.trace_count()
+        o1, c1 = once(True)                      # producer observable: copies
+        o2, c2 = once(False)                     # producer dead: real donation
+        o3, _ = once(True)
+        assert stage_exec.trace_count() == before
+        assert c1.stats["exec_builds"] == 0 and c2.stats["exec_builds"] == 0
+        assert c1.stats.get("donation_copies", 0) > 0
+        assert c2.stats.get("donation_copies", 0) == 0
+        assert c2.stats.get("donated_chunks", 0) > 0
+        np.testing.assert_allclose(o1, o2, rtol=1e-6)
+        np.testing.assert_allclose(o1, o3, rtol=1e-6)
+
+    def test_dead_future_donates_and_stays_correct(self):
+        n, b = 20_000, 4096
+        x = jnp.linspace(0., 1., n, dtype=jnp.float32)
+        plan_cache.clear()
+
+        def once():
+            with mozart.session(executor="fused", batch_elements=b) as ctx:
+                cur = _eval_chain(x)
+                out = np.asarray(cur)
+            return out, ctx
+        once(); once()
+        out, ctx = once()
+        assert ctx.stats["donated_chunks"] > 0
+        want = np.asarray(x)
+        for _ in range(3):
+            want = (want + 1.0) * 0.5
+        np.testing.assert_allclose(out, want, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Handoff decisions replay from MOZART_PLAN_CACHE with zero planner calls
+# ---------------------------------------------------------------------------
+
+_PRELUDE = """
+import json, sys
+import jax.numpy as jnp
+import numpy as np
+from repro.core import mozart, plan_cache, stage_exec
+from repro.core import annotated_numpy as anp
+
+x = jnp.linspace(0.0, 1.0, 30_000, dtype=jnp.float32)
+
+def run():
+    with mozart.session(executor="fused", batch_elements=4096) as ctx:
+        cur = x
+        for _ in range(3):
+            cur = anp.multiply(anp.add(cur, 1.0), 0.5)
+            mozart.evaluate()
+        out = np.asarray(cur)
+    return out, ctx
+"""
+
+_PROC_A = _PRELUDE + """
+run(); run()
+out, ctx = run()
+print(json.dumps({"sum": float(out.sum()),
+                  "streamed": ctx.stats["streamed_outputs"],
+                  "ingests": ctx.stats["stream_ingests"]}))
+"""
+
+_PROC_B = _PRELUDE + """
+b0 = stage_exec.bytes_materialized()
+out, ctx = run()
+print(json.dumps({"sum": float(out.sum()),
+                  "streamed": ctx.stats["streamed_outputs"],
+                  "ingests": ctx.stats["stream_ingests"],
+                  "planner_calls": ctx.stats["planner_calls"],
+                  "bytes": stage_exec.bytes_materialized() - b0,
+                  "pc": dict(plan_cache.stats)}))
+"""
+
+
+def _run_subprocess(code, path):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    existing = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + existing if existing else "")
+    env["MOZART_PLAN_CACHE"] = path
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_handoff_decisions_replay_from_persisted_cache(tmp_path):
+    """Process A records handoff decisions in its persisted plans; a FRESH
+    process B replays them — zero planner calls, streams from call one, and
+    interior boundary bytes already zero."""
+    path = str(tmp_path / "plans.json")
+    a = _run_subprocess(_PROC_A, path)
+    assert a["streamed"] == 3 and a["ingests"] == 2
+    assert os.path.exists(path)
+
+    b = _run_subprocess(_PROC_B, path)
+    assert b["pc"].get("persist_loaded", 0) >= 1
+    assert b["planner_calls"] == 0            # decisions replayed, not re-derived
+    assert b["streamed"] == 3 and b["ingests"] == 2
+    assert b["bytes"] == 30_000 * 4           # final observed output only
+    assert np.isclose(a["sum"], b["sum"], rtol=1e-6)

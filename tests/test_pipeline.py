@@ -244,19 +244,44 @@ class TestConfigureRekey:
         assert plan_cache.stats["rekeyed"] == 1
         assert np.isclose(v, float(np.sum(np.exp(np.asarray(x)))), rtol=1e-5)
 
-    def test_rekey_drops_stale_tuner_state_but_keeps_original(self):
+    def test_rekey_migrates_tuned_batches_on_same_chip(self):
+        """Executor-only knob changes migrate executor-agnostic measured
+        state (tuned chunk sizes) instead of dropping it — the re-keyed
+        config starts pinned, the original keeps its pin too."""
         x = jnp.linspace(0.0, 1.0, 50_000, dtype=jnp.float32)
         for _ in range(2):   # miss then tuning hit: pins a batch
             with mozart.session(executor="fused", chip=TINY_CHIP):
                 _ = float(anp.sum(anp.exp(x)))
         assert plan_cache.tuned_batches()
-        with mozart.session(executor="fused", chip=TINY_CHIP):
+        with mozart.session(executor="fused", chip=TINY_CHIP) as ctx:
             _ = float(anp.sum(anp.exp(x)))
             mozart.configure(executor="pipelined")
+            _ = float(anp.sum(anp.exp(x)))
         by_exec = {e.key[0]: e for e in plan_cache.entries()}
         assert set(by_exec) == {"fused", "pipelined"}   # copy, not move
-        assert by_exec["pipelined"].tuned_batch == {}   # measured under fused
         assert by_exec["fused"].tuned_batch              # original keeps its pin
+        # same chip + mesh: the tuned batch migrated with the templates
+        assert by_exec["pipelined"].tuned_batch == by_exec["fused"].tuned_batch
+        # executor-SELECTION state never migrates (it is what changed)
+        assert by_exec["pipelined"].chosen_exec == {}
+        # and the migrated pin is actually used: no re-tuning after the switch
+        assert ctx.stats["autotuned_stages"] == 0
+
+    def test_rekey_drops_measured_state_on_chip_change(self):
+        """Chip changes invalidate measured state: templates migrate, tuned
+        batches (measured on the old chip) do not."""
+        x = jnp.linspace(0.0, 1.0, 50_000, dtype=jnp.float32)
+        for _ in range(2):
+            with mozart.session(executor="fused", chip=TINY_CHIP):
+                _ = float(anp.sum(anp.exp(x)))
+        assert plan_cache.tuned_batches()
+        with mozart.session(executor="fused", chip=TINY_CHIP):
+            _ = float(anp.sum(anp.exp(x)))
+            mozart.configure(chip=hardware.TARGET)
+        by_chip = {e.key[1]: e for e in plan_cache.entries()}
+        assert set(by_chip) == {TINY_CHIP.name, hardware.TARGET.name}
+        assert by_chip[TINY_CHIP.name].tuned_batch
+        assert by_chip[hardware.TARGET.name].tuned_batch == {}
 
     def test_pipeline_flag_change_plans_fresh(self):
         x = jnp.linspace(0.0, 1.0, 1024, dtype=jnp.float32)
@@ -369,6 +394,195 @@ class TestDispatchCalibration:
         stream = max(100_000 * 12 / TINY_CHIP.hbm_bandwidth,
                      100_000 * 24.0 / TINY_CHIP.peak_bf16_flops)
         assert np.isclose(got, stream + eff, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Bound-arguments fast path (arg_transparent, ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestArgTransparentFastPath:
+    def _pipe(self, **kw):
+        return mozart.pipeline(quickstart, executor="fused",
+                               batch_elements=512, arg_transparent=True, **kw)
+
+    def test_warm_calls_skip_graph_capture(self):
+        x, y = _data()
+        p = self._pipe()
+        p.lower(x, y).compile()
+        c0, _ = p(x, y)                      # builds the retained replay
+        captures = p.ctx.stats["graph_captures"]
+        for i in range(1, 4):
+            x2 = jnp.linspace(float(i), float(i) + 1.0, 4096, dtype=jnp.float32)
+            y2 = jnp.full((4096,), float(i), jnp.float32)
+            c, s = p(x2, y2)
+            # zero captures, zero fingerprints/planner calls, zero retraces
+            assert p.ctx.stats["graph_captures"] == captures
+            assert p.ctx.stats["fast_path_calls"] == i
+            assert p.last_call_stats.get("planner_calls", 0) == 0
+            assert p.last_call_stats.get("plan_cache_hits", 0) == 0
+            assert p.last_call_stats["jit_traces"] == 0
+            want = np.exp(2 * np.asarray(x2) + np.asarray(y2)) * 0.5
+            np.testing.assert_allclose(np.asarray(c), want, rtol=2e-5)
+            assert np.isclose(float(s), want.sum(), rtol=1e-4)
+
+    def test_falls_back_on_shape_change_then_recovers(self):
+        x, y = _data()
+        p = self._pipe()
+        p.lower(x, y).compile()
+        p(x, y)
+        captures = p.ctx.stats["graph_captures"]
+        xs, ys = _data(1000)                 # different shape: full capture
+        c, _ = p(xs, ys)
+        assert p.ctx.stats["graph_captures"] == captures + 1
+        np.testing.assert_allclose(
+            np.asarray(c), np.exp(2 * np.asarray(xs) + 1) * 0.5, rtol=2e-5)
+        p(x, y)                              # original shape: fast again
+        assert p.ctx.stats["graph_captures"] == captures + 1
+
+    def test_non_array_args_are_specialized(self):
+        x = jnp.linspace(0.0, 1.0, 2048, dtype=jnp.float32)
+
+        def scaled(x, k):
+            return anp.sum(anp.multiply(x, k))
+
+        p = mozart.pipeline(scaled, executor="fused", batch_elements=512,
+                            arg_transparent=True)
+        p.lower(x, 2.0).compile()
+        v = float(p(x, 2.0))
+        captures = p.ctx.stats["graph_captures"]
+        assert float(p(x, 2.0)) == v         # same scalar: fast path
+        assert p.ctx.stats["graph_captures"] == captures
+        v3 = float(p(x, 3.0))                # changed scalar: falls back
+        assert p.ctx.stats["graph_captures"] == captures + 1
+        assert np.isclose(v3, v * 1.5, rtol=1e-5)
+
+    def test_alias_pattern_guard(self):
+        """fn(x, x) and fn(x, y) bind differently: the fast replay built for
+        one alias pattern must refuse the other."""
+        def add2(a, b):
+            return anp.add(a, b)
+
+        x, y = _data(1024)
+        p = mozart.pipeline(add2, executor="fused", batch_elements=512,
+                            arg_transparent=True)
+        p.lower(x, x).compile()
+        p(x, x)
+        captures = p.ctx.stats["graph_captures"]
+        out = np.asarray(p(x, y))            # different aliasing: full capture
+        assert p.ctx.stats["graph_captures"] == captures + 1
+        np.testing.assert_allclose(out, np.asarray(x) + np.asarray(y), rtol=1e-6)
+
+    def test_fn_with_internal_evaluate_refuses_fast_path(self):
+        """A fn that forces evaluation internally leaves cross-evaluation
+        (done) producers behind — the retained replay would reference pruned
+        or stale nodes, so the build must refuse and every call must keep
+        capturing (correctly)."""
+        x = jnp.linspace(0.0, 1.0, 2048, dtype=jnp.float32)
+
+        def staged(a):
+            y = anp.exp(a)
+            mozart.evaluate()            # internal boundary: y is DONE
+            return anp.add(y, a)
+
+        p = mozart.pipeline(staged, executor="fused", batch_elements=512,
+                            arg_transparent=True)
+        p.lower(x).compile()
+        before = p.ctx.stats["graph_captures"]
+        for i in range(3):
+            a = jnp.full((2048,), float(i), jnp.float32)
+            out = np.asarray(p(a))
+            np.testing.assert_allclose(out, np.exp(float(i)) + float(i),
+                                       rtol=1e-5)
+        assert p.ctx.stats.get("fast_path_calls", 0) == 0
+        assert p.ctx.stats["graph_captures"] == before + 3
+
+    def test_without_flag_every_call_captures(self):
+        x, y = _data()
+        p = mozart.pipeline(quickstart, executor="fused", batch_elements=512)
+        p.lower(x, y).compile()
+        before = p.ctx.stats["graph_captures"]
+        p(x, y); p(x, y)
+        assert p.ctx.stats["graph_captures"] == before + 2
+        assert p.ctx.stats.get("fast_path_calls", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# `auto` re-measurement aging (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestAutoReMeasurementAging:
+    def test_pins_record_their_shape_regime(self):
+        x = jnp.linspace(0.0, 1.0, 30_000, dtype=jnp.float32)
+        p = mozart.pipeline(lambda: anp.sum(anp.exp(x)), executor="auto",
+                            chip=TINY_CHIP)
+        p.lower().compile()
+        entry = p.plan_entry
+        assert entry.chosen_exec
+        for sid in entry.chosen_exec:
+            assert entry.exec_meta[sid]["n"] == 30_000
+            assert entry.exec_meta[sid]["bucket"] == (30_000).bit_length()
+
+    def test_crossover_detection(self):
+        """The pure policy: drift across a size where the analytic winner
+        flips (here sharded becomes applicable/cheaper at the larger size)
+        triggers re-measurement; drift that keeps the winner does not."""
+        from repro.core import cost_model
+        ctx = mozart.MozartContext(executor="auto", chip=TINY_CHIP,
+                                   mesh=jax.make_mesh((1,), ("data",)))
+        f_big = cost_model.StageFeatures(
+            n=1 << 20, elem_bytes=8, n_nodes=2, flops_per_elem=16.0,
+            dynamic=False, pallas_eligible=False, mesh_devices=4, on_tpu=False)
+        # at n=1<<20 (divisible by 4): sharded streams at bw/4 -> wins
+        assert cost_model.choose(f_big, ctx) == "sharded"
+        # at n=101 (not divisible by 4): sharded inapplicable -> scan wins
+        assert cost_model.drifted_past_crossover(f_big, {"n": 101}, ctx)
+        # same-winner drift: no aging
+        assert not cost_model.drifted_past_crossover(f_big, {"n": 1 << 18}, ctx)
+
+    def test_stale_pin_is_remeasured_on_drift(self, monkeypatch):
+        """A pinned choice whose recorded regime no longer matches the warm
+        call's shapes — and whose analytic winner flipped — is unpinned and
+        re-measured instead of blindly replayed.  (On a single-device CPU
+        host the analytic winner never actually flips, so the crossover
+        predicate — unit-tested above — is forced here to exercise the
+        unpin → re-measure → fresh-regime machinery end to end.)"""
+        from repro.core import cost_model
+        n = 1 << 16
+        x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+        p = mozart.pipeline(lambda: anp.multiply(anp.exp(x), 0.5),
+                            executor="auto", chip=TINY_CHIP)
+        p.lower().compile()
+        entry = p.plan_entry
+        (sid, _), = list(entry.chosen_exec.items())
+        # Forge the record: "measured" at a drifted shape regime...
+        entry.exec_meta[sid] = {"n": 101, "bucket": (101).bit_length()}
+        # ...whose analytic winner differs.
+        monkeypatch.setattr(cost_model, "drifted_past_crossover",
+                            lambda feats, meta, ctx: True)
+        p()
+        assert p.ctx.stats["auto_repinned_drift"] == 1
+        assert entry.chosen_exec             # re-measured and re-pinned
+        assert entry.exec_meta[sid]["n"] == n
+        monkeypatch.undo()
+        p()
+        assert p.ctx.stats["auto_repinned_drift"] == 1   # stable afterwards
+        assert p.last_call_stats.get("auto_measured_stages", 0) == 0
+
+    def test_same_winner_drift_refreshes_regime_without_remeasuring(self):
+        n = 1 << 16
+        x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+        p = mozart.pipeline(lambda: anp.multiply(anp.exp(x), 0.5),
+                            executor="auto", chip=TINY_CHIP)
+        p.lower().compile()
+        entry = p.plan_entry
+        (sid, _), = list(entry.chosen_exec.items())
+        entry.exec_meta[sid] = {"n": 101, "bucket": (101).bit_length()}
+        p()                                  # drifted bucket, same winner
+        assert p.ctx.stats.get("auto_repinned_drift", 0) == 0
+        assert p.last_call_stats.get("auto_measured_stages", 0) == 0
+        assert entry.exec_meta[sid]["n"] == n    # regime refreshed in place
 
 
 # ---------------------------------------------------------------------------

@@ -442,3 +442,63 @@ def test_future_exposes_split_type():
         f = saxpy(x, x)
         assert f.split_type.name == "ArraySplit"
         _ = f.value
+
+
+# ---------------------------------------------------------------------------
+# Pallas block-shape-aware tuning (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestPallasBlockShapeTuning:
+    def test_candidates_round_to_hardware_blocks(self):
+        """Raw element-count candidates resolving to the SAME 8x128 block are
+        duplicates — the tuner must measure each compiled block shape once."""
+        from repro.core.stage_exec import get_executor
+        from repro.kernels.split_pipeline import MIN_BLOCK
+        ex = get_executor("pallas")
+        ctx = mozart.MozartContext(executor="pallas")
+        n = 1 << 16
+        # est=700 -> raw bracket {350, 700, 1400} all round to 1024/2048
+        cands = ex.tuning_candidates(None, {}, ctx, 700, n)
+        assert cands == sorted(set(cands))
+        assert all(c == n or c % MIN_BLOCK == 0 for c in cands)
+        assert len(cands) <= 2
+        # huge estimate clamps to n; empty split degenerates to [1]
+        assert ex.tuning_candidates(None, {}, ctx, 10 * n, n) == [n]
+        assert ex.tuning_candidates(None, {}, ctx, 512, 0) == [1]
+
+    def test_chosen_block_shape_recorded_in_plan_entry(self):
+        x = jnp.linspace(0.0, 1.0, 6000, dtype=jnp.float32)
+
+        def run():
+            with mozart.session(executor="pallas", chip=hardware.CPU_HOST) as c:
+                out = float(anp.sum(anp.multiply(anp.exp(x), 0.5)))
+            return out, c
+
+        plan_cache.clear()
+        run(); run(); _, ctx = run()
+        (entry,) = plan_cache.entries()
+        assert entry.block_shape, "pallas recorded no block shape"
+        from repro.kernels.split_pipeline import MIN_BLOCK
+        for sid, (sub, block) in entry.block_shape.items():
+            assert sub == 1 and block % MIN_BLOCK == 0
+            # the recorded shape is what the pinned batch compiles to
+            if sid in entry.tuned_batch:
+                from repro.core.pallas_exec import _effective_block
+                assert block == _effective_block(entry.tuned_batch[sid], 6000)
+
+    def test_block_shape_persists(self, tmp_path):
+        x = jnp.linspace(0.0, 1.0, 6000, dtype=jnp.float32)
+        plan_cache.clear()
+        for _ in range(2):
+            with mozart.session(executor="pallas", chip=hardware.CPU_HOST):
+                float(anp.sum(anp.multiply(anp.exp(x), 0.5)))
+        (entry,) = plan_cache.entries()
+        want = dict(entry.block_shape)
+        assert want
+        path = str(tmp_path / "plans.json")
+        plan_cache.save(path)
+        plan_cache.clear()
+        assert plan_cache.load(path) == 1
+        (loaded,) = plan_cache.entries()
+        assert dict(loaded.block_shape) == want
