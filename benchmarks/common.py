@@ -8,19 +8,27 @@ from typing import Callable
 
 import numpy as np
 
-ROWS: list[tuple[str, float, str]] = []
+ROWS: list[tuple[str, float, str, dict | None]] = []
 
 
-def record(name: str, us_per_call: float, derived: str = "") -> None:
-    ROWS.append((name, us_per_call, derived))
+def record(name: str, us_per_call: float, derived: str = "",
+           extra: dict | None = None) -> None:
+    """Record one CSV row; ``extra`` is structured per-row data that only
+    lands in the JSON artifact (e.g. the ``smoke/handoff`` rows' interior vs
+    terminal byte split and donation stats)."""
+    ROWS.append((name, us_per_call, derived, extra))
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
 def dump_json(path: str) -> None:
     """Write every recorded row as JSON (CI uploads this artifact so run-over-
     run perf trajectories are diffable without scraping stdout)."""
-    payload = [{"name": n, "us_per_call": us, "derived": d}
-               for n, us, d in ROWS]
+    payload = []
+    for n, us, d, extra in ROWS:
+        row = {"name": n, "us_per_call": us, "derived": d}
+        if extra:
+            row.update(extra)
+        payload.append(row)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
 

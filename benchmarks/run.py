@@ -130,60 +130,110 @@ def smoke() -> int:
             failures.append("warm-start")
 
     # -- cross-stage chunk handoff: interior boundaries stop materializing --
+    # One row per stream-capable executor.  The 3-evaluation chain makes
+    # every evaluation boundary a producer→consumer edge; with handoff on,
+    # INTERIOR boundary bytes must be exactly 0 for every executor —
+    # ``fused`` iterates the producer's chunk list, ``scan`` stacks streams
+    # into its carry layout, ``pallas`` stacks them into the padded launch
+    # buffer.  TERMINAL bytes (the observed output's lazy merge) are
+    # reported separately and never gate.  Counters reset per row, and a
+    # violation prints a diff-style message naming the offending boundary
+    # from the stage_exec materialization event trail.
     from repro.core import stage_exec
 
     n_h, b_h, evals = 400_000, 65_536, 3
     xh = jnp.linspace(0.0, 1.0, n_h, dtype=jnp.float32)
 
-    def handoff_chain(handoff):
-        with mozart.session(executor="fused", batch_elements=b_h,
+    def handoff_chain(executor, handoff):
+        # pallas stages merge their own outputs to whole arrays, so a
+        # pallas-only chain would gate nothing: its row drives a FUSED
+        # producer into pallas consumers — the launch-buffer stream-ingest
+        # path the gate exists to protect.
+        first = "fused" if executor == "pallas" else executor
+        with mozart.session(executor=first, batch_elements=b_h,
                             handoff=handoff) as ctx:
             cur = xh
-            for _ in range(evals):
+            for i in range(evals):
                 cur = w.anp.multiply(w.anp.add(cur, 1.0), 0.5)
                 mozart.evaluate()       # stage boundary between evaluations
+                if i == 0 and first != executor:
+                    mozart.configure(executor=executor)
             out = np.asarray(cur)
         return out, ctx
 
     import time as _time
 
-    def timed(handoff):
+    def timed(executor, handoff):
         plan_cache.clear()
-        handoff_chain(handoff); handoff_chain(handoff)      # plan, then warm
-        b0 = stage_exec.bytes_materialized()
-        out, ctx = handoff_chain(handoff)
-        dbytes = stage_exec.bytes_materialized() - b0
+        handoff_chain(executor, handoff)        # plan (miss)
+        handoff_chain(executor, handoff)        # warm the cache + executables
+        stage_exec.reset_materialized()         # this row's counters only
+        out, ctx = handoff_chain(executor, handoff)
+        interior = stage_exec.bytes_interior()
+        terminal = stage_exec.bytes_terminal()
+        events = stage_exec.materialize_events()
         samples = []
         for _ in range(5):
             t0 = _time.perf_counter()
-            handoff_chain(handoff)
+            handoff_chain(executor, handoff)
             samples.append(_time.perf_counter() - t0)
-        return out, ctx, dbytes, sorted(samples)[len(samples) // 2] * 1e6
+        return (out, ctx, interior, terminal, events,
+                sorted(samples)[len(samples) // 2] * 1e6)
 
-    on_out, on_ctx, on_bytes, on_us = timed(True)
-    off_out, off_ctx, off_bytes, off_us = timed(False)
-    final_bytes = int(xh.nbytes)
-    interior = on_bytes - final_bytes   # lazy merge at the observed output only
-    handoff_failures = []
-    if not np.allclose(on_out, off_out, rtol=2e-5):
-        handoff_failures.append("parity")
-    if interior != 0:
-        handoff_failures.append(f"interior_bytes={interior}")
-    if on_bytes >= off_bytes:
-        handoff_failures.append("no_traffic_reduction")
-    if on_ctx.stats["planner_calls"] != 0:
-        handoff_failures.append("warm_planned")
-    if on_us > off_us * 1.15:           # <= merge-everything path (+timer noise)
-        handoff_failures.append("slower_than_merge_path")
-    record("smoke/handoff", on_us,
-           f"merge_path_us={off_us:.0f};ratio={on_us / max(off_us, 1e-9):.2f};"
-           f"bytes_on={on_bytes};bytes_off={off_bytes};interior={interior};"
-           f"streamed={on_ctx.stats['streamed_outputs']};"
-           f"ingests={on_ctx.stats['stream_ingests']};"
-           f"donated={on_ctx.stats.get('donated_chunks', 0)};"
-           f"{'ok' if not handoff_failures else 'REGRESSED'}")
-    if handoff_failures:
-        failures.append(f"handoff:{handoff_failures}")
+    for h_exec in ("fused", "scan", "pallas"):
+        on_out, on_ctx, on_int, on_term, on_events, on_us = timed(h_exec, True)
+        off_out, off_ctx, off_int, off_term, _eo, off_us = timed(h_exec, False)
+        handoff_failures = []
+        if not np.allclose(on_out, off_out, rtol=2e-5):
+            handoff_failures.append("parity")
+        if on_int != 0:
+            # Diff-style report: WHICH boundary materialized, not a bare
+            # byte count.
+            lines = [f"  - {kind[len('interior:'):]} at {where}: {nb} bytes"
+                     for kind, where, nb in on_events
+                     if kind.startswith("interior:")]
+            print(f"smoke/handoff/{h_exec}: expected 0 interior boundary "
+                  f"bytes, got {on_int}:\n" + "\n".join(lines),
+                  file=sys.stderr)
+            handoff_failures.append(f"interior_bytes={on_int}")
+        if off_int + off_term > 0 and on_int + on_term >= off_int + off_term:
+            handoff_failures.append("no_traffic_reduction")
+        # The row must actually exercise streaming, or interior==0 is
+        # vacuous and a broken ingest path would pass the gate.
+        if (on_ctx.stats.get("streamed_outputs", 0) == 0
+                or on_ctx.stats.get("stream_ingests", 0) == 0):
+            handoff_failures.append("no_streaming")
+        if on_ctx.stats["planner_calls"] != 0:
+            handoff_failures.append("warm_planned")
+        # Wall-clock gates only the fused row: the scan/pallas drivers run
+        # identically either way (only boundary work differs) and pallas
+        # interpret-mode timing is too noisy to gate in CI.
+        if h_exec == "fused" and on_us > off_us * 1.15:
+            handoff_failures.append("slower_than_merge_path")
+        stats = on_ctx.stats
+        record(f"smoke/handoff/{h_exec}", on_us,
+               f"merge_path_us={off_us:.0f};"
+               f"ratio={on_us / max(off_us, 1e-9):.2f};"
+               f"interior={on_int};terminal={on_term};"
+               f"off_interior={off_int};off_terminal={off_term};"
+               f"streamed={stats.get('streamed_outputs', 0)};"
+               f"ingests={stats.get('stream_ingests', 0)};"
+               f"donated={stats.get('donated_chunks', 0)};"
+               f"{'ok' if not handoff_failures else 'REGRESSED'}",
+               extra={
+                   "interior_bytes": int(on_int),
+                   "terminal_bytes": int(on_term),
+                   "off_interior_bytes": int(off_int),
+                   "off_terminal_bytes": int(off_term),
+                   "streamed_outputs": int(stats.get("streamed_outputs", 0)),
+                   "stream_ingests": int(stats.get("stream_ingests", 0)),
+                   "stream_converted": int(stats.get("stream_converted", 0)),
+                   "donated_chunks": int(stats.get("donated_chunks", 0)),
+                   "donation_copies": int(stats.get("donation_copies", 0)),
+                   "handoff_rechunks": int(stats.get("handoff_rechunks", 0)),
+               })
+        if handoff_failures:
+            failures.append(f"handoff/{h_exec}:{handoff_failures}")
 
     # -- AOT pipeline: warm calls do ZERO planner calls and ZERO retraces ---
     plan_cache.clear()

@@ -44,10 +44,12 @@ from repro.core.stage_exec import (
     batch_ranges,
     chain_plan,
     chunk_env_for,
+    donatable_input_keys,
     effective_elements,
     finish_stage,
     get_executor,
     has_dynamic,
+    mark_stream_consumed,
     note_materialized,
     note_trace,
     pinned_jit,
@@ -56,6 +58,7 @@ from repro.core.stage_exec import (
     run_plan,
     split_axis_of,
     stage_num_elements,
+    undonatable_stream_keys,
 )
 
 __all__ = [
@@ -145,70 +148,17 @@ class ChunkedExecutor(StageExecutor):
         ub = base.uniform_batch()
         if ub is not None and ub > batch * self.GRID_SLACK and n > 0:
             grid = batch_ranges(n, batch)
+        if not grid:
+            grid = batch_ranges(n, batch)  # zero-chunk stream: degenerate grid
         out = dict(concrete)
         for k, v in streams:
             if v.ranges != grid:
                 chunks, copied = v.split_type.rechunk(v.chunks, v.ranges, grid)
                 out[k] = ChunkStream(chunks, grid, v.split_type, v.aval)
-                note_materialized(copied)
+                note_materialized(copied, kind="rechunk",
+                                  where=f"stage {stage.id} input {stage.ckey(k)}")
                 ctx.stats["handoff_rechunks"] += 1
         return out, grid
-
-    def _donatable(self, stage: Stage, ctx) -> tuple:
-        """Canonical env keys of inputs whose per-chunk buffers die here.
-
-        STRUCTURAL only — a pure function of the handoff plan (this stage is
-        the handed-off value's LAST in-plan consumer) and the stage template
-        (NodeRef-sourced, splittable, some escaping output chunk can absorb
-        the buffer) — so the pinned driver's variant key is identical on
-        every call and the zero-retrace warm-call invariant holds.  Whether
-        a producer is still observable is a *runtime* question answered per
-        chunk in ``execute`` (an observable stream donates a defensive COPY,
-        never its own buffers)."""
-        plan = getattr(ctx, "_handoff", None)
-        ho = plan.get(stage.id) if plan else None
-        if ho is None or not ho.last_use:
-            return ()
-
-        def _sig(aval):
-            return tuple((tuple(l.shape), str(l.dtype))
-                         for l in jax.tree_util.tree_leaves(aval)
-                         if hasattr(l, "shape"))
-
-        # XLA can only reuse a donated buffer for an output of the same
-        # shape/dtype: donate at most ONE chunk per matching escaping
-        # output chunk (else jax warns about unusable donations).
-        out_sigs: dict[tuple, int] = {}
-        for n in stage.nodes:
-            if (n.id in stage.escaping and n.out_aval is not None
-                    and stage.out_types[n.id].splittable):
-                sig = _sig(n.out_aval)
-                out_sigs[sig] = out_sigs.get(sig, 0) + 1
-        keys = []
-        for i, (key, si) in enumerate(stage.inputs.items()):
-            if not (i in ho.last_use and isinstance(si.value, NodeRef)
-                    and si.split_type.splittable):
-                continue
-            node = ctx.graph.nodes.get(si.value.node_id)
-            aval = node.out_aval if node is not None else None
-            if aval is not None and out_sigs.get(_sig(aval), 0) > 0:
-                out_sigs[_sig(aval)] -= 1
-                keys.append(stage.ckey(key))
-        return tuple(sorted(keys))
-
-    def _undonatable_streams(self, stage: Stage, concrete: dict[tuple, Any],
-                             ctx, donate: tuple) -> set:
-        """Donate-marked keys whose ChunkStream may still be observed (the
-        producer's Future is alive): their chunks are copied before donation
-        so the stream's own buffers survive."""
-        unsafe = set()
-        for key, si in stage.inputs.items():
-            ck = stage.ckey(key)
-            if ck in donate and isinstance(concrete.get(key), ChunkStream):
-                node = ctx.graph.nodes.get(si.value.node_id)
-                if node is None or node.future_alive():
-                    unsafe.add(ck)
-        return unsafe
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         mode = self.mode
@@ -226,9 +176,9 @@ class ChunkedExecutor(StageExecutor):
         if mode == "fused":
             # The donate key set is structural (plan-derived), so the pinned
             # driver variant is the same on every warm call — zero retraces.
-            donate = self._donatable(stage, ctx)
+            donate = donatable_input_keys(stage, ctx)
             if donate:
-                unsafe = self._undonatable_streams(stage, concrete, ctx, donate)
+                unsafe = undonatable_stream_keys(stage, concrete, ctx, donate)
             fused_fn = pinned_jit(stage, ctx, "fused", (esc, donate),
                                   lambda: _build_fused_driver(stage, esc, donate))
 
@@ -260,14 +210,7 @@ class ChunkedExecutor(StageExecutor):
                 partials[p].append(v)
             if ctx.log:
                 print(f"[mozart] stage {stage.id} chunk [{s},{e}) done")
-        for key, si in stage.inputs.items():
-            ck = stage.ckey(key)
-            v = concrete.get(key)
-            if (ck in donate and ck not in unsafe and isinstance(v, ChunkStream)):
-                v.consumed = True              # buffers are gone: mark both the
-                orig = ctx.graph.nodes[si.value.node_id].result
-                if isinstance(orig, ChunkStream):
-                    orig.consumed = True       # original and rechunked aliases
+        mark_stream_consumed(stage, concrete, ctx, set(donate) - unsafe)
         finish_stage(stage, partials, ranges, ctx)
 
 
@@ -287,7 +230,8 @@ class FusedExecutor(ChunkedExecutor):
 
 def _build_scan_driver(stage: Stage, esc: tuple[int, ...],
                        split_axes: dict[tuple, int],
-                       out_axes: dict[int, int | None]) -> Callable:
+                       out_axes: dict[int, int | None],
+                       donate: tuple = ()) -> Callable:
     plan = chain_plan(stage)
 
     def chain_fn(split_vals: dict, bcast_env: dict):
@@ -307,6 +251,20 @@ def _build_scan_driver(stage: Stage, esc: tuple[int, ...],
             outs[p] = o
         return outs
 
+    if donate:
+        # Stacked carry buffers that die at this stage arrive as a separate
+        # donated argument: XLA reuses the dead (n_chunks, batch, …) buffer
+        # for this stage's stacked outputs instead of allocating fresh ones —
+        # the scan-driver rendering of the fused driver's chunk donation.
+        def driver_donate(donated: dict, stacked_inputs: dict, bcast_env: dict):
+            note_trace()
+            stacked_inputs = dict(stacked_inputs)
+            stacked_inputs.update(donated)
+            return jax.lax.map(lambda sv: chain_fn(sv, bcast_env),
+                               stacked_inputs)
+
+        return jax.jit(driver_donate, donate_argnums=(0,))
+
     def driver(stacked_inputs: dict, bcast_env: dict):
         # Broadcast values ride along as a real jit argument (not a closure
         # capture): the pinned executable must not bake one call's scalars
@@ -324,13 +282,55 @@ class ScanExecutor(StageExecutor):
     The chunk loop compiles into a single XLA while-loop whose body touches
     one fast-memory-sized batch at a time — the TPU-native rendering of the
     paper's driver loop.  The ragged tail chunk is handled separately.
+
+    Chunk handoff: an incoming ``ChunkStream`` is stacked DIRECTLY into the
+    driver's carry layout — the producer's own stacked carry passes through
+    untouched when the grids agree (scan→scan is zero-copy), a chunk list
+    stacks in one gather (equal-grid fast path), and disagreeing grids
+    convert through ``SplitType.rechunk`` first — ``materialize()`` is never
+    called on ingest.  Streamed outputs keep the carry layout
+    (``ChunkStream.from_stacked``), and dying stacked inputs are donated to
+    the driver under the same structural (plan-derived) donate-key rules as
+    the fused driver, so pinned variants never flap and warm calls stay
+    zero-retrace.
     """
 
     tunable = True
-    # Stacking wants one contiguous array (the reshape into (chunks, batch)
-    # is free on a merged value but a real gather on a chunk list), so
-    # stream inputs materialize on ingest rather than stream through.
-    stream_capable = False
+    stream_capable = True
+
+    #: same grid-adoption slack as the chunk-loop drivers: a producer grid
+    #: whose chunks are at most this factor over the §5.2 estimate is
+    #: adopted as the scan batch (zero copies); beyond it the stream is
+    #: re-gridded to protect the fast-memory budget.
+    GRID_SLACK = 2.0
+
+    def _ingest_streams(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                        n: int, batch: int) -> tuple[dict[tuple, Any], int]:
+        """Align stream inputs onto ONE regular grid; returns the batch.
+
+        The scan layout needs equal-size main chunks + one ragged tail,
+        which is exactly the shape of a ``batch_ranges`` grid: a stream
+        whose grid already is one (within ``GRID_SLACK`` of the estimate)
+        fixes the batch; anything else rechunks — at most one copy."""
+        streams = [(k, v) for k, v in concrete.items()
+                   if isinstance(v, ChunkStream)]
+        if not streams or n <= 0:
+            return concrete, batch
+        base = streams[0][1]
+        ub = base.uniform_batch()
+        if (ub and ub <= batch * self.GRID_SLACK
+                and base.ranges == batch_ranges(n, ub)):
+            batch = ub                     # adopt the producer's grid as-is
+        grid = batch_ranges(n, batch)
+        out = dict(concrete)
+        for k, v in streams:
+            if v.ranges != grid:
+                chunks, copied = v.split_type.rechunk(v.chunks, v.ranges, grid)
+                out[k] = ChunkStream(chunks, grid, v.split_type, v.aval)
+                note_materialized(copied, kind="rechunk",
+                                  where=f"stage {stage.id} input {stage.ckey(k)}")
+                ctx.stats["handoff_rechunks"] += 1
+        return out, batch
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         if has_dynamic(stage):
@@ -339,9 +339,11 @@ class ScanExecutor(StageExecutor):
         n = effective_elements(ctx, stage_num_elements(stage, concrete, ctx.pedantic))
         if n == 0:
             # Empty split: the stacked driver has no chunks to map over; the
-            # fused driver runs one degenerate zero-size chunk instead.
+            # fused driver runs one degenerate zero-size chunk instead (and
+            # handles any zero-element stream input itself).
             return get_executor("fused").execute(stage, concrete, ctx)
         batch = self.choose_batch(stage, concrete, ctx, n)
+        concrete, batch = self._ingest_streams(stage, concrete, ctx, n, batch)
         n_main = (n // batch) * batch
         n_chunks = n_main // batch
 
@@ -357,10 +359,30 @@ class ScanExecutor(StageExecutor):
         ):
             return get_executor("fused").execute(stage, concrete, ctx)
 
+        fresh_stacked: set[tuple] = set()    # ckeys whose stacked buffer is ours
+
         def stacked(key):
             si = stage.inputs[key]
             ax = split_axis_of(si.split_type)
             v = concrete[key]
+            if isinstance(v, ChunkStream):
+                if (v.stacked is not None and v._chunks is None
+                        and v.uniform_batch() == batch):
+                    # scan→scan: the producer's carry layout IS this stage's
+                    # stacked input — zero copies, zero dispatches.
+                    return v.stacked
+                # Equal-grid fast path: stack the chunk list straight into
+                # the carry layout (one gather — the merge+reshape round
+                # trip is gone).
+                fresh_stacked.add(stage.ckey(key))
+                main = [jax.tree_util.tree_map(
+                            lambda l: jnp.moveaxis(l, ax, 0) if ax else l,
+                            v.chunk(i))
+                        for i in range(n_chunks)]
+                if not main:
+                    return None
+                return jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *main)
 
             def stack_leaf(leaf):
                 lead = jnp.moveaxis(leaf, ax, 0) if ax else leaf
@@ -377,34 +399,93 @@ class ScanExecutor(StageExecutor):
                       for k in split_keys}
         out_axes = {stage.pos[nid]: split_axis_of(stage.out_types[nid])
                     for nid in stage.escaping}
-        driver = pinned_jit(
-            stage, ctx, "scan", (esc, batch),
-            lambda: _build_scan_driver(stage, esc, split_axes, out_axes))
 
-        stacked_outs = driver(stacked_inputs, bcast_env) if n_chunks \
-            else {p: None for p in esc}
+        # Donation: structural key set shared with the fused driver.  The
+        # donated value is always the STACKED buffer; whether it may be the
+        # stream's own storage is a runtime question (a fresh stack we built
+        # is always safe; a passed-through carry or a plain reshaped array
+        # donates a defensive copy unless provably dead).
+        donate = tuple(k for k in donatable_input_keys(stage, ctx)
+                       if k in stacked_inputs) if n_chunks else ()
+        unsafe = undonatable_stream_keys(stage, concrete, ctx, donate) \
+            if donate else set()
+        driver = pinned_jit(
+            stage, ctx, "scan", (esc, batch, donate),
+            lambda: _build_scan_driver(stage, esc, split_axes, out_axes,
+                                       donate))
+
+        consumed_keys: tuple = ()
+        if n_chunks:
+            if donate:
+                key_of = {stage.ckey(k): k for k in stage.inputs}
+                donated = {}
+                for ck in donate:
+                    val = stacked_inputs.pop(ck)
+                    if ck in fresh_stacked:
+                        # Our own stack: the stream's chunk buffers survive
+                        # regardless — donate without copying or consuming.
+                        donated[ck] = val
+                    elif (ck in unsafe or not isinstance(
+                            concrete.get(key_of[ck]), ChunkStream)):
+                        # Observable carry pass-through, or a plain array
+                        # whose reshape may alias the producer's retained
+                        # result: donate a defensive copy.
+                        donated[ck] = jax.tree_util.tree_map(jnp.array, val)
+                        ctx.stats["donation_copies"] += 1
+                    else:
+                        donated[ck] = val        # dead carry: real donation
+                        consumed_keys += (ck,)
+                stacked_outs = driver(donated, stacked_inputs, bcast_env)
+                ctx.stats["donated_chunks"] += len(donated)
+            else:
+                stacked_outs = driver(stacked_inputs, bcast_env)
+        else:
+            stacked_outs = {p: None for p in esc}
         ctx.stats["chunks"] += n_chunks + (1 if n_main < n else 0)
         ctx.stats["calls"] += 1
 
-        partials: dict[int, list[Any]] = {p: [] for p in esc}
+        # Which outputs stay in carry form (the handoff plan's decision).
+        plan_ho = getattr(ctx, "_handoff", None)
+        ho = plan_ho.get(stage.id) if plan_ho else None
+        ranges = batch_ranges(n, batch)
+
+        tail_env = None
+        if n_main < n:  # ragged tail
+            tail_env = chunk_env_for(stage, concrete, n_main, n, ctx.pedantic,
+                                     chunk_index=n_chunks)
+            run_chain(stage, tail_env, jit_each=False)
+
+        partials: dict[int, list[Any]] = {}
         for nid in stage.escaping:
             p = stage.pos[nid]
             t = stage.out_types[nid]
             ax = split_axis_of(t)
+            node = next(nd for nd in stage.nodes if nd.id == nid)
+            tail_piece = tail_env[("n", p)] if tail_env is not None else None
+            if (ho is not None and p in ho.stream_out and ax is not None
+                    and n_chunks and len(ranges) > 1):
+                # Streamed output: keep the driver's carry layout — a scan
+                # consumer ingests it with zero copies, a chunk-loop consumer
+                # derives the chunk list lazily, and observation merges
+                # lazily via Future.value.
+                node.result = ChunkStream.from_stacked(
+                    stacked_outs[p], tail_piece, ranges, t, node.out_aval)
+                node.done = True
+                ctx.stats["streamed_outputs"] += 1
+                continue
+            pieces: list[Any] = []
             if n_chunks:
                 so = stacked_outs[p]
                 if ax is not None:
                     def unstack(l):
                         flat = l.reshape((n_chunks * batch,) + l.shape[2:])
                         return jnp.moveaxis(flat, 0, ax) if ax else flat
-                    partials[p].append(jax.tree_util.tree_map(unstack, so))
+                    pieces.append(jax.tree_util.tree_map(unstack, so))
                 else:  # ReduceSplit etc.: merge over the stacked leading dim
-                    pieces = [jax.tree_util.tree_map(lambda l: l[i], so)
-                              for i in range(n_chunks)]
-                    partials[p].extend(pieces)
-        if n_main < n:  # ragged tail
-            env = chunk_env_for(stage, concrete, n_main, n, ctx.pedantic)
-            run_chain(stage, env, jit_each=False)
-            for nid in stage.escaping:
-                partials[stage.pos[nid]].append(env[("n", stage.pos[nid])])
+                    pieces.extend(jax.tree_util.tree_map(lambda l: l[i], so)
+                                  for i in range(n_chunks))
+            if tail_piece is not None:
+                pieces.append(tail_piece)
+            partials[p] = pieces
+        mark_stream_consumed(stage, concrete, ctx, consumed_keys)
         finish_stage(stage, partials, ctx=ctx)

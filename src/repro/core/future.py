@@ -76,7 +76,9 @@ class Future:
         res = self._node.result
         from repro.core.stage_exec import ChunkStream
         if isinstance(res, ChunkStream):
-            res = res.materialize()
+            # Observation of a pipeline output: accounted as TERMINAL bytes
+            # (inherent to observing), never as interior boundary traffic.
+            res = res.materialize(terminal=True)
             self._node.result = res
         return res
 

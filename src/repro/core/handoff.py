@@ -22,6 +22,19 @@ if it never is.  Grids that disagree between producer and consumer convert
 through ``SplitType.rechunk`` (integer-multiple regroup — at most one copy
 instead of the merge+re-split two).
 
+Fresh-output (``ConcatSplit``) producers hand off to concrete
+``ArraySplit`` consumers on the same axis: piece sizes are unknowable here,
+so the analysis records *permission* plus the conversion point
+(``StageHandoff.convert_in``) and the runtime derives the concrete grid
+from the chunk buffers (``stage_exec.adapt_stream``), merging instead when
+they do not tile the consumer's geometry.
+
+Donation points (``last_use``) are vetoed at plan time for in-plan
+producers whose ``Future`` is alive during analysis — donating an
+observable stream could only ever ship defensive copies, and a late merge
+after a real donation is the ``stage_exec.DONATED_MERGE_ERROR`` failure
+mode; the runtime raise stays as the backstop.
+
 The analysis is pure and structural — a function of the stage templates
 only — so its result is recorded on the plan-cache entry
 (``PlanEntry.handoff``) and replayed by warm calls with zero analysis; it is
@@ -57,17 +70,29 @@ class StageHandoff:
     #: handed-off stream — chunk buffers may be donated to the driver there
     #: (re-checked against ``future_alive`` at run time).
     last_use: frozenset
+    #: input positions PERMITTED to convert a producer's stream onto the
+    #: consumer's grid (the ConcatSplit→ArraySplit rule): in-plan edges
+    #: whose producer type is ConcatSplit, plus cross-evaluation ingests
+    #: into an ArraySplit consumer (whose producer type is unknowable
+    #: here).  ``stage_exec.resolve_stage_inputs`` converts ONLY at these
+    #: positions — the decision replays with zero analysis (persisted
+    #: schema v3; v2 files migrate with this empty, correct because the
+    #: rule postdates them and v2-era plans never streamed fresh outputs).
+    convert_in: frozenset = frozenset()
 
     def to_json(self) -> dict:
         return {"stream_out": sorted(self.stream_out),
                 "stream_in": sorted(self.stream_in),
-                "last_use": sorted(self.last_use)}
+                "last_use": sorted(self.last_use),
+                "convert_in": sorted(self.convert_in)}
 
     @classmethod
     def from_json(cls, d: dict) -> "StageHandoff":
         return cls(stream_out=frozenset(int(p) for p in d["stream_out"]),
                    stream_in=frozenset(int(p) for p in d["stream_in"]),
-                   last_use=frozenset(int(p) for p in d["last_use"]))
+                   last_use=frozenset(int(p) for p in d["last_use"]),
+                   convert_in=frozenset(
+                       int(p) for p in d.get("convert_in", ())))
 
 
 def resolve_decisions(ctx, entry, stages: list[Stage]):
@@ -89,8 +114,13 @@ def resolve_decisions(ctx, entry, stages: list[Stage]):
 
 
 def _streamable_out(t: st.SplitType, stage_count: int | None) -> bool:
-    """Only concrete array-like grids stream; the chunk count of the output
-    must ride the stage's iteration grid (guarded via the static shape)."""
+    """Concrete array-like grids stream; the chunk count of the output must
+    ride the stage's iteration grid (guarded via the static shape).
+    ConcatSplit (fresh-output) producers stream too: they emit exactly one
+    piece per iterated range by construction, so the grid condition holds
+    without a count."""
+    if isinstance(t, st.ConcatSplit):
+        return True
     if not isinstance(t, (st.ArraySplit, st.PytreeSplit)):
         return False
     info_count = t.shape[t.axis] if isinstance(t, st.ArraySplit) and t.shape \
@@ -124,6 +154,7 @@ def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
     accepts: dict[int, list[bool]] = {}            # node id -> per-edge verdicts
     edges: dict[tuple[int, int], int] = {}         # (stage id, input pos) -> node id
     done_edges: dict[tuple[int, int], int] = {}    # cross-evaluation ingests
+    convert_edges: set[tuple[int, int]] = set()    # ConcatSplit→ArraySplit
     for s in stages:
         for i, (key, si) in enumerate(s.inputs.items()):
             v = si.value
@@ -133,9 +164,14 @@ def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
             if prod is None:
                 # Cross-evaluation edge: the producer already ran.  Permit the
                 # ingest when the consumer's grid is a concrete array split;
-                # the runtime re-checks the actual stream's type.
+                # the runtime re-checks the actual stream's type.  ArraySplit
+                # consumers additionally permit a grid CONVERSION (the
+                # producer's type is unknowable here — it may be a fresh-
+                # output ConcatSplit stream from the prior evaluation).
                 if isinstance(si.split_type, (st.ArraySplit, st.PytreeSplit)):
                     done_edges[(s.id, i)] = v.node_id
+                    if isinstance(si.split_type, st.ArraySplit):
+                        convert_edges.add((s.id, i))
                 continue
             ps, _pos = prod
             if ps.id == s.id:
@@ -147,6 +183,8 @@ def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
             accepts.setdefault(v.node_id, []).append(ok)
             if ok:
                 edges[(s.id, i)] = v.node_id
+                if isinstance(pt, st.ConcatSplit):
+                    convert_edges.add((s.id, i))
 
     # A node streams iff every in-plan consumer edge accepts its grid.  Pure
     # outputs (no in-plan consumer) stream too: merge only on observation.
@@ -161,10 +199,22 @@ def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
             if all(accepts.get(n.id, [])):
                 streamed.add(n.id)
 
+    # Plan-time donation veto: an in-plan producer whose Future is alive at
+    # analysis time is OBSERVABLE — donating its buffers could only ever be
+    # satisfied with defensive copies, and a late merge after a real
+    # donation is the ``stage_exec.DONATED_MERGE_ERROR`` failure mode.  Veto
+    # the donation point here so the conflict cannot arise; the runtime
+    # raise stays as the backstop.  Cross-evaluation (done-edge) producers
+    # are not vetoed: their liveness legitimately varies call-to-call and
+    # ``undonatable_stream_keys`` handles them with per-call copies.
+    observable = {n.id for s in stages for n in s.nodes if n.future_alive()}
+
     # Last pending consumer of each handed-off value (the donation point).
     last_consumer: dict[int, tuple[int, int]] = {}
     for (sid, i), nid in list(edges.items()) + list(done_edges.items()):
         if nid in streamed or (sid, i) in done_edges:
+            if nid in producer and nid in observable:
+                continue                           # plan-time veto
             cur = last_consumer.get(nid)
             if cur is None or sid > cur[0]:
                 last_consumer[nid] = (sid, i)
@@ -179,6 +229,11 @@ def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
         ) | frozenset(i for (sid, i) in done_edges if sid == s.id)
         last_use = frozenset(
             i for nid, (sid, i) in last_consumer.items() if sid == s.id)
+        convert_in = frozenset(
+            i for (sid, i) in convert_edges
+            if sid == s.id and ((sid, i) in done_edges
+                                or edges.get((sid, i)) in streamed))
         if stream_out or stream_in:
-            out[s.id] = StageHandoff(stream_out, stream_in, last_use)
+            out[s.id] = StageHandoff(stream_out, stream_in, last_use,
+                                     convert_in)
     return out

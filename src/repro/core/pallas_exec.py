@@ -23,19 +23,26 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import split_types as st
 from repro.core.graph import NodeRef
 from repro.core.planner import Stage
 from repro.core.stage_exec import (
+    ChunkStream,
     StageExecutor,
+    batch_ranges,
     chain_plan,
+    donatable_input_keys,
     effective_elements,
     get_executor,
+    mark_stream_consumed,
+    note_materialized,
     note_trace,
     pinned_jit,
     register_executor,
     stage_num_elements,
+    undonatable_stream_keys,
 )
 
 
@@ -50,12 +57,17 @@ def _effective_block(batch: int, n: int) -> int:
 @register_executor("pallas")
 class PallasExecutor(StageExecutor):
     """Lower eligible elementwise stages onto the split-pipeline TPU kernel;
-    anything the kernel cannot express falls back to the fused driver."""
+    anything the kernel cannot express falls back to the fused driver.
+
+    Chunk handoff: an incoming ``ChunkStream`` is stacked DIRECTLY into the
+    kernel's padded ``(grid, BLOCK)`` launch layout (equal-grid fast path;
+    ``rechunk`` for disagreeing grids) instead of being merged and re-padded;
+    launch buffers the stage's handoff plan proves dead here are donated to
+    the jitted launch driver under the same structural donate-key rules as
+    the fused/scan drivers."""
 
     tunable = True
-    # The kernel pads + reshapes whole arrays into its (grid, BLOCK) layout;
-    # a chunk list would be concatenated first anyway, so streams materialize.
-    stream_capable = False
+    stream_capable = True
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         if not try_execute_stage_pallas(stage, concrete, ctx, self):
@@ -119,7 +131,7 @@ def _build_pallas_driver(stage: Stage, split_ckeys: list[tuple],
                          bcast_ckeys: list[tuple], esc_pos: list[int],
                          out_kinds: list[tuple[str, str]], out_dtypes: list,
                          batch: int, interpret: bool) -> Callable:
-    from repro.kernels.split_pipeline import split_pipeline_call
+    from repro.kernels.split_pipeline import padded_layout, split_pipeline_call_2d
 
     plan = chain_plan(stage)
     reduce_keys = {("n", stage.pos[n.id]) for n in stage.nodes
@@ -149,13 +161,73 @@ def _build_pallas_driver(stage: Stage, split_ckeys: list[tuple],
             outs.append(reduce_src[("n", p)] if kind == "reduce" else env[("n", p)])
         return outs
 
-    def driver(split_vals, bcast_vals):
+    def driver(donated: dict, rest: dict, bcast_vals, n: int):
+        # Launch buffers arrive prebuilt in the padded (grid, BLOCK) layout
+        # (position-keyed so donated and retained buffers reassemble in
+        # split-key order); the true length ``n`` is a static argument —
+        # the tail mask must never come from a stale closure.
         note_trace()
-        return split_pipeline_call(
-            chain_fn, split_vals, bcast_vals, out_kinds, out_dtypes,
-            block_elems=batch, interpret=interpret)
+        bufs = {**rest, **donated}
+        split2d = [bufs[i] for i in range(len(split_ckeys))]
+        block, _n_pad, _grid = padded_layout(n, batch)
+        return split_pipeline_call_2d(
+            chain_fn, split2d, bcast_vals, out_kinds, out_dtypes, n, block,
+            interpret=interpret)
 
-    return jax.jit(driver)
+    return jax.jit(driver, static_argnums=(3,), donate_argnums=(0,))
+
+
+def _to_launch_layout(v: Any, n: int, block: int, stage: Stage, ck: tuple,
+                      ctx) -> tuple[Any, bool]:
+    """One split input as its ``(grid, BLOCK)`` launch buffer.
+
+    Returns ``(buffer, fresh)`` — ``fresh`` means the buffer was assembled
+    here (stack/pad copies) and may be donated without endangering anyone
+    else's storage.  A handed-off ``ChunkStream`` stacks its chunk list
+    straight into the layout (equal-grid fast path; ``rechunk`` for
+    disagreeing grids) — ``materialize()`` is never called.
+
+    Building the buffer EAGERLY (outside the pinned driver) costs a few
+    extra dispatches per call, and is deliberate twice over: the driver's
+    argument shape is identical whether a stream arrived or a whole array
+    did (cross-evaluation arrival can flap call-to-call — inside-jit
+    padding would retrace on every flap, breaking the warm zero-retrace
+    invariant), and only an argument buffer can be DONATED (a padded
+    intermediate built inside the jit has no donation story)."""
+    from repro.kernels.split_pipeline import _round_up, pad_to_layout
+
+    if not isinstance(v, ChunkStream):
+        return pad_to_layout(v, n, block), _round_up(n, block) > n
+
+    grid_ranges = batch_ranges(n, block)
+    # scan→pallas: a carry-form stream whose batch IS the block passes its
+    # (k, BLOCK) main buffer through untouched.
+    if (v.stacked is not None and v._chunks is None
+            and v.uniform_batch() == block
+            and isinstance(v.stacked, jax.Array) and v.stacked.ndim == 2):
+        if v.tail is None:
+            return v.stacked, False
+        pad = block - int(v.tail.shape[0])
+        tail_row = jnp.pad(v.tail, (0, pad)).reshape(1, block)
+        return jnp.concatenate([v.stacked, tail_row], axis=0), True
+
+    chunks, ranges = v.chunks, v.ranges
+    if ranges != grid_ranges:
+        chunks, copied = v.split_type.rechunk(chunks, ranges, grid_ranges)
+        note_materialized(copied, kind="rechunk",
+                          where=f"stage {stage.id} input {ck}")
+        ctx.stats["handoff_rechunks"] += 1
+    sizes = [e - s for s, e in grid_ranges]
+    ragged = sizes[-1] < block
+    main = chunks[:-1] if ragged else chunks
+    rows = []
+    if main:
+        rows.append(jnp.stack(main))
+    if ragged:
+        rows.append(jnp.pad(chunks[-1], (0, block - sizes[-1]))
+                    .reshape(1, block))
+    buf = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+    return buf, True
 
 
 def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
@@ -173,6 +245,7 @@ def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
     if n == 0:
         return False                   # empty split: no grid to launch
     batch = executor.choose_batch(stage, concrete, ctx, n)
+    block = _effective_block(batch, n)
 
     escape_ids = sorted(stage.escaping)
     esc_pos = [stage.pos[nid] for nid in escape_ids]
@@ -192,16 +265,49 @@ def try_execute_stage_pallas(stage: Stage, concrete: dict[tuple, Any], ctx,
     if entry is not None:
         # The block SHAPE this launch compiles to, persisted for warm starts
         # and EXPLAIN tooling (idempotent: no-op when already recorded).
-        entry.pin_block_shape(stage.id, (1, _effective_block(batch, n)))
+        entry.pin_block_shape(stage.id, (1, block))
+
+    # Structural donate set (shared rules with the fused/scan drivers): the
+    # positions are part of the pinned variant key, so warm calls never flap.
+    donate_cks = set(donatable_input_keys(stage, ctx))
+    donate_pos = tuple(i for i, k in enumerate(split_keys)
+                       if stage.ckey(k) in donate_cks)
+    unsafe = undonatable_stream_keys(
+        stage, concrete, ctx, tuple(donate_cks)) if donate_pos else set()
+
     driver = pinned_jit(
-        stage, ctx, "pallas", (tuple(esc_pos), batch, interpret),
+        stage, ctx, "pallas", (tuple(esc_pos), batch, interpret, donate_pos),
         lambda: _build_pallas_driver(
             stage, [stage.ckey(k) for k in split_keys],
             [stage.ckey(k) for k in bcast_keys], esc_pos,
             out_kinds, out_dtypes, batch, interpret))
 
-    results = driver([concrete[k] for k in split_keys],
-                     [concrete[k] for k in bcast_keys])
+    donated: dict[int, Any] = {}
+    rest: dict[int, Any] = {}
+    consumed_keys: set = set()
+    for i, k in enumerate(split_keys):
+        v = concrete[k]
+        buf, fresh = _to_launch_layout(v, n, block, stage, stage.ckey(k), ctx)
+        if i not in donate_pos:
+            rest[i] = buf
+            continue
+        if fresh:
+            donated[i] = buf           # our own assembly: donation is free
+        elif stage.ckey(k) in unsafe or not isinstance(v, ChunkStream):
+            # Observable stream pass-through, or a whole array whose padded
+            # view may alias the producer's retained result: donate a copy.
+            donated[i] = jnp.array(buf)
+            ctx.stats["donation_copies"] += 1
+        else:
+            donated[i] = buf           # dead carry pass-through: real donation
+            consumed_keys.add(stage.ckey(k))
+    if donated:
+        ctx.stats["donated_chunks"] += len(donated)
+
+    outs = driver(donated, rest, [concrete[k] for k in bcast_keys], n)
+    from repro.kernels.split_pipeline import unpad_outputs
+    results = unpad_outputs(outs, out_kinds, n, block)
+    mark_stream_consumed(stage, concrete, ctx, consumed_keys)
     for nid, res in zip(escape_ids, results):
         node = next(nd for nd in stage.nodes if nd.id == nid)
         node.result = res

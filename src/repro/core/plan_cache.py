@@ -65,7 +65,14 @@ _MAX_ENTRIES = 256
 
 #: serialized file format version; bump on any layout change.
 #: v2: handoff decisions, pallas block shapes, auto exec_meta shape buckets.
-SCHEMA_VERSION = 2
+#: v3: ``convert_in`` on handoff records (ConcatSplit→ArraySplit edges).
+SCHEMA_VERSION = 3
+
+#: older schemas the loader can migrate forward in place.  v2 files differ
+#: from v3 only by the absence of ``convert_in`` on handoff records, which
+#: defaults to empty — correct for every pre-v3 plan (the rule did not
+#: exist, so no recorded decision could have used it).
+_MIGRATABLE_SCHEMAS = (2,)
 
 #: process-global cache statistics (benchmarks report these).
 stats: collections.Counter = collections.Counter()
@@ -796,8 +803,11 @@ def _load(path: str) -> tuple[int, int]:
         stats["persist_rejected_corrupt"] += 1
         return 0, 0
     if schema != SCHEMA_VERSION:
-        stats["persist_rejected_schema"] += 1
-        return 0, 0
+        if schema in _MIGRATABLE_SCHEMAS:
+            stats[f"persist_migrated_v{schema}"] += 1
+        else:
+            stats["persist_rejected_schema"] += 1
+            return 0, 0
     if chip != hardware.TARGET.name:
         stats["persist_rejected_chip"] += 1
         return 0, 0

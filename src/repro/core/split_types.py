@@ -121,6 +121,15 @@ class SplitType:
                 j += 1
             if aligned:
                 piece = parts[0]           # exact alignment: pass through
+            elif not parts:
+                # Degenerate zero-element destination range (empty grids,
+                # zero-size fresh pieces): carve an empty slice out of any
+                # source chunk instead of crashing merge([]).
+                if not chunks:
+                    raise ValueError(
+                        "rechunk: no source chunks to carve an empty piece "
+                        "from (zero-chunk stream reached rechunk)")
+                piece = self.split(chunks[0], 0, 0)
             else:
                 piece = self.merge(parts) if len(parts) > 1 else parts[0]
                 copied += sum(nbytes_of(l) for l in
@@ -277,6 +286,18 @@ class ConcatSplit(SplitType):
         return jax.tree_util.tree_map(
             lambda *ls: jnp.concatenate(ls, axis=self.axis), *pieces
         )
+
+    def can_handoff(self, consumer: "SplitType") -> bool:
+        # ConcatSplit→ArraySplit: fresh pieces merge by concatenation along
+        # ``axis``; a consumer iterating the SAME axis of a concrete array
+        # grid can ingest them directly — the pieces laid end to end ARE a
+        # chunk grid for it.  Piece sizes are unknowable before execution,
+        # so this is only *permission*: the runtime derives the concrete
+        # grid from the chunk buffers (``stage_exec.adapt_stream``) and
+        # falls back to a merge when they do not tile the consumer's
+        # geometry.
+        return (isinstance(consumer, ArraySplit) and bool(consumer.shape)
+                and consumer.axis == self.axis)
 
 
 _unknown_uid = itertools.count()

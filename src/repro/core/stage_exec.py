@@ -25,10 +25,12 @@ paper's §5.2 fast-memory estimate (``hardware.mozart_batch_elements``).
 
 from __future__ import annotations
 
+import collections
 import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro import hardware
 from repro.core import split_types as st
@@ -176,25 +178,67 @@ def trace_count() -> int:
 # Stage-boundary traffic accounting
 # ---------------------------------------------------------------------------
 
-#: process-global count of bytes moved at stage BOUNDARIES: bytes written by
-#: merges of multi-chunk partials (``finish_stage``, ``ChunkStream.
-#: materialize``, ``SplitType.rechunk`` copies) plus bytes re-sliced when a
-#: stage splits a value that another stage produced.  Splitting EXTERNAL
-#: pipeline inputs is not counted (that split is inherent to chunking, not a
-#: boundary round trip).  Cross-stage chunk handoff exists to drive the
-#: interior-boundary component of this counter to zero — asserted by
-#: ``benchmarks.run --smoke`` (the ``smoke/handoff`` row) and
-#: tests/test_handoff.py.
-_BYTES_MATERIALIZED = 0
+#: process-global count of bytes moved at stage BOUNDARIES, split into two
+#: components.  INTERIOR bytes are the round trips the handoff subsystem
+#: exists to remove: merges of multi-chunk partials (``finish_stage``,
+#: ``SplitType.rechunk`` copies, materialize-on-ingest by a stream-incapable
+#: executor) plus bytes re-sliced when a stage splits a value that another
+#: stage produced.  TERMINAL bytes are the lazy ``ChunkStream.materialize``
+#: of an *observed* pipeline output (``Future.value`` forcing the merge) —
+#: inherent to observation, not a boundary round trip, and therefore
+#: accounted separately so gates never pass or fail for the wrong reason.
+#: Splitting EXTERNAL pipeline inputs is counted by neither (that split is
+#: inherent to chunking).  Cross-stage chunk handoff drives the INTERIOR
+#: component to zero — asserted by ``benchmarks.run --smoke`` (the
+#: ``smoke/handoff`` rows) and tests/test_handoff.py.
+_BYTES_INTERIOR = 0
+_BYTES_TERMINAL = 0
+
+#: bounded trail of recent materialization events ``(kind, where, nbytes)``
+#: — enough context for the smoke gate to NAME the offending boundary in a
+#: diff-style message instead of failing on a bare byte count.
+_EVENT_LIMIT = 256
+_EVENTS: "collections.deque[tuple[str, str, int]]" = collections.deque(
+    maxlen=_EVENT_LIMIT)
 
 
-def note_materialized(nbytes: int) -> None:
-    global _BYTES_MATERIALIZED
-    _BYTES_MATERIALIZED += int(nbytes)
+def note_materialized(nbytes: int, terminal: bool = False,
+                      kind: str = "merge", where: str = "") -> None:
+    global _BYTES_INTERIOR, _BYTES_TERMINAL
+    if terminal:
+        _BYTES_TERMINAL += int(nbytes)
+    else:
+        _BYTES_INTERIOR += int(nbytes)
+    _EVENTS.append((("terminal:" if terminal else "interior:") + kind,
+                    where, int(nbytes)))
 
 
 def bytes_materialized() -> int:
-    return _BYTES_MATERIALIZED
+    """Total boundary bytes (interior + terminal)."""
+    return _BYTES_INTERIOR + _BYTES_TERMINAL
+
+
+def bytes_interior() -> int:
+    """Interior-boundary bytes only (must be 0 on a fully handed-off chain)."""
+    return _BYTES_INTERIOR
+
+
+def bytes_terminal() -> int:
+    """Bytes merged lazily at *observed* terminal outputs only."""
+    return _BYTES_TERMINAL
+
+
+def reset_materialized() -> None:
+    """Zero both byte counters and drop the event trail (smoke rows, tests)."""
+    global _BYTES_INTERIOR, _BYTES_TERMINAL
+    _BYTES_INTERIOR = 0
+    _BYTES_TERMINAL = 0
+    _EVENTS.clear()
+
+
+def materialize_events() -> list[tuple[str, str, int]]:
+    """Recent ``(kind, where, nbytes)`` materialization events (bounded)."""
+    return list(_EVENTS)
 
 
 def _value_nbytes(v: Any) -> int:
@@ -207,6 +251,15 @@ def _value_nbytes(v: Any) -> int:
 # ---------------------------------------------------------------------------
 
 
+#: pinned message of the donated-stream late-merge backstop raise.  The
+#: plan-time veto in ``handoff.analyze`` (observable producers never donate)
+#: should make this unreachable; it stays as the runtime guard of last
+#: resort and its text is asserted by tests/test_handoff.py.
+DONATED_MERGE_ERROR = (
+    "ChunkStream buffers were donated to a driver and can no longer be "
+    "merged (handoff analysis bug: a donated stream was observed afterwards)")
+
+
 class ChunkStream:
     """A stage output left as its chunk list + grid metadata.
 
@@ -217,18 +270,42 @@ class ChunkStream:
     happens lazily, and only if the value is actually *observed* (a
     ``Future`` forces it, or a stream-incapable executor resolves it);
     ``materialize`` caches the merged value so it is paid at most once.
+
+    Two storage forms share this class.  The chunk-LIST form holds one
+    buffer per grid range (the chunk-loop executors' native output).  The
+    STACKED form (``from_stacked``) holds the ``scan`` driver's carry layout
+    directly — one ``(n_chunks, batch, …)`` leaf per pytree leaf plus an
+    optional ragged ``tail`` chunk — so a scan→scan boundary hands the carry
+    buffer over with zero slicing; a chunk-loop consumer derives the chunk
+    list lazily (paying, and counting, one slice pass).
     """
 
-    __slots__ = ("chunks", "ranges", "split_type", "aval", "_merged", "consumed")
+    __slots__ = ("_chunks", "ranges", "split_type", "aval", "_merged",
+                 "consumed", "stacked", "tail")
 
-    def __init__(self, chunks: list, ranges: list, split_type: st.SplitType,
-                 aval: Any):
-        self.chunks = list(chunks)
+    def __init__(self, chunks: list | None, ranges: list,
+                 split_type: st.SplitType, aval: Any):
+        self._chunks = list(chunks) if chunks is not None else None
         self.ranges = list(ranges)
         self.split_type = split_type
         self.aval = aval                   # full-value ShapeDtypeStruct pytree
         self._merged = None
         self.consumed = False              # chunk buffers donated to a driver
+        self.stacked = None                # (n_chunks, batch, …) carry layout
+        self.tail = None                   # ragged tail chunk (chunk-shaped)
+
+    @classmethod
+    def from_stacked(cls, stacked: Any, tail: Any, ranges: list,
+                     split_type: st.SplitType, aval: Any) -> "ChunkStream":
+        """Wrap a scan driver's carry layout without unstacking it.
+
+        ``stacked`` leaves are ``(n_chunks, batch, …)`` with the split axis
+        already moved to position 1 (the scan stacking convention); ``tail``
+        is the ragged last chunk in normal chunk form, or None."""
+        s = cls(None, ranges, split_type, aval)
+        s.stacked = stacked
+        s.tail = tail
+        return s
 
     # -- aval-like surface (batch sizing reads .shape/.dtype) ---------------
     @property
@@ -247,6 +324,59 @@ class ChunkStream:
     def n(self) -> int:
         return self.ranges[-1][1] if self.ranges else 0
 
+    def _axis(self) -> int:
+        ax = split_axis_of(self.split_type)
+        return 0 if ax is None else ax
+
+    def _empty_value(self) -> Any:
+        """A zero-element value shaped like the aval (zero-chunk streams)."""
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape, a.dtype), self.aval)
+
+    @property
+    def chunks(self) -> list:
+        """The chunk list, deriving (and counting) it from stacked storage.
+
+        A stacked stream only pays this slice pass when a chunk-loop
+        consumer actually iterates it; a scan consumer uses ``stacked``
+        directly and the derivation never happens."""
+        if self._chunks is None:
+            ax = self._axis()
+            k = len(self.ranges) - (1 if self.tail is not None else 0)
+
+            def unstack_one(i):
+                return jax.tree_util.tree_map(
+                    lambda l: jnp.moveaxis(l[i], 0, ax), self.stacked)
+
+            derived = [unstack_one(i) for i in range(k)]
+            if self.tail is not None:
+                derived.append(self.tail)
+            self._chunks = derived
+            nb = sum(_value_nbytes(c) for c in derived)
+            note_materialized(nb, kind="unstack",
+                              where=f"stream n={self.n} {self.split_type}")
+        return self._chunks
+
+    def chunk(self, i: int) -> Any:
+        """Chunk ``i`` of the grid without deriving the whole list.
+
+        Degenerate zero-element grids (``ranges == [(0, 0)]``) may carry no
+        buffer at all; they resolve to an empty value built from the aval."""
+        if self._chunks is None and self.stacked is not None:
+            k = len(self.ranges) - (1 if self.tail is not None else 0)
+            if i >= k and self.tail is not None:
+                return self.tail
+            ax = self._axis()
+            piece = jax.tree_util.tree_map(
+                lambda l: jnp.moveaxis(l[i], 0, ax), self.stacked)
+            s, e = self.ranges[i]
+            note_materialized(_value_nbytes(piece), kind="unstack",
+                              where=f"stream chunk [{s},{e})")
+            return piece
+        if not self._chunks and self.n == 0:
+            return self._empty_value()
+        return self._chunks[i]
+
     def uniform_batch(self) -> int | None:
         """Chunk size when the grid is regular (ragged tail allowed)."""
         if not self.ranges:
@@ -259,22 +389,47 @@ class ChunkStream:
         return (not self.consumed
                 and self.split_type.can_handoff(consumer_type))
 
-    def materialize(self) -> Any:
-        """Merge (once) and return the full value; counts boundary bytes."""
+    def materialize(self, terminal: bool = False) -> Any:
+        """Merge (once) and return the full value; counts boundary bytes.
+
+        ``terminal=True`` marks the merge as observation of a pipeline
+        output (``Future.value``) — accounted under ``bytes_terminal`` so
+        the interior-boundary gate never charges observation costs."""
         if self._merged is None:
             if self.consumed:
-                raise RuntimeError(
-                    "ChunkStream buffers were donated to a driver and can no "
-                    "longer be merged (handoff analysis bug: a donated stream "
-                    "was observed afterwards)")
-            self._merged = self.split_type.merge(self.chunks)
-            if len(self.chunks) > 1:
-                note_materialized(_value_nbytes(self._merged))
+                raise RuntimeError(DONATED_MERGE_ERROR)
+            if self.stacked is not None and self._chunks is None:
+                self._merged = self._merge_stacked()
+            elif not self._chunks:
+                # Zero-chunk stream (empty pipeline): merge([]) would crash
+                # in the library's concat; the aval names the empty result.
+                self._merged = self._empty_value()
+            else:
+                self._merged = self.split_type.merge(self._chunks)
+            if (self._chunks is None and self.stacked is not None) \
+                    or len(self._chunks or ()) > 1:
+                note_materialized(_value_nbytes(self._merged),
+                                  terminal=terminal,
+                                  kind="materialize",
+                                  where=f"stream n={self.n} {self.split_type}")
         return self._merged
 
+    def _merge_stacked(self) -> Any:
+        ax = self._axis()
+
+        def flat(l):
+            body = l.reshape((l.shape[0] * l.shape[1],) + l.shape[2:])
+            return jnp.moveaxis(body, 0, ax)
+
+        main = jax.tree_util.tree_map(flat, self.stacked)
+        if self.tail is None:
+            return main
+        return self.split_type.merge([main, self.tail])
+
     def __repr__(self) -> str:
-        return (f"ChunkStream({len(self.chunks)} chunks, n={self.n}, "
-                f"{self.split_type})")
+        form = ("stacked" if self._chunks is None and self.stacked is not None
+                else f"{len(self._chunks or ())} chunks")
+        return f"ChunkStream({form}, n={self.n}, {self.split_type})"
 
 
 def materialize(v: Any) -> Any:
@@ -306,7 +461,7 @@ def chunk_env_for(stage: Stage, concrete: dict[tuple, Any], s: int, e: int,
         if isinstance(v, ChunkStream):
             # Handed-off input: chunk ``chunk_index`` of the producer's grid
             # IS this range's piece — no slice, no boundary traffic.
-            env[stage.ckey(key)] = v.chunks[chunk_index]
+            env[stage.ckey(key)] = v.chunk(chunk_index)
             continue
         if si.split_type.splittable:
             if s == 0 and not pedantic and stage.ckey(key) not in force_slice:
@@ -320,7 +475,9 @@ def chunk_env_for(stage: Stage, concrete: dict[tuple, Any], s: int, e: int,
             if isinstance(si.value, NodeRef):
                 # Re-slicing another stage's merged output: the round trip
                 # the handoff subsystem exists to remove.
-                note_materialized(_value_nbytes(piece))
+                note_materialized(_value_nbytes(piece), kind="resplit",
+                                  where=f"stage {stage.id} input {stage.ckey(key)}"
+                                        f" range [{s},{e})")
             if pedantic and hasattr(piece, "shape") and 0 in piece.shape:
                 raise PedanticError(f"empty split for {key} range [{s},{e})")
             env[stage.ckey(key)] = piece
@@ -400,7 +557,8 @@ def finish_stage(stage: Stage, partials: dict[int, list[Any]],
             else:
                 node.result = t.merge(pieces)
                 if len(pieces) > 1 and not isinstance(t, st.ScalarSplit):
-                    note_materialized(_value_nbytes(node.result))
+                    note_materialized(_value_nbytes(node.result), kind="merge",
+                                      where=f"stage {stage.id} node {p}")
         node.done = True
 
 
@@ -450,6 +608,42 @@ def has_dynamic(stage: Stage) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def adapt_stream(v: "ChunkStream", consumer: st.SplitType) -> "ChunkStream | None":
+    """Reinterpret a fresh-output (ConcatSplit) stream under the consumer's
+    concrete ArraySplit grid — the runtime half of the ConcatSplit→ArraySplit
+    handoff rule.
+
+    A ConcatSplit producer's piece sizes are unknowable at plan time, so the
+    analysis only records that the conversion is *permitted*
+    (``StageHandoff.convert_in``); here the sizes are read off the concrete
+    chunk buffers, and when they tile the consumer's geometry exactly the
+    SAME buffers are re-wrapped under the consumer's split type — zero
+    copies.  Returns None when the pieces do not form the consumer's grid
+    (multi-leaf chunks, axis out of range, total mismatch); the caller
+    materializes instead, which is always correct."""
+    if not (isinstance(v.split_type, st.ConcatSplit)
+            and isinstance(consumer, st.ArraySplit) and consumer.shape):
+        return None
+    if v._chunks is None:              # stacked ConcatSplit streams don't exist
+        return None
+    ax = consumer.axis
+    sizes = []
+    for c in v._chunks:
+        leaves = jax.tree_util.tree_leaves(c)
+        if len(leaves) != 1 or len(getattr(leaves[0], "shape", ())) <= ax:
+            return None
+        sizes.append(int(leaves[0].shape[ax]))
+    if sum(sizes) != consumer.shape[ax]:
+        return None
+    ranges, s = [], 0
+    for z in sizes:
+        ranges.append((s, s + z))
+        s += z
+    if not ranges:                     # zero-chunk stream of an empty value
+        ranges = [(0, 0)]
+    return ChunkStream(v._chunks, ranges, consumer, v.aval)
+
+
 def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
                          streams_ok: bool, tally: bool = True) -> dict[tuple, Any]:
     """Resolve stage inputs, ingesting producer ChunkStreams where allowed.
@@ -458,8 +652,10 @@ def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
     chunk list (``streams_ok``), (b) the handoff plan marked this input
     position as a stream ingest, and (c) the stream's grid actually fits the
     input's split type at run time (always re-checked: cross-evaluation
-    edges carry whatever grid the *previous* evaluation produced).  Anything
-    else is materialized — correct by construction, merely the old cost.
+    edges carry whatever grid the *previous* evaluation produced).  A
+    permitted ConcatSplit→ArraySplit edge re-wraps the producer's fresh
+    pieces under the consumer's grid (``adapt_stream``).  Anything else is
+    materialized — correct by construction, merely the old cost.
     ``tally=False`` skips the ingest/materialize stats (scoring-only
     resolves, e.g. ``AutoExecutor``, whose delegate re-resolves and counts)."""
     plan = getattr(ctx, "_handoff", None)
@@ -468,8 +664,22 @@ def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
     for i, (key, si) in enumerate(stage.inputs.items()):
         v = graph.resolve(si.value)
         if isinstance(v, ChunkStream):
-            if (streams_ok and ho is not None and i in ho.stream_in
-                    and v.compatible(si.split_type)):
+            ok = (streams_ok and ho is not None and i in ho.stream_in
+                  and v.compatible(si.split_type))
+            if ok and type(v.split_type) is not type(si.split_type):
+                # Grid conversion only where the PLAN permitted it — the
+                # recorded ``convert_in`` decision replays, never a fresh
+                # type-level judgement.
+                adapted = (adapt_stream(v, si.split_type)
+                           if i in getattr(ho, "convert_in", frozenset())
+                           else None)
+                if adapted is None:
+                    ok = False
+                else:
+                    v = adapted
+                    if tally:
+                        ctx.stats["stream_converted"] += 1
+            if ok:
                 if tally:
                     ctx.stats["stream_ingests"] += 1
             else:
@@ -478,6 +688,86 @@ def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
                     ctx.stats["stream_materialized"] += 1
         concrete[key] = v
     return concrete
+
+
+# ---------------------------------------------------------------------------
+# Chunk-buffer donation (shared by the fused / scan / pallas drivers)
+# ---------------------------------------------------------------------------
+
+
+def _aval_sig(aval) -> tuple:
+    return tuple((tuple(l.shape), str(l.dtype))
+                 for l in jax.tree_util.tree_leaves(aval)
+                 if hasattr(l, "shape"))
+
+
+def donatable_input_keys(stage: Stage, ctx) -> tuple:
+    """Canonical env keys of inputs whose per-chunk buffers die here.
+
+    STRUCTURAL only — a pure function of the handoff plan (this stage is
+    the handed-off value's LAST in-plan consumer, and the plan-time veto in
+    ``handoff.analyze`` already excluded observable producers) and the stage
+    template (NodeRef-sourced, splittable, some escaping output chunk can
+    absorb the buffer) — so a pinned driver's donate variant is identical on
+    every call and the zero-retrace warm-call invariant holds.  Whether a
+    producer is still observable *now* is a runtime question answered by
+    ``undonatable_stream_keys`` (an observable stream donates a defensive
+    COPY, never its own buffers)."""
+    plan = getattr(ctx, "_handoff", None)
+    ho = plan.get(stage.id) if plan else None
+    if ho is None or not ho.last_use:
+        return ()
+
+    # XLA can only reuse a donated buffer for an output of the same
+    # shape/dtype: donate at most ONE input per matching escaping output
+    # (else jax warns about unusable donations).
+    out_sigs: dict[tuple, int] = {}
+    for n in stage.nodes:
+        if (n.id in stage.escaping and n.out_aval is not None
+                and stage.out_types[n.id].splittable):
+            sig = _aval_sig(n.out_aval)
+            out_sigs[sig] = out_sigs.get(sig, 0) + 1
+    keys = []
+    for i, (key, si) in enumerate(stage.inputs.items()):
+        if not (i in ho.last_use and isinstance(si.value, NodeRef)
+                and si.split_type.splittable):
+            continue
+        node = ctx.graph.nodes.get(si.value.node_id)
+        aval = node.out_aval if node is not None else None
+        if aval is not None and out_sigs.get(_aval_sig(aval), 0) > 0:
+            out_sigs[_aval_sig(aval)] -= 1
+            keys.append(stage.ckey(key))
+    return tuple(sorted(keys))
+
+
+def undonatable_stream_keys(stage: Stage, concrete: dict[tuple, Any], ctx,
+                            donate: tuple) -> set:
+    """Donate-marked keys whose ChunkStream may still be observed (the
+    producer's Future is alive): their chunks are copied before donation so
+    the stream's own buffers survive.  The plan-time veto makes this rare —
+    it still fires when liveness flapped between analysis and this call."""
+    unsafe = set()
+    for key, si in stage.inputs.items():
+        ck = stage.ckey(key)
+        if ck in donate and isinstance(concrete.get(key), ChunkStream):
+            node = ctx.graph.nodes.get(si.value.node_id)
+            if node is None or node.future_alive():
+                unsafe.add(ck)
+    return unsafe
+
+
+def mark_stream_consumed(stage: Stage, concrete: dict[tuple, Any], ctx,
+                         consumed: "set | frozenset | tuple") -> None:
+    """After real (non-copy) donation of the canonical keys in ``consumed``:
+    flag the stream AND its graph-node original so a late ``materialize``
+    hits the pinned backstop error instead of returning freed buffers."""
+    for key, si in stage.inputs.items():
+        v = concrete.get(key)
+        if stage.ckey(key) in consumed and isinstance(v, ChunkStream):
+            v.consumed = True              # buffers are gone: mark both the
+            orig = ctx.graph.nodes[si.value.node_id].result
+            if isinstance(orig, ChunkStream):
+                orig.consumed = True       # original and adapted/rechunked aliases
 
 
 def materialize_inputs(stage: Stage, concrete: dict[tuple, Any],
@@ -506,7 +796,12 @@ def _block_stage_outputs(stage: Stage) -> None:
         if node.id in stage.escaping and node.result is not None:
             try:
                 r = node.result
-                jax.block_until_ready(r.chunks if isinstance(r, ChunkStream) else r)
+                if isinstance(r, ChunkStream):
+                    # Raw storage, never the derived chunk list: blocking must
+                    # not charge an unstack pass to the boundary counters.
+                    r = [x for x in (r._chunks, r.stacked, r.tail)
+                         if x is not None]
+                jax.block_until_ready(r)
             except Exception:
                 pass  # non-array results (tables, corpora): nothing async
 

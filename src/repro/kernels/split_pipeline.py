@@ -85,31 +85,42 @@ def _pipeline_kernel(
             o_ref[0, 0] = part.astype(o_ref.dtype)
 
 
-def split_pipeline_call(
+def padded_layout(n: int, block_elems: int) -> tuple[int, int, int]:
+    """(block, n_pad, grid) the kernel will launch for ``n`` elements."""
+    block = max(MIN_BLOCK, _round_up(min(block_elems, max(n, 1)), MIN_BLOCK))
+    n_pad = _round_up(n, block)
+    return block, n_pad, n_pad // block
+
+
+def pad_to_layout(x: jax.Array, n: int, block: int) -> jax.Array:
+    """View a 1-D logical array as the kernel's ``(grid, block)`` layout."""
+    n_pad = _round_up(n, block)
+    return jnp.pad(x, (0, n_pad - n)).reshape(n_pad // block, block)
+
+
+def split_pipeline_call_2d(
     chain_fn: Callable,
-    split_inputs: Sequence[jax.Array],
+    split2d: Sequence[jax.Array],
     bcast_inputs: Sequence[Any],
     out_kinds: Sequence[tuple[str, str]],
     out_dtypes: Sequence[Any],
-    block_elems: int,
+    n: int,
+    block: int,
     interpret: bool = True,
 ):
-    """Run a Mozart stage as one Pallas kernel.
+    """Padded-layout entry point: launch on prebuilt ``(grid, block)`` buffers.
 
-    chain_fn(blocks, bcasts) -> list of escaping outputs (block-shaped for
-    concat outputs, scalar for reduce outputs).
+    Returns the kernel's PADDED outputs — ``(grid, block)`` for concat
+    outputs, ``(grid, 1)`` reduce partials — leaving the unpad/combine to the
+    caller (``unpad_outputs``).  Splitting the lifecycle this way lets the
+    caller build the launch buffers however it likes (pad a whole array,
+    stack a handed-off chunk list) and DONATE them to a jitted wrapper: a
+    donated ``(grid, block)`` input can back a same-shaped padded output,
+    which the old whole-launch entry point could never line up.
     """
-    n = int(split_inputs[0].shape[0])
-    block = max(MIN_BLOCK, _round_up(min(block_elems, max(n, 1)), MIN_BLOCK))
-    n_pad = _round_up(n, block)
-    grid = n_pad // block
-
-    def pad2d(x):
-        x = jnp.pad(x, (0, n_pad - n))
-        return x.reshape(grid, block)
-
-    split2d = [pad2d(x) for x in split_inputs]
-    bcast2d = [jnp.asarray(b, jnp.result_type(b)).reshape(1, 1) for b in bcast_inputs]
+    grid = int(split2d[0].shape[0])
+    bcast2d = [jnp.asarray(b, jnp.result_type(b)).reshape(1, 1)
+               for b in bcast_inputs]
 
     in_specs = (
         [pl.BlockSpec((1, block), lambda i: (i, 0)) for _ in split2d]
@@ -129,21 +140,26 @@ def split_pipeline_call(
         _pipeline_kernel, len(split2d), len(bcast2d), tuple(out_kinds),
         chain_fn, n, block,
     )
-    outs = pl.pallas_call(
+    return pl.pallas_call(
         kernel,
         grid=(grid,),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
-    )(*split2d, *bcast2d)
+    )(*list(split2d), *bcast2d)
 
+
+def unpad_outputs(outs, out_kinds: Sequence[tuple[str, str]], n: int,
+                  block: int):
+    """Strip the padded layout off kernel outputs and combine reductions."""
+    n_pad = _round_up(n, block)
     results = []
     for (kind, op), o in zip(out_kinds, outs):
         if kind == "concat":
             results.append(o.reshape(n_pad)[:n])
         else:
-            flat = o.reshape(grid)
+            flat = o.reshape(o.shape[0])
             if op == "add":
                 results.append(jnp.sum(flat))
             elif op == "mul":
@@ -153,3 +169,26 @@ def split_pipeline_call(
             else:
                 results.append(jnp.min(flat))
     return results
+
+
+def split_pipeline_call(
+    chain_fn: Callable,
+    split_inputs: Sequence[jax.Array],
+    bcast_inputs: Sequence[Any],
+    out_kinds: Sequence[tuple[str, str]],
+    out_dtypes: Sequence[Any],
+    block_elems: int,
+    interpret: bool = True,
+):
+    """Run a Mozart stage as one Pallas kernel (whole-launch convenience).
+
+    chain_fn(blocks, bcasts) -> list of escaping outputs (block-shaped for
+    concat outputs, scalar for reduce outputs).
+    """
+    n = int(split_inputs[0].shape[0])
+    block, _n_pad, _grid = padded_layout(n, block_elems)
+    split2d = [pad_to_layout(x, n, block) for x in split_inputs]
+    outs = split_pipeline_call_2d(
+        chain_fn, split2d, bcast_inputs, out_kinds, out_dtypes, n, block,
+        interpret=interpret)
+    return unpad_outputs(outs, out_kinds, n, block)

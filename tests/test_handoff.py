@@ -1,13 +1,17 @@
 """Cross-stage chunk handoff: the merge→re-split eliminator.
 
-Covers: the SplitType ``can_handoff``/``rechunk`` protocol; differential
-parity (handoff on vs off) across every registered executor and across
-ElementSplit/ReduceSplit/broadcast/axis-mismatch edges with empty and
-odd-size inputs; boundary-traffic accounting (``stage_exec.
-bytes_materialized`` — interior boundaries drop to zero under handoff);
-chunk-buffer donation safety; and a ``MOZART_PLAN_CACHE`` round trip
-asserting recorded handoff decisions replay in a fresh process with zero
-planner calls.
+Covers: the SplitType ``can_handoff``/``rechunk`` protocol (including the
+misaligned-grid property test and the ConcatSplit→ArraySplit rule);
+differential parity (handoff on vs off) across every registered executor
+and across ElementSplit/ReduceSplit/broadcast/axis-mismatch edges with
+empty and odd-size inputs; ``scan``/``pallas`` stream ingest (carry-layout
+stacking, padded-launch-buffer stacking, zero interior bytes, zero warm
+retraces); interior-vs-terminal boundary-byte accounting; zero-chunk
+stream hardening; chunk-buffer donation safety (plan-time veto of
+observable producers + the pinned runtime backstop); and
+``MOZART_PLAN_CACHE`` round trips asserting recorded decisions — including
+ConcatSplit conversions and migrated v2 files — replay in a fresh process
+with zero planner calls.
 """
 
 import json
@@ -305,7 +309,25 @@ class TestBoundaryTraffic:
 
     def test_incapable_executor_materializes_on_ingest(self):
         """A stream handed to a whole-value executor merges on ingest —
-        correct, merely the old cost."""
+        correct, merely the old cost.  (`eager` is the remaining
+        stream-incapable chunking-free strategy; `scan` and `pallas` became
+        stream ingesters in the handoff-completion pass.)"""
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        plan_cache.clear()
+        with mozart.session(executor="fused", batch_elements=self.BATCH) as ctx:
+            a = anp.multiply(anp.add(x, 1.0), 0.5)
+            mozart.evaluate()            # `a` streams (pure output, fused)
+            assert isinstance(ctx.graph.nodes[a._node.id].result, ChunkStream)
+            mozart.configure(executor="eager")
+            out = np.asarray(anp.exp(a))
+        assert ctx.stats["stream_materialized"] >= 1
+        want = np.exp((np.linspace(0., 1., self.N, dtype=np.float32) + 1) * 0.5)
+        np.testing.assert_allclose(out, want, rtol=2e-5)
+
+    def test_scan_ingests_fused_stream(self):
+        """`scan` is a stream ingester now: a chunk-list stream from the
+        fused driver stacks straight into the carry layout — no
+        materialize on the boundary."""
         x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
         plan_cache.clear()
         with mozart.session(executor="fused", batch_elements=self.BATCH) as ctx:
@@ -314,7 +336,8 @@ class TestBoundaryTraffic:
             assert isinstance(ctx.graph.nodes[a._node.id].result, ChunkStream)
             mozart.configure(executor="scan")
             out = np.asarray(anp.exp(a))
-        assert ctx.stats["stream_materialized"] >= 1
+        assert ctx.stats.get("stream_materialized", 0) == 0
+        assert ctx.stats["stream_ingests"] >= 1
         want = np.exp((np.linspace(0., 1., self.N, dtype=np.float32) + 1) * 0.5)
         np.testing.assert_allclose(out, want, rtol=2e-5)
 
@@ -466,3 +489,531 @@ def test_handoff_decisions_replay_from_persisted_cache(tmp_path):
     assert b["streamed"] == 3 and b["ingests"] == 2
     assert b["bytes"] == 30_000 * 4           # final observed output only
     assert np.isclose(a["sum"], b["sum"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scan / pallas stream ingest (the handoff-completion pass)
+# ---------------------------------------------------------------------------
+
+
+class TestScanPallasIngest:
+    """Every executor's interior boundary hits zero, not just the chunk
+    loops: `scan` stacks incoming streams into its carry layout, `pallas`
+    stacks them into the padded launch buffer."""
+
+    N, BATCH = 50_000, 8192
+
+    def _chain(self, executor, handoff=True):
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+
+        def once():
+            with mozart.session(executor=executor, batch_elements=self.BATCH,
+                                handoff=handoff) as ctx:
+                out = np.asarray(_eval_chain(x))
+            return out, ctx
+
+        plan_cache.clear()
+        once(); once()                   # plan, then warm (tune + pin)
+        stage_exec.reset_materialized()
+        t0 = stage_exec.trace_count()
+        out, ctx = once()
+        return out, ctx, stage_exec.trace_count() - t0
+
+    @pytest.mark.parametrize("executor", ["scan", "pallas"])
+    def test_interior_zero_and_zero_retrace(self, executor):
+        out, ctx, traces = self._chain(executor)
+        assert stage_exec.bytes_interior() == 0
+        assert traces == 0               # warm calls: zero jit retraces
+        assert ctx.stats["planner_calls"] == 0
+        off_out, _, _ = self._chain(executor, handoff=False)
+        np.testing.assert_allclose(out, off_out, rtol=2e-5)
+
+    def test_scan_streams_and_donates_carry(self):
+        _, ctx, _ = self._chain("scan")
+        assert ctx.stats["streamed_outputs"] == 3
+        assert ctx.stats["stream_ingests"] == 2
+        # dead carries donate for real — no defensive copies on this chain
+        assert ctx.stats["donated_chunks"] > 0
+        assert ctx.stats.get("donation_copies", 0) == 0
+        # observation of the final output is TERMINAL, never interior
+        assert stage_exec.bytes_terminal() == self.N * 4
+
+    def test_scan_carry_passthrough_is_stacked(self):
+        """A scan stage's streamed output keeps the driver's carry layout
+        (ChunkStream.from_stacked) — a scan consumer ingests it without ever
+        deriving the chunk list."""
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        plan_cache.clear()
+        with mozart.session(executor="scan", batch_elements=self.BATCH) as ctx:
+            a = anp.multiply(anp.add(x, 1.0), 0.5)
+            mozart.evaluate()
+            res = ctx.graph.nodes[a._node.id].result
+            assert isinstance(res, ChunkStream)
+            assert res.stacked is not None and res._chunks is None
+            out = np.asarray(anp.exp(a))
+        want = np.exp((np.asarray(x) + 1) * 0.5)
+        np.testing.assert_allclose(out, want, rtol=2e-5)
+
+    def test_pallas_ingests_fused_stream(self):
+        """A chunk-list stream stacks straight into the pallas launch
+        buffer — no materialize on the boundary."""
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+
+        def once():
+            with mozart.session(executor="fused",
+                                batch_elements=self.BATCH) as ctx:
+                a = anp.multiply(anp.add(x, 1.0), 0.5)
+                mozart.evaluate()
+                mozart.configure(executor="pallas")
+                out = np.asarray(anp.exp(a))
+            return out, ctx
+
+        plan_cache.clear()
+        once(); once()
+        stage_exec.reset_materialized()
+        out, ctx = once()
+        assert stage_exec.bytes_interior() == 0
+        assert ctx.stats["stream_ingests"] >= 1
+        assert ctx.stats.get("stream_materialized", 0) == 0
+        assert ctx.stats["pallas_stages"] == 1
+        want = np.exp((np.asarray(x) + 1) * 0.5)
+        np.testing.assert_allclose(out, want, rtol=2e-5)
+
+    def test_misaligned_grid_rechunks_once(self):
+        """A producer grid beyond the consumer's slack re-grids through
+        SplitType.rechunk — at most one copy, tallied and counted."""
+        x = jnp.linspace(0., 1., 20_000, dtype=jnp.float32)
+        plan_cache.clear()
+        with mozart.session(executor="fused", batch_elements=6000) as ctx:
+            a = anp.multiply(anp.add(x, 1.0), 0.5)
+            mozart.evaluate()
+            mozart.configure(batch_elements=1024)   # 6000 > 2x1024: re-grid
+            stage_exec.reset_materialized()
+            out = np.asarray(anp.exp(a))
+        assert ctx.stats["handoff_rechunks"] == 1
+        # the rechunk pays at most ONE copy of the data (merge+re-split = 2)
+        rechunk_bytes = sum(nb for kind, _, nb in stage_exec.materialize_events()
+                            if kind == "interior:rechunk")
+        assert 0 < rechunk_bytes <= x.nbytes
+        want = np.exp((np.asarray(x) + 1) * 0.5)
+        np.testing.assert_allclose(out, want, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ConcatSplit→ArraySplit handoff (fresh-output producers)
+# ---------------------------------------------------------------------------
+
+
+_REPEAT2 = None
+
+
+def _make_repeat2():
+    # One AnnotatedFn for the whole module: the plan cache matches entries
+    # on function identity, so a fresh wrapper per run would always miss.
+    global _REPEAT2
+    if _REPEAT2 is None:
+        from repro.core import splittable
+
+        @splittable(x=st.Along(0), ret=st.Concat("rep2", 0))
+        def repeat2(x):
+            return jnp.repeat(x, 2)
+
+        _REPEAT2 = repeat2
+    return _REPEAT2
+
+
+class TestConcatHandoff:
+    N, BATCH = 10_000, 2048
+
+    def _run(self, handoff):
+        repeat2 = _make_repeat2()
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        with mozart.session(executor="fused", batch_elements=self.BATCH,
+                            handoff=handoff) as ctx:
+            y = repeat2(x)               # fresh output: ConcatSplit
+            out = np.asarray(anp.multiply(anp.add(y, 1.0), 0.5))
+        return out, ctx
+
+    def test_concat_producer_hands_off_to_array_consumer(self):
+        plan_cache.clear()
+        self._run(True); self._run(True)
+        stage_exec.reset_materialized()
+        out, ctx = self._run(True)
+        assert ctx.stats["stream_converted"] == 1
+        assert ctx.stats["stream_ingests"] == 1
+        assert ctx.stats["planner_calls"] == 0
+        assert stage_exec.bytes_interior() == 0
+        off, _ = self._run(False)
+        np.testing.assert_allclose(out, off, rtol=1e-6)
+        want = (np.repeat(np.asarray(x := np.linspace(0., 1., self.N,
+                                                      dtype=np.float32)), 2)
+                + 1) * 0.5
+        np.testing.assert_allclose(out, want, rtol=2e-5)
+
+    def test_conversion_recorded_in_plan_entry(self):
+        plan_cache.clear()
+        self._run(True)
+        recs = [ho for e in plan_cache.entries()
+                if e.handoff
+                for ho in e.handoff.values() if ho.convert_in]
+        assert recs, "ConcatSplit→ArraySplit conversion not recorded"
+        ho = recs[0]
+        assert ho.convert_in <= ho.stream_in
+        # round-trips through the persisted JSON form
+        assert (type(ho).from_json(ho.to_json()).convert_in == ho.convert_in)
+
+    def test_protocol_rules(self):
+        c = st.ConcatSplit("t", 0)
+        assert c.can_handoff(st.ArraySplit((64,), 0))
+        assert not c.can_handoff(st.ArraySplit((8, 8), 1))   # axis mismatch
+        assert not c.can_handoff(st.ArraySplit((), 0))       # scalar geometry
+        assert not c.can_handoff(st.ConcatSplit("t", 0))     # not splittable
+        assert not st.ConcatSplit("t", 1).can_handoff(st.ArraySplit((64,), 0))
+
+    def test_total_mismatch_materializes(self):
+        """Pieces that do not tile the consumer's geometry fall back to the
+        merge — adapt_stream returns None, never a wrong grid."""
+        t = st.ConcatSplit("t", 0)
+        chunks = [jnp.ones((3,), jnp.float32), jnp.ones((4,), jnp.float32)]
+        s = ChunkStream(chunks, [(0, 2), (2, 4)], t,
+                        jax.ShapeDtypeStruct((7,), jnp.float32))
+        from repro.core.stage_exec import adapt_stream
+        good = adapt_stream(s, st.ArraySplit((7,), 0))
+        assert good is not None and good.ranges == [(0, 3), (3, 7)]
+        assert adapt_stream(s, st.ArraySplit((8,), 0)) is None
+
+    def test_empty_concat_pieces_stream(self):
+        """Zero-size fresh pieces (filter-to-nothing) hand off as an empty
+        grid instead of crashing merge([]) — the zero-chunk hardening."""
+        from repro.core import splittable
+
+        @splittable(x=st.Along(0), ret=st.Concat("nil", 0))
+        def drop_all(x):
+            return x[:0]
+
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        plan_cache.clear()
+        with mozart.session(executor="fused", batch_elements=self.BATCH) as ctx:
+            y = drop_all(x)
+            out = np.asarray(anp.add(y, 1.0))
+        assert out.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Zero-chunk / empty-stream hardening (regression: PR 4 stream paths)
+# ---------------------------------------------------------------------------
+
+
+class TestZeroChunkStreams:
+    AVAL = jax.ShapeDtypeStruct((0,), jnp.float32)
+
+    def test_materialize_zero_chunk_stream(self):
+        s = ChunkStream([], [(0, 0)], st.ArraySplit((0,), 0), self.AVAL)
+        out = s.materialize()
+        assert out.shape == (0,) and out.dtype == jnp.float32
+
+    def test_chunk_accessor_zero_chunk_stream(self):
+        s = ChunkStream([], [(0, 0)], st.ArraySplit((0,), 0), self.AVAL)
+        assert s.chunk(0).shape == (0,)
+
+    def test_rechunk_degenerate_grids(self):
+        """Zero-size destination ranges carve empty slices instead of
+        crashing merge([])."""
+        t = st.ArraySplit((0,), 0)
+        chunks = [jnp.zeros((0,), jnp.float32)] * 3
+        out, copied = t.rechunk(chunks, [(0, 0)] * 3, [(0, 0)])
+        assert len(out) == 1 and out[0].shape == (0,)
+        assert copied == 0
+
+    @pytest.mark.parametrize("executor",
+                             [e for e in sorted(available_executors())
+                              if e != "sharded"])
+    def test_empty_chain_streams_safely(self, executor):
+        """n == 0 through a multi-evaluation chain with handoff on: every
+        executor's stream ingest/materialize path must survive the
+        degenerate single-zero-size-chunk grid."""
+        plan_cache.clear()
+        with mozart.session(executor=executor, batch_elements=64) as ctx:
+            out = np.asarray(_eval_chain(jnp.zeros((0,), jnp.float32)))
+        assert out.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Donation: plan-time veto + the pinned runtime backstop
+# ---------------------------------------------------------------------------
+
+
+class TestDonationVeto:
+    def test_observable_producer_vetoed_at_plan_time(self):
+        """An in-plan producer whose Future is alive at analysis time never
+        becomes a donation point: no donated chunks AND no defensive copies
+        (before the veto, the runtime burned one copy per chunk)."""
+        n, b = 20_000, 4096
+        x = jnp.linspace(0., 1., n, dtype=jnp.float32)
+        plan_cache.clear()
+
+        def once():
+            with mozart.session(executor="fused", batch_elements=b,
+                                pipeline=False) as ctx:
+                a = anp.add(x, 1.0)          # own stage (pipeline=False)
+                out = np.asarray(anp.multiply(a, 0.5))  # a's Future held
+                a_val = np.asarray(a)        # observed after consumption
+            return out, a_val, ctx
+
+        for _ in range(3):
+            out, a_val, ctx = once()
+        assert ctx.stats.get("donated_chunks", 0) == 0
+        assert ctx.stats.get("donation_copies", 0) == 0
+        np.testing.assert_allclose(a_val, np.asarray(x) + 1, rtol=1e-6)
+        np.testing.assert_allclose(out, (np.asarray(x) + 1) * 0.5, rtol=1e-6)
+
+    def test_dead_producer_still_donates(self):
+        """The veto is scoped: a producer with no live Future at analysis
+        time keeps its donation point."""
+        n, b = 20_000, 4096
+        x = jnp.linspace(0., 1., n, dtype=jnp.float32)
+        plan_cache.clear()
+
+        def once():
+            with mozart.session(executor="fused", batch_elements=b,
+                                pipeline=False) as ctx:
+                out = np.asarray(anp.multiply(anp.add(x, 1.0), 0.5))
+            return out, ctx
+
+        once(); once()
+        out, ctx = once()
+        assert ctx.stats.get("donated_chunks", 0) > 0
+        np.testing.assert_allclose(out, (np.asarray(x) + 1) * 0.5, rtol=1e-6)
+
+    def test_runtime_backstop_message_pinned(self):
+        """The donated-stream late-merge raise stays as the backstop and its
+        message is pinned."""
+        t = st.ArraySplit((8,), 0)
+        s = ChunkStream([jnp.arange(4, dtype=jnp.float32),
+                         jnp.arange(4, dtype=jnp.float32)],
+                        [(0, 4), (4, 8)], t,
+                        jax.ShapeDtypeStruct((8,), jnp.float32))
+        s.consumed = True
+        with pytest.raises(RuntimeError,
+                           match="donated to a driver and can no longer be "
+                                 "merged"):
+            s.materialize()
+        assert "handoff analysis bug" in stage_exec.DONATED_MERGE_ERROR
+
+
+# ---------------------------------------------------------------------------
+# Interior vs terminal accounting
+# ---------------------------------------------------------------------------
+
+
+class TestByteAccounting:
+    N, BATCH = 30_000, 4096
+
+    def test_observed_terminal_output_not_interior(self):
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        plan_cache.clear()
+
+        def once():
+            with mozart.session(executor="fused",
+                                batch_elements=self.BATCH) as ctx:
+                out = np.asarray(_eval_chain(x))
+            return out, ctx
+
+        once(); once()
+        stage_exec.reset_materialized()
+        once()
+        assert stage_exec.bytes_interior() == 0
+        assert stage_exec.bytes_terminal() == self.N * 4
+        # total stays the back-compat sum
+        assert stage_exec.bytes_materialized() == self.N * 4
+
+    def test_merge_everything_is_interior(self):
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        plan_cache.clear()
+        with mozart.session(executor="fused", batch_elements=self.BATCH,
+                            handoff=False):
+            stage_exec.reset_materialized()
+            np.asarray(_eval_chain(x))
+            assert stage_exec.bytes_terminal() == 0
+            assert stage_exec.bytes_interior() >= 5 * self.N * 4
+
+    def test_reset_clears_counters_and_events(self):
+        stage_exec.note_materialized(128, kind="merge", where="test")
+        stage_exec.note_materialized(64, terminal=True, kind="materialize",
+                                     where="test")
+        assert stage_exec.bytes_materialized() >= 192
+        assert stage_exec.materialize_events()
+        stage_exec.reset_materialized()
+        assert stage_exec.bytes_materialized() == 0
+        assert stage_exec.bytes_interior() == 0
+        assert stage_exec.bytes_terminal() == 0
+        assert not stage_exec.materialize_events()
+
+    def test_event_trail_names_the_boundary(self):
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        plan_cache.clear()
+        with mozart.session(executor="fused", batch_elements=self.BATCH,
+                            handoff=False):
+            stage_exec.reset_materialized()
+            np.asarray(_eval_chain(x))
+        kinds = {k.split(":")[1] for k, _, _ in stage_exec.materialize_events()}
+        assert "merge" in kinds           # producer-side merges
+        assert "resplit" in kinds         # consumer-side re-splits
+        assert all(w for _, w, _ in stage_exec.materialize_events())
+
+
+# ---------------------------------------------------------------------------
+# rechunk property test (hypothesis-optional)
+# ---------------------------------------------------------------------------
+
+
+from repro.testing import given, settings, hst  # noqa: E402
+
+
+class TestRechunkProperty:
+    @given(n=hst.integers(1, 96), src_b=hst.integers(1, 96),
+           dst_b=hst.integers(1, 96))
+    @settings(max_examples=60, deadline=None)
+    def test_any_grid_pair_at_most_one_copy(self, n, src_b, dst_b):
+        """Misaligned grids (src not an integer multiple of dst or vice
+        versa) still convert with at most ONE copy of the data; exactly
+        aligned grids pass through by reference with zero copies."""
+        t = st.ArraySplit((n,), 0)
+        x = jnp.arange(n, dtype=jnp.float32)
+        src, dst = _ranges(n, src_b), _ranges(n, dst_b)
+        chunks = [t.split(x, s, e) for s, e in src]
+        out, copied = t.rechunk(chunks, src, dst)
+        assert len(out) == len(dst)
+        assert copied <= int(x.nbytes)      # merge+re-split always pays two
+        if src == dst:
+            assert copied == 0
+        multiple = (src_b % dst_b == 0 or dst_b % src_b == 0)
+        if not multiple and src != dst and n > max(src_b, dst_b):
+            # genuinely misaligned grids: some copying is unavoidable
+            assert copied > 0
+        np.testing.assert_array_equal(np.asarray(t.merge(out)), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Persistence: ConcatSplit conversions replay; v2 files migrate
+# ---------------------------------------------------------------------------
+
+_CONCAT_PRELUDE = """
+import json, sys
+import jax.numpy as jnp
+import numpy as np
+from repro.core import mozart, plan_cache, stage_exec, splittable
+from repro.core import annotated_numpy as anp
+from repro.core import split_types as st
+
+@splittable(x=st.Along(0), ret=st.Concat("rep2", 0))
+def repeat2(x):
+    return jnp.repeat(x, 2)
+
+x = jnp.linspace(0.0, 1.0, 10_000, dtype=jnp.float32)
+
+def run():
+    with mozart.session(executor="fused", batch_elements=2048) as ctx:
+        y = repeat2(x)
+        out = np.asarray(anp.multiply(anp.add(y, 1.0), 0.5))
+    return out, ctx
+"""
+
+_CONCAT_A = _CONCAT_PRELUDE + """
+run(); run()
+out, ctx = run()
+print(json.dumps({"sum": float(out.sum()),
+                  "converted": ctx.stats["stream_converted"],
+                  "ingests": ctx.stats["stream_ingests"]}))
+"""
+
+_CONCAT_B = _CONCAT_PRELUDE + """
+i0 = stage_exec.bytes_interior()
+out, ctx = run()
+recorded = [sorted(ho.convert_in)
+            for e in plan_cache.entries() if e.handoff
+            for ho in e.handoff.values() if ho.convert_in]
+print(json.dumps({"sum": float(out.sum()),
+                  "converted": ctx.stats["stream_converted"],
+                  "planner_calls": ctx.stats["planner_calls"],
+                  "interior": stage_exec.bytes_interior() - i0,
+                  "recorded": recorded,
+                  "pc": dict(plan_cache.stats)}))
+"""
+
+
+def test_concat_handoff_replays_from_persisted_cache(tmp_path):
+    """Process A records a ConcatSplit→ArraySplit conversion in its
+    persisted plans; a FRESH process B replays it — zero planner calls
+    (zero analysis), conversion applied from call one, interior bytes 0."""
+    path = str(tmp_path / "plans.json")
+    a = _run_subprocess(_CONCAT_A, path)
+    assert a["converted"] == 1 and a["ingests"] == 1
+    assert os.path.exists(path)
+
+    b = _run_subprocess(_CONCAT_B, path)
+    assert b["pc"].get("persist_loaded", 0) >= 1
+    assert b["planner_calls"] == 0
+    assert b["converted"] == 1
+    assert b["interior"] == 0
+    assert b["recorded"], "convert_in not rehydrated from disk"
+    assert np.isclose(a["sum"], b["sum"], rtol=1e-6)
+
+
+def test_v2_plan_file_migrates_forward(tmp_path):
+    """A schema-v2 cache file (pre ``convert_in``) loads under v3: handoff
+    records default the new field to empty instead of rejecting the file."""
+    path = str(tmp_path / "plans.json")
+    plan_cache.clear()
+    x = jnp.linspace(0., 1., 30_000, dtype=jnp.float32)
+    with mozart.session(executor="fused", batch_elements=4096):
+        np.asarray(_eval_chain(x))
+    assert plan_cache.save(path) >= 1
+
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema"] == plan_cache.SCHEMA_VERSION
+    payload["schema"] = 2                 # rewrite as a v2-era file
+    for e in payload["entries"]:
+        if e.get("handoff"):
+            for ho in e["handoff"].values():
+                ho.pop("convert_in", None)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+    plan_cache.clear()
+    loaded = plan_cache.load(path)
+    assert loaded >= 1
+    assert plan_cache.stats.get("persist_migrated_v2", 0) == 1
+    for e in plan_cache.entries():
+        if e.handoff:
+            for ho in e.handoff.values():
+                assert ho.convert_in == frozenset()
+
+    # and the migrated plans actually replay
+    with mozart.session(executor="fused", batch_elements=4096) as ctx:
+        out = np.asarray(_eval_chain(x))
+    assert ctx.stats["planner_calls"] == 0
+    assert ctx.stats["streamed_outputs"] == 3
+    want = np.asarray(x)
+    for _ in range(3):
+        want = (want + 1.0) * 0.5
+    np.testing.assert_allclose(out, want, rtol=2e-5)
+
+
+def test_unsupported_schema_still_rejected(tmp_path):
+    path = str(tmp_path / "plans.json")
+    plan_cache.clear()
+    x = jnp.linspace(0., 1., 10_000, dtype=jnp.float32)
+    with mozart.session(executor="fused", batch_elements=4096):
+        np.asarray(_eval_chain(x, evals=1))
+    assert plan_cache.save(path) >= 1
+    with open(path) as f:
+        payload = json.load(f)
+    payload["schema"] = 1                 # pre-handoff layouts never migrate
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    plan_cache.clear()
+    before = plan_cache.stats.get("persist_rejected_schema", 0)
+    assert plan_cache.load(path) == 0
+    assert plan_cache.stats.get("persist_rejected_schema", 0) == before + 1
