@@ -136,9 +136,11 @@ def smoke() -> int:
     # ``fused`` iterates the producer's chunk list, ``scan`` stacks streams
     # into its carry layout, ``pallas`` stacks them into the padded launch
     # buffer.  TERMINAL bytes (the observed output's lazy merge) are
-    # reported separately and never gate.  Counters reset per row, and a
-    # violation prints a diff-style message naming the offending boundary
-    # from the stage_exec materialization event trail.
+    # reported separately and never gate.  Each row reads the SESSION's
+    # scoped counters (``ctx.counters``) — never the process-global
+    # aggregate — so concurrent work in the same process cannot pollute
+    # the gate; a violation prints a diff-style message naming the
+    # offending boundary from the session's materialization event trail.
     from repro.core import stage_exec
 
     n_h, b_h, evals = 400_000, 65_536, 3
@@ -167,11 +169,13 @@ def smoke() -> int:
         plan_cache.clear()
         handoff_chain(executor, handoff)        # plan (miss)
         handoff_chain(executor, handoff)        # warm the cache + executables
-        stage_exec.reset_materialized()         # this row's counters only
         out, ctx = handoff_chain(executor, handoff)
-        interior = stage_exec.bytes_interior()
-        terminal = stage_exec.bytes_terminal()
-        events = stage_exec.materialize_events()
+        # Scoped view: each chain is one fresh session, so its counters hold
+        # exactly this row's boundary traffic — nothing to reset, and other
+        # work in the process cannot leak in.
+        interior = ctx.counters.bytes_interior()
+        terminal = ctx.counters.bytes_terminal()
+        events = ctx.counters.materialize_events()
         samples = []
         for _ in range(5):
             t0 = _time.perf_counter()
@@ -234,6 +238,142 @@ def smoke() -> int:
                })
         if handoff_failures:
             failures.append(f"handoff/{h_exec}:{handoff_failures}")
+
+    # -- sharded handoff: the mesh executor streams in both directions -----
+    # The parent process is single-device, so this row runs in a subprocess
+    # under the same forced-host-device mesh CI's sharded tests use.  Gates:
+    # interior bytes exactly 0 on a 2-device mesh, NO gather event on the
+    # sharded→sharded boundary (the device-resident global array must pass
+    # through — an ``interior:gather`` in the event trail means an
+    # all-gather happened), the row actually exercised sharded streaming
+    # (passthrough > 0), and the warm run planned nothing and retraced
+    # nothing (the session-scoped trace counter).
+    import json as _json
+    import subprocess as _subprocess
+
+    _SHARDED_ROW = r'''
+import warnings; warnings.filterwarnings("ignore")
+import json, sys, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import mozart
+from repro.core import annotated_numpy as anp
+
+handoff = sys.argv[1] == "on"
+n, b, evals = 400_000, 100_000, 3
+mesh = jax.make_mesh((2,), ("data",))
+x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+
+def chain():
+    with mozart.session(executor="sharded", mesh=mesh, batch_elements=b,
+                        handoff=handoff) as ctx:
+        cur = x
+        for _ in range(evals):
+            cur = anp.multiply(anp.add(cur, 1.0), 0.5)
+            mozart.evaluate()            # sharded->sharded stage boundary
+        out = np.asarray(cur)
+    return out, ctx
+
+chain()                                  # plan (miss)
+chain()                                  # warm cache + pinned executables
+out, ctx = chain()                       # measured warm run (scoped view)
+samples = []
+for _ in range(5):
+    t0 = time.perf_counter(); chain(); samples.append(time.perf_counter() - t0)
+want = np.linspace(0.0, 1.0, n, dtype=np.float32)
+for _ in range(evals):
+    want = (want + 1.0) * 0.5
+print(json.dumps({
+    "parity": bool(np.allclose(out, want, rtol=2e-5)),
+    "devices": jax.device_count(),
+    "us": sorted(samples)[len(samples) // 2] * 1e6,
+    "interior": int(ctx.counters.bytes_interior()),
+    "terminal": int(ctx.counters.bytes_terminal()),
+    "events": ctx.counters.materialize_events(),
+    "traces": int(ctx.counters.trace_count()),
+    "planner_calls": int(ctx.stats.get("planner_calls", 0)),
+    "streamed": int(ctx.stats.get("streamed_outputs", 0)),
+    "passthrough": int(ctx.stats.get("shard_passthrough", 0)),
+    "ingests": int(ctx.stats.get("shard_ingests", 0)),
+    "converted": int(ctx.stats.get("stream_converted", 0)),
+    "donated": int(ctx.stats.get("donated_chunks", 0)),
+    "donation_copies": int(ctx.stats.get("donation_copies", 0)),
+    "rechunks": int(ctx.stats.get("handoff_rechunks", 0)),
+}))
+'''
+
+    def sharded_row(handoff: bool) -> dict | None:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (env.get("PYTHONPATH"),
+                        os.path.join(os.path.dirname(
+                            os.path.dirname(os.path.abspath(__file__))), "src"))
+            if p)
+        proc = _subprocess.run(
+            [sys.executable, "-c", _SHARDED_ROW, "on" if handoff else "off"],
+            env=env, capture_output=True, text=True, timeout=900)
+        if proc.returncode != 0:
+            print(f"smoke/handoff/sharded subprocess failed:\n{proc.stderr}",
+                  file=sys.stderr)
+            return None
+        return _json.loads(proc.stdout.strip().splitlines()[-1])
+
+    on_row = sharded_row(True)
+    off_row = sharded_row(False)
+    sharded_failures = []
+    if on_row is None or off_row is None:
+        sharded_failures.append("subprocess")
+        record("smoke/handoff/sharded", 0.0, "SUBPROCESS_FAILED")
+    else:
+        if not (on_row["parity"] and off_row["parity"]):
+            sharded_failures.append("parity")
+        if on_row["devices"] < 2:
+            sharded_failures.append("single_device")
+        if on_row["interior"] != 0:
+            lines = [f"  - {kind[len('interior:'):]} at {where}: {nb} bytes"
+                     for kind, where, nb in on_row["events"]
+                     if kind.startswith("interior:")]
+            print("smoke/handoff/sharded: expected 0 interior boundary "
+                  f"bytes, got {on_row['interior']}:\n" + "\n".join(lines),
+                  file=sys.stderr)
+            sharded_failures.append(f"interior_bytes={on_row['interior']}")
+        # No all-gather on the sharded→sharded edge: asserted via the event
+        # trail, which names every gather the warm run performed.
+        gathers = [e for e in on_row["events"]
+                   if e[0].startswith("interior:gather")]
+        if gathers:
+            sharded_failures.append(f"all_gather={gathers}")
+        if on_row["streamed"] == 0 or on_row["passthrough"] == 0:
+            sharded_failures.append("no_streaming")
+        if on_row["planner_calls"] != 0:
+            sharded_failures.append("warm_planned")
+        if on_row["traces"] != 0:
+            sharded_failures.append("warm_retraced")
+        record("smoke/handoff/sharded", on_row["us"],
+               f"merge_path_us={off_row['us']:.0f};"
+               f"ratio={on_row['us'] / max(off_row['us'], 1e-9):.2f};"
+               f"interior={on_row['interior']};terminal={on_row['terminal']};"
+               f"off_interior={off_row['interior']};"
+               f"off_terminal={off_row['terminal']};"
+               f"streamed={on_row['streamed']};"
+               f"passthrough={on_row['passthrough']};"
+               f"ingests={on_row['ingests']};"
+               f"{'ok' if not sharded_failures else 'REGRESSED'}",
+               extra={
+                   "interior_bytes": int(on_row["interior"]),
+                   "terminal_bytes": int(on_row["terminal"]),
+                   "off_interior_bytes": int(off_row["interior"]),
+                   "off_terminal_bytes": int(off_row["terminal"]),
+                   "streamed_outputs": int(on_row["streamed"]),
+                   "stream_ingests": int(on_row["ingests"]),
+                   "stream_converted": int(on_row["converted"]),
+                   "donated_chunks": int(on_row["donated"]),
+                   "donation_copies": int(on_row["donation_copies"]),
+                   "handoff_rechunks": int(on_row["rechunks"]),
+                   "shard_passthrough": int(on_row["passthrough"]),
+               })
+    if sharded_failures:
+        failures.append(f"handoff/sharded:{sharded_failures}")
 
     # -- AOT pipeline: warm calls do ZERO planner calls and ZERO retraces ---
     plan_cache.clear()

@@ -194,8 +194,10 @@ class AutoExecutor(StageExecutor):
         # Streams pass through for scoring (features read types + avals, not
         # values); the delegate's own run() re-resolves with its capability
         # and owns the ingest/materialize stats (tally=False here).
+        # shard_ok too: a sharded-form stream must not be gathered just to
+        # score the stage — the delegate decides whether to gather it.
         concrete = resolve_stage_inputs(stage, graph, ctx, streams_ok=True,
-                                        tally=False)
+                                        tally=False, shard_ok=True)
         entry = getattr(ctx, "_plan_entry", None)
         name = entry.chosen_exec.get(stage.id) if entry is not None else None
         if name is not None and self._aged_out(stage, concrete, ctx, entry):

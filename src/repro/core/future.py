@@ -74,11 +74,13 @@ class Future:
         if not self._node.done:
             self._ctx.evaluate()
         res = self._node.result
-        from repro.core.stage_exec import ChunkStream
+        from repro.core.stage_exec import ChunkStream, counter_scope
         if isinstance(res, ChunkStream):
             # Observation of a pipeline output: accounted as TERMINAL bytes
-            # (inherent to observing), never as interior boundary traffic.
-            res = res.materialize(terminal=True)
+            # (inherent to observing), never as interior boundary traffic —
+            # attributed to the owning context's scoped counters.
+            with counter_scope(getattr(self._ctx, "counters", None)):
+                res = res.materialize(terminal=True)
             self._node.result = res
         return res
 

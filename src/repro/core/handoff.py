@@ -71,20 +71,37 @@ class StageHandoff:
     #: (re-checked against ``future_alive`` at run time).
     last_use: frozenset
     #: input positions PERMITTED to convert a producer's stream onto the
-    #: consumer's grid (the ConcatSplit→ArraySplit rule): in-plan edges
-    #: whose producer type is ConcatSplit, plus cross-evaluation ingests
-    #: into an ArraySplit consumer (whose producer type is unknowable
-    #: here).  ``stage_exec.resolve_stage_inputs`` converts ONLY at these
+    #: consumer's grid (the ConcatSplit→{ArraySplit,PytreeSplit} rules):
+    #: in-plan edges whose producer type is ConcatSplit, plus
+    #: cross-evaluation ingests into an ArraySplit/PytreeSplit consumer
+    #: (whose producer type is unknowable here).
+    #: ``stage_exec.resolve_stage_inputs`` converts ONLY at these
     #: positions — the decision replays with zero analysis (persisted
     #: schema v3; v2 files migrate with this empty, correct because the
     #: rule postdates them and v2-era plans never streamed fresh outputs).
     convert_in: frozenset = frozenset()
+    #: input positions permitted to ingest a SHARDED-form stream (a
+    #: device-resident global array) without gathering it — recorded only
+    #: when the plan's executor can place per-shard buffers ("sharded" /
+    #: "auto"); the runtime re-checks the concrete mesh and Sharding per
+    #: call.  Persisted schema v4; v2/v3 files migrate with this empty
+    #: (correct: sharded streams postdate them, so nothing ever produced
+    #: one under those plans).
+    shard_in: frozenset = frozenset()
+    #: input positions that WOULD be ``last_use`` donation points but were
+    #: vetoed at plan time because the producer's Future was alive during
+    #: analysis.  Recorded so ``resolve_decisions`` can detect when the
+    #: veto has gone stale (the producer stopped being observable on later
+    #: calls) and re-analyze through the aging path.  Persisted schema v4.
+    vetoed: frozenset = frozenset()
 
     def to_json(self) -> dict:
         return {"stream_out": sorted(self.stream_out),
                 "stream_in": sorted(self.stream_in),
                 "last_use": sorted(self.last_use),
-                "convert_in": sorted(self.convert_in)}
+                "convert_in": sorted(self.convert_in),
+                "shard_in": sorted(self.shard_in),
+                "vetoed": sorted(self.vetoed)}
 
     @classmethod
     def from_json(cls, d: dict) -> "StageHandoff":
@@ -92,7 +109,49 @@ class StageHandoff:
                    stream_in=frozenset(int(p) for p in d["stream_in"]),
                    last_use=frozenset(int(p) for p in d["last_use"]),
                    convert_in=frozenset(
-                       int(p) for p in d.get("convert_in", ())))
+                       int(p) for p in d.get("convert_in", ())),
+                   shard_in=frozenset(
+                       int(p) for p in d.get("shard_in", ())),
+                   vetoed=frozenset(
+                       int(p) for p in d.get("vetoed", ())))
+
+
+#: consecutive stale observations before a recorded handoff re-analyzes —
+#: the same hysteresis discipline as ``cost_model.AutoExecutor``'s exec_meta
+#: aging: one flap is noise (liveness legitimately varies call-to-call), a
+#: persistent disagreement means the plan-time donation vetoes no longer
+#: describe this workload.
+STALE_THRESHOLD = 2
+
+
+def _liveness_stale(ho_map: dict[int, "StageHandoff"],
+                    stages: list[Stage]) -> bool:
+    """Whether recorded donation decisions disagree with CURRENT liveness.
+
+    Checks only in-plan producers: a ``vetoed`` position whose producer is
+    now dead is paying ``donation_copies`` it no longer needs to; a
+    ``last_use`` position whose producer is now alive ships defensive
+    copies through ``undonatable_stream_keys``.  Cross-evaluation edges are
+    skipped — their liveness varies per call by design and the runtime
+    copy path handles them (re-analyzing cannot improve them)."""
+    nodes = {n.id: n for s in stages for n in s.nodes}
+    by_id = {s.id: s for s in stages}
+    for sid, ho in ho_map.items():
+        s = by_id.get(sid)
+        if s is None or not (ho.vetoed or ho.last_use):
+            continue
+        for i, si in enumerate(s.inputs.values()):
+            v = si.value
+            if not isinstance(v, NodeRef):
+                continue
+            n = nodes.get(v.node_id)
+            if n is None:
+                continue                   # cross-evaluation edge
+            if i in ho.vetoed and not n.future_alive():
+                return True
+            if i in ho.last_use and n.future_alive():
+                return True
+    return False
 
 
 def resolve_decisions(ctx, entry, stages: list[Stage]):
@@ -102,12 +161,31 @@ def resolve_decisions(ctx, entry, stages: list[Stage]):
     fresh and caches the result onto the entry (rekeyed or pre-analysis
     entries), so warm calls never re-derive it.  None when the context has
     handoff disabled.  The single policy point for ``runtime.evaluate`` and
-    the Pipeline fast path."""
+    the Pipeline fast path.
+
+    Recorded donation decisions AGE: when current Future liveness disagrees
+    with the recorded ``vetoed``/``last_use`` sets for ``STALE_THRESHOLD``
+    consecutive calls, the plan re-analyzes against this call's liveness
+    (one retrace on the donate-set change, then warm again) — so a producer
+    that stops being observed after the first call does not pay defensive
+    ``donation_copies`` forever."""
     if not getattr(ctx, "handoff", True):
         return None
     if entry is not None and entry.handoff is not None:
+        if _liveness_stale(entry.handoff, stages):
+            entry.ho_age += 1
+            if entry.ho_age >= STALE_THRESHOLD:
+                with entry._lock:
+                    entry.handoff = analyze(
+                        stages, getattr(ctx, "executor", None))
+                    entry.ho_age = 0
+                ctx.stats["handoff_reanalyzed"] += 1
+                from repro.core import plan_cache as _pc
+                _pc._mark_dirty()
+        else:
+            entry.ho_age = 0
         return entry.handoff
-    ho = analyze(stages)
+    ho = analyze(stages, getattr(ctx, "executor", None))
     if entry is not None:
         entry.handoff = ho
     return ho
@@ -138,11 +216,16 @@ def _stage_count(stage: Stage) -> int | None:
     return None
 
 
-def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
+def analyze(stages: list[Stage],
+            executor: str | None = None) -> dict[int, StageHandoff]:
     """Per-stage handoff decisions for one planned evaluation.
 
     O(edges); runs once per plan-cache MISS (the result is stored on the
-    entry) or once per evaluation for uncacheable pipelines.
+    entry) or once per evaluation for uncacheable pipelines.  ``executor``
+    is the context's executor name: sharded-capable executors ("sharded",
+    "auto") additionally record which stream ingests may accept a
+    SHARDED-form stream (``StageHandoff.shard_in``) — the runtime
+    re-checks the concrete mesh and Sharding per call.
     """
     # node id -> (producer stage, position) over this plan
     producer: dict[int, tuple[Stage, int]] = {}
@@ -170,8 +253,7 @@ def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
                 # output ConcatSplit stream from the prior evaluation).
                 if isinstance(si.split_type, (st.ArraySplit, st.PytreeSplit)):
                     done_edges[(s.id, i)] = v.node_id
-                    if isinstance(si.split_type, st.ArraySplit):
-                        convert_edges.add((s.id, i))
+                    convert_edges.add((s.id, i))
                 continue
             ps, _pos = prod
             if ps.id == s.id:
@@ -204,20 +286,27 @@ def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
     # satisfied with defensive copies, and a late merge after a real
     # donation is the ``stage_exec.DONATED_MERGE_ERROR`` failure mode.  Veto
     # the donation point here so the conflict cannot arise; the runtime
-    # raise stays as the backstop.  Cross-evaluation (done-edge) producers
-    # are not vetoed: their liveness legitimately varies call-to-call and
-    # ``undonatable_stream_keys`` handles them with per-call copies.
+    # raise stays as the backstop.  Vetoed positions are RECORDED (not
+    # dropped) so ``resolve_decisions`` can age a veto out once the
+    # producer stops being observed.  Cross-evaluation (done-edge)
+    # producers are not vetoed: their liveness legitimately varies
+    # call-to-call and ``undonatable_stream_keys`` handles them with
+    # per-call copies.
     observable = {n.id for s in stages for n in s.nodes if n.future_alive()}
 
-    # Last pending consumer of each handed-off value (the donation point).
-    last_consumer: dict[int, tuple[int, int]] = {}
+    # Last pending consumer of each handed-off value (the donation point),
+    # plus whether that point is plan-time vetoed.
+    last_consumer: dict[int, tuple[int, int, bool]] = {}
     for (sid, i), nid in list(edges.items()) + list(done_edges.items()):
         if nid in streamed or (sid, i) in done_edges:
-            if nid in producer and nid in observable:
-                continue                           # plan-time veto
+            veto = nid in producer and nid in observable
             cur = last_consumer.get(nid)
             if cur is None or sid > cur[0]:
-                last_consumer[nid] = (sid, i)
+                last_consumer[nid] = (sid, i, veto)
+
+    # Sharded-capable executors may pass SHARDED-form streams through any
+    # permitted ingest; everything else must gather first (shard_in empty).
+    shard_exec = executor in ("sharded", "auto")
 
     out: dict[int, StageHandoff] = {}
     for s in stages:
@@ -228,12 +317,17 @@ def analyze(stages: list[Stage]) -> dict[int, StageHandoff]:
             if sid == s.id and nid in streamed
         ) | frozenset(i for (sid, i) in done_edges if sid == s.id)
         last_use = frozenset(
-            i for nid, (sid, i) in last_consumer.items() if sid == s.id)
+            i for nid, (sid, i, veto) in last_consumer.items()
+            if sid == s.id and not veto)
+        vetoed = frozenset(
+            i for nid, (sid, i, veto) in last_consumer.items()
+            if sid == s.id and veto)
         convert_in = frozenset(
             i for (sid, i) in convert_edges
             if sid == s.id and ((sid, i) in done_edges
                                 or edges.get((sid, i)) in streamed))
+        shard_in = stream_in if shard_exec else frozenset()
         if stream_out or stream_in:
             out[s.id] = StageHandoff(stream_out, stream_in, last_use,
-                                     convert_in)
+                                     convert_in, shard_in, vetoed)
     return out

@@ -297,12 +297,14 @@ class Pipeline:
                 if not isinstance(si.value, NodeRef) and id(si.value) in slot_of:
                     input_bindings.append((s_idx, key, slot_of[id(si.value)]))
         from repro.core.handoff import resolve_decisions
+        from repro.core.stage_exec import counter_scope
         ho = resolve_decisions(ctx, entry, stages)
         prev = (ctx._plan_entry, ctx._handoff)
         ctx._plan_entry, ctx._handoff = entry, ho
         try:
-            for s in stages:
-                get_executor(ctx.executor).run(s, ctx.graph, ctx)
+            with counter_scope(ctx.counters):
+                for s in stages:
+                    get_executor(ctx.executor).run(s, ctx.graph, ctx)
         finally:
             ctx._plan_entry, ctx._handoff = prev
         for n in pending:
@@ -321,7 +323,7 @@ class Pipeline:
         pattern of array leaves and equality of non-array leaves against the
         build-time example; any divergence returns ``_NO_FAST`` (full
         capture handles the call, the retained replay stays valid)."""
-        from repro.core.stage_exec import get_executor
+        from repro.core.stage_exec import counter_scope, get_executor
         f = self._fast
         leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
         if treedef != f.treedef or _alias_sig(leaves) != f.alias_sig:
@@ -348,8 +350,9 @@ class Pipeline:
         prev = (ctx._plan_entry, ctx._handoff)
         ctx._plan_entry, ctx._handoff = f.entry, f.handoff
         try:
-            for s in f.stages:
-                get_executor(ctx.executor).run(s, ctx.graph, ctx)
+            with counter_scope(ctx.counters):
+                for s in f.stages:
+                    get_executor(ctx.executor).run(s, ctx.graph, ctx)
         finally:
             ctx._plan_entry, ctx._handoff = prev
         ctx.stats["fast_path_calls"] += 1

@@ -66,13 +66,18 @@ _MAX_ENTRIES = 256
 #: serialized file format version; bump on any layout change.
 #: v2: handoff decisions, pallas block shapes, auto exec_meta shape buckets.
 #: v3: ``convert_in`` on handoff records (ConcatSplit→ArraySplit edges).
-SCHEMA_VERSION = 3
+#: v4: ``shard_in`` (sharded-form stream ingests) and ``vetoed`` (recorded
+#:     donation vetoes, for the staleness aging path) on handoff records.
+SCHEMA_VERSION = 4
 
 #: older schemas the loader can migrate forward in place.  v2 files differ
-#: from v3 only by the absence of ``convert_in`` on handoff records, which
-#: defaults to empty — correct for every pre-v3 plan (the rule did not
-#: exist, so no recorded decision could have used it).
-_MIGRATABLE_SCHEMAS = (2,)
+#: from v3/v4 only by the absence of ``convert_in`` on handoff records, and
+#: v3 from v4 by the absence of ``shard_in``/``vetoed`` — all of which
+#: default to empty, correct for every pre-bump plan (the rules did not
+#: exist, so no recorded decision could have used them; an empty ``vetoed``
+#: merely means the aging path has nothing to reconsider until the first
+#: re-analysis).
+_MIGRATABLE_SCHEMAS = (2, 3)
 
 #: process-global cache statistics (benchmarks report these).
 stats: collections.Counter = collections.Counter()
@@ -291,7 +296,11 @@ def rekey_config(old_prefix: tuple, new_prefix: tuple,
     chip or mesh changed (measured on different hardware).  Executor-
     SELECTION state (``chosen_exec``/``exec_timings``) never migrates — it
     is what the knob change invalidates.  Handoff decisions are structural
-    (a function of the templates) and always migrate.  The originals stay
+    (a function of the templates) but EXECUTOR-SCOPED since ``shard_in``
+    (sharded-form ingests are only safe under a shard-capable executor), so
+    they migrate only when the executor knob did not change; otherwise the
+    copy re-analyzes on first use (``handoff.resolve_decisions`` — zero
+    planner calls, O(edges)).  The originals stay
     in place: other sessions and compiled ``Pipeline``s may still be
     executing under the old configuration, and popping their entry (or its
     pinned executables) would break their zero-retrace guarantee mid-flight.
@@ -320,7 +329,9 @@ def rekey_config(old_prefix: tuple, new_prefix: tuple,
             copy = PlanEntry(
                 key=new_key, stage_templates=e.stage_templates,
                 fns=e.fns, fn_names=e.fn_names, loaded=e.loaded,
-                handoff=e.handoff)
+                handoff=(e.handoff
+                         if old_prefix[_P_EXEC] == new_prefix[_P_EXEC]
+                         else None))
             if same_hw:
                 with e._lock:
                     copy.tuned_batch = dict(e.tuned_batch)
@@ -373,6 +384,11 @@ class PlanEntry:
     #: cross-stage chunk handoff decisions (``handoff.analyze``), keyed by
     #: stage id; None = not analyzed (handoff disabled / pre-analysis entry).
     handoff: dict | None = None
+    #: consecutive calls whose Future liveness disagreed with the recorded
+    #: donation decisions; at ``handoff.STALE_THRESHOLD`` the decisions
+    #: re-analyze (``handoff.resolve_decisions``).  Runtime-only — never
+    #: persisted: a warm-started process re-observes staleness from zero.
+    ho_age: int = 0
     hits: int = 0
     loaded: bool = False                             # rehydrated from disk
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
@@ -590,7 +606,7 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
     ho = None
     if getattr(ctx, "handoff", True):
         from repro.core import handoff as _ho
-        ho = _ho.analyze(stages)
+        ho = _ho.analyze(stages, getattr(ctx, "executor", None))
     with _lock:
         existing = _entries.get(key)
         if existing is not None and existing.matches(pending):

@@ -24,7 +24,7 @@ from repro.core import split_types as st
 from repro.core.future import Future
 from repro.core.graph import DataflowGraph, NodeRef
 from repro.core.planner import plan
-from repro.core.stage_exec import get_executor
+from repro.core.stage_exec import BoundaryCounters, counter_scope, get_executor
 
 
 class MozartContext:
@@ -66,6 +66,9 @@ class MozartContext:
         self.plan_cache_path = plan_cache_path
         self.graph = DataflowGraph()
         self.stats: collections.Counter = collections.Counter()
+        #: this context's scoped trace/boundary-traffic view — concurrent
+        #: sessions never pollute each other's gates (stage_exec).
+        self.counters = BoundaryCounters()
         self._plan_entry = None                  # active plan_cache.PlanEntry
         self._handoff = None                     # active handoff decisions
         self._batch_override: int | None = None  # set by the auto-tuner only
@@ -130,8 +133,11 @@ class MozartContext:
         try:
             # Dispatch PER STAGE: under ``executor="auto"`` each stage is
             # scored and routed independently (cost_model.AutoExecutor).
-            for s in stages:
-                get_executor(self.executor).run(s, self.graph, self)
+            # Trace/boundary events attribute to THIS context's counters
+            # (plus the process-global aggregate) for the duration.
+            with counter_scope(self.counters):
+                for s in stages:
+                    get_executor(self.executor).run(s, self.graph, self)
         finally:
             self._plan_entry, self._handoff = prev_entry, prev_ho
         self.graph.prune()

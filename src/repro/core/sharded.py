@@ -19,17 +19,19 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import split_types as st
 from repro.core.planner import Stage
 from repro.core.stage_exec import (
+    ChunkStream,
     PedanticError,
     SAMPLE_CHUNKS,
     StageExecutor,
     batch_ranges,
     chain_plan,
     effective_elements,
+    note_materialized,
     note_trace,
     pinned_jit,
     register_executor,
@@ -44,10 +46,13 @@ class ShardedExecutor(StageExecutor):
     """Splits = mesh shards; per-device chunk loop handles the VMEM tier."""
 
     tunable = True           # tunes the INNER per-shard chunk loop
-    # shard_map partitions one whole array across the mesh; a host-side chunk
-    # list has no sharding story, so handed-off streams materialize on ingest
-    # (resolve_stage_inputs) before the shard_map launch.
-    stream_capable = False
+    # Handed-off streams enter WITHOUT a host-side merge: chunk lists are
+    # placed per shard (``_ingest_streams`` — device_put on the shard grid,
+    # ``rechunk`` at most once for disagreeing grids) and SHARDED-form
+    # streams from an earlier sharded stage pass the device-resident global
+    # array straight through (zero interior bytes, no all-gather).
+    stream_capable = True
+    shard_capable = True
 
     def execute(self, stage: Stage, concrete: dict[tuple, Any], ctx) -> None:
         execute_stage_sharded(stage, concrete, ctx, self)
@@ -149,6 +154,77 @@ def _build_sharded_driver(stage: Stage, mesh, axes, in_specs, out_specs,
     )
 
 
+def _ingest_streams(stage: Stage, concrete: dict[tuple, Any], ctx, mesh,
+                    axes, n: int, n_local: int,
+                    shard_ranges: list[tuple[int, int]], ho) -> None:
+    """Place handed-off ChunkStream inputs onto the mesh without merging.
+
+    Three paths, in order of preference: a SHARDED-form stream whose layout
+    already matches the target (same Sharding, shard-grid ranges) passes its
+    device-resident global array through untouched (zero interior bytes, no
+    all-gather); a chunk-list/stacked stream is regrouped onto the shard
+    grid (``rechunk`` at most once — counted) and ``device_put`` per shard
+    into one global array (device placement is inherent to sharding, like
+    splitting an external input, so it is NOT counted as interior traffic);
+    anything the shard grid cannot express (pytree leaves, zero-element
+    grids, foreign meshes) materializes — correct, merely the old cost,
+    counted honestly by ``ChunkStream.materialize``."""
+    for i, (key, si) in enumerate(stage.inputs.items()):
+        v = concrete.get(key)
+        if not isinstance(v, ChunkStream):
+            continue
+        t = si.split_type
+        ax = split_axis_of(t)
+        leaves = jax.tree_util.tree_leaves(v.aval)
+        if (ax is None or n_local <= 0 or len(leaves) != 1
+                or v.n != n or len(leaves[0].shape) <= ax):
+            concrete[key] = v.materialize()
+            ctx.stats["stream_materialized"] += 1
+            continue
+        global_shape = tuple(leaves[0].shape)
+        sharding = NamedSharding(mesh, _pspec_for(t, len(global_shape), axes))
+        if v.sharded is not None:
+            # Sharded-form stream: reuse the global array as-is when the
+            # plan permits it and the layout agrees; a foreign layout
+            # (different mesh/spec) gathers and re-splits through shard_map.
+            if (ho is not None and i in ho.shard_in
+                    and v.sharding == sharding
+                    and list(v.ranges) == shard_ranges):
+                concrete[key] = v.sharded
+                ctx.stats["shard_passthrough"] += 1
+            else:
+                concrete[key] = v.materialize()
+                ctx.stats["stream_materialized"] += 1
+            continue
+        chunks = list(v.chunks)
+        if list(v.ranges) != shard_ranges:
+            if len(chunks) != len(v.ranges):
+                concrete[key] = v.materialize()
+                ctx.stats["stream_materialized"] += 1
+                continue
+            chunks, copied = t.rechunk(chunks, list(v.ranges), shard_ranges)
+            if copied:
+                note_materialized(copied, kind="rechunk",
+                                  where=f"stage {stage.id} shard ingest "
+                                        f"input {i}")
+            ctx.stats["handoff_rechunks"] += 1
+        arrays = []
+        ok = True
+        for dev, idx in sharding.devices_indices_map(global_shape).items():
+            j = (idx[ax].start or 0) // n_local
+            if j >= len(chunks):
+                ok = False
+                break
+            arrays.append(jax.device_put(chunks[j], dev))
+        if not ok:
+            concrete[key] = v.materialize()
+            ctx.stats["stream_materialized"] += 1
+            continue
+        concrete[key] = jax.make_array_from_single_device_arrays(
+            global_shape, sharding, arrays)
+        ctx.stats["shard_ingests"] += 1
+
+
 def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx,
                           executor: StageExecutor | None = None) -> None:
     mesh = ctx.mesh
@@ -165,6 +241,12 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx,
             f"stage element count {n} not divisible by mesh data extent {n_shards}"
         )
     n_local = n // n_shards
+    shard_ranges = [(i * n_local, (i + 1) * n_local) for i in range(n_shards)]
+    plan_ho = getattr(ctx, "_handoff", None)
+    ho = plan_ho.get(stage.id) if plan_ho else None
+    concrete = dict(concrete)
+    _ingest_streams(stage, concrete, ctx, mesh, axes, n, n_local,
+                    shard_ranges, ho)
     from repro.core.stage_exec import get_executor
     executor = executor or get_executor("sharded")
     # Inner per-shard chunk size: explicit override > auto-tuner pin > §5.2.
@@ -222,7 +304,20 @@ def execute_stage_sharded(stage: Stage, concrete: dict[tuple, Any], ctx,
     for node in stage.nodes:
         p = stage.pos[node.id]
         if p in by_pos:
-            node.result = by_pos[p]
+            res = by_pos[p]
+            t = out_types_by_pos[p]
+            if (ho is not None and p in ho.stream_out and n_shards > 1
+                    and n_local > 0 and split_axis_of(t) is not None
+                    and getattr(res, "sharding", None) is not None):
+                # Emit a device-resident stream: the global array stays on
+                # the mesh carrying its Sharding, so a downstream sharded
+                # stage passes it through with zero interior bytes and no
+                # all-gather; any other consumer gathers lazily (counted).
+                node.result = ChunkStream.from_sharded(
+                    res, shard_ranges, t, node.out_aval, res.sharding)
+                ctx.stats["streamed_outputs"] += 1
+            else:
+                node.result = res
         node.done = True
 
 

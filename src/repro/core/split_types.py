@@ -291,13 +291,17 @@ class ConcatSplit(SplitType):
         # ConcatSplit→ArraySplit: fresh pieces merge by concatenation along
         # ``axis``; a consumer iterating the SAME axis of a concrete array
         # grid can ingest them directly — the pieces laid end to end ARE a
-        # chunk grid for it.  Piece sizes are unknowable before execution,
-        # so this is only *permission*: the runtime derives the concrete
-        # grid from the chunk buffers (``stage_exec.adapt_stream``) and
-        # falls back to a merge when they do not tile the consumer's
-        # geometry.
-        return (isinstance(consumer, ArraySplit) and bool(consumer.shape)
-                and consumer.axis == self.axis)
+        # chunk grid for it.  ConcatSplit→PytreeSplit: the same rule holds
+        # per LEAF — every leaf of every piece must span the same extent of
+        # the iteration axis, decided from the concrete buffers.  Piece
+        # sizes are unknowable before execution, so both are only
+        # *permission*: the runtime derives the concrete grid from the
+        # chunk buffers (``stage_exec.adapt_stream``) and falls back to a
+        # merge when they do not tile the consumer's geometry.
+        return ((isinstance(consumer, ArraySplit) and bool(consumer.shape)
+                 and consumer.axis == self.axis)
+                or (isinstance(consumer, PytreeSplit)
+                    and consumer.axis == self.axis))
 
 
 _unknown_uid = itertools.count()

@@ -26,6 +26,8 @@ paper's §5.2 fast-memory estimate (``hardware.mozart_batch_elements``).
 from __future__ import annotations
 
 import collections
+import contextlib
+import threading
 import time
 from typing import Any, Callable
 
@@ -153,92 +155,164 @@ def effective_elements(ctx, n: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Jit trace accounting
+# Trace + stage-boundary traffic accounting (scoped per execution context)
 # ---------------------------------------------------------------------------
-
-#: process-global count of jax traces of Mozart-built drivers and annotated
-#: library functions.  The driver bodies call ``note_trace()`` as a Python
-#: side effect: it runs while jax is *tracing*, never on a compiled-cache
-#: hit, so the delta across a call counts exactly the (re)traces that call
-#: caused.  The zero-retrace guarantee of warm ``mozart.pipeline`` calls is
-#: asserted against this counter (tests/test_pipeline.py, the smoke gate).
-_TRACES = 0
-
-
-def note_trace() -> None:
-    global _TRACES
-    _TRACES += 1
-
-
-def trace_count() -> int:
-    return _TRACES
-
-
-# ---------------------------------------------------------------------------
-# Stage-boundary traffic accounting
-# ---------------------------------------------------------------------------
-
-#: process-global count of bytes moved at stage BOUNDARIES, split into two
-#: components.  INTERIOR bytes are the round trips the handoff subsystem
-#: exists to remove: merges of multi-chunk partials (``finish_stage``,
-#: ``SplitType.rechunk`` copies, materialize-on-ingest by a stream-incapable
-#: executor) plus bytes re-sliced when a stage splits a value that another
-#: stage produced.  TERMINAL bytes are the lazy ``ChunkStream.materialize``
-#: of an *observed* pipeline output (``Future.value`` forcing the merge) —
-#: inherent to observation, not a boundary round trip, and therefore
-#: accounted separately so gates never pass or fail for the wrong reason.
-#: Splitting EXTERNAL pipeline inputs is counted by neither (that split is
-#: inherent to chunking).  Cross-stage chunk handoff drives the INTERIOR
-#: component to zero — asserted by ``benchmarks.run --smoke`` (the
-#: ``smoke/handoff`` rows) and tests/test_handoff.py.
-_BYTES_INTERIOR = 0
-_BYTES_TERMINAL = 0
 
 #: bounded trail of recent materialization events ``(kind, where, nbytes)``
 #: — enough context for the smoke gate to NAME the offending boundary in a
 #: diff-style message instead of failing on a bare byte count.
 _EVENT_LIMIT = 256
-_EVENTS: "collections.deque[tuple[str, str, int]]" = collections.deque(
-    maxlen=_EVENT_LIMIT)
+
+
+class BoundaryCounters:
+    """One scope's view of trace and stage-boundary traffic accounting.
+
+    TRACES count jax traces of Mozart-built drivers and annotated library
+    functions: the driver bodies call ``note_trace()`` as a Python side
+    effect — it runs while jax is *tracing*, never on a compiled-cache hit,
+    so the delta across a call counts exactly the (re)traces that call
+    caused.  The zero-retrace guarantee of warm ``mozart.pipeline`` calls is
+    asserted against this (tests/test_pipeline.py, the smoke gate).
+
+    BOUNDARY BYTES split into two components.  INTERIOR bytes are the round
+    trips the handoff subsystem exists to remove: merges of multi-chunk
+    partials (``finish_stage``, ``SplitType.rechunk`` copies,
+    materialize-on-ingest by a stream-incapable executor) plus bytes
+    re-sliced when a stage splits a value that another stage produced.
+    TERMINAL bytes are the lazy ``ChunkStream.materialize`` of an *observed*
+    pipeline output (``Future.value`` forcing the merge) — inherent to
+    observation, not a boundary round trip, and therefore accounted
+    separately so gates never pass or fail for the wrong reason.  Splitting
+    EXTERNAL pipeline inputs is counted by neither (that split is inherent
+    to chunking).
+
+    Every ``MozartContext`` owns one of these (``ctx.counters``): executor
+    dispatch and terminal observation run inside ``counter_scope``, so two
+    concurrent sessions/pipelines never pollute each other's gates.  The
+    module-level functions below (``trace_count``, ``bytes_interior``, …)
+    read the PROCESS-GLOBAL aggregate, which every event also updates —
+    single-session callers and cross-session totals keep working unchanged.
+    """
+
+    __slots__ = ("traces", "interior", "terminal", "events")
+
+    def __init__(self) -> None:
+        self.traces = 0
+        self.interior = 0
+        self.terminal = 0
+        self.events: "collections.deque[tuple[str, str, int]]" = \
+            collections.deque(maxlen=_EVENT_LIMIT)
+
+    # -- the same read surface as the module-level aggregate ----------------
+    def trace_count(self) -> int:
+        return self.traces
+
+    def bytes_interior(self) -> int:
+        return self.interior
+
+    def bytes_terminal(self) -> int:
+        return self.terminal
+
+    def bytes_materialized(self) -> int:
+        return self.interior + self.terminal
+
+    def materialize_events(self) -> list[tuple[str, str, int]]:
+        return list(self.events)
+
+    def reset(self) -> None:
+        self.traces = 0
+        self.interior = 0
+        self.terminal = 0
+        self.events.clear()
+
+
+#: the process-global aggregate: every note_* call lands here in addition to
+#: whatever scopes are active.
+_GLOBAL_COUNTERS = BoundaryCounters()
+
+_scope_tls = threading.local()
+
+
+def _scopes() -> list:
+    s = getattr(_scope_tls, "stack", None)
+    if s is None:
+        s = _scope_tls.stack = []
+    return s
+
+
+@contextlib.contextmanager
+def counter_scope(counters: "BoundaryCounters | None"):
+    """Attribute trace/boundary events to ``counters`` for the duration.
+
+    Scopes nest (a dynamic node re-entering ``evaluate`` keeps one
+    attribution, not two: re-entering with a scope already active is a
+    no-op), and distinct scopes stack — an outer session observing a value
+    while an inner session runs each see only their own events.  Thread
+    local; the process-global aggregate is always updated regardless."""
+    if counters is None:
+        yield
+        return
+    stack = _scopes()
+    if any(c is counters for c in stack):
+        yield                             # already attributed: no double count
+        return
+    stack.append(counters)
+    try:
+        yield
+    finally:
+        stack.remove(counters)
+
+
+def note_trace() -> None:
+    _GLOBAL_COUNTERS.traces += 1
+    for c in _scopes():
+        c.traces += 1
 
 
 def note_materialized(nbytes: int, terminal: bool = False,
                       kind: str = "merge", where: str = "") -> None:
-    global _BYTES_INTERIOR, _BYTES_TERMINAL
-    if terminal:
-        _BYTES_TERMINAL += int(nbytes)
-    else:
-        _BYTES_INTERIOR += int(nbytes)
-    _EVENTS.append((("terminal:" if terminal else "interior:") + kind,
-                    where, int(nbytes)))
+    nbytes = int(nbytes)
+    event = (("terminal:" if terminal else "interior:") + kind, where, nbytes)
+    for c in (_GLOBAL_COUNTERS, *_scopes()):
+        if terminal:
+            c.terminal += nbytes
+        else:
+            c.interior += nbytes
+        c.events.append(event)
+
+
+def trace_count() -> int:
+    """Process-global trace count (aggregate across every scope)."""
+    return _GLOBAL_COUNTERS.traces
 
 
 def bytes_materialized() -> int:
-    """Total boundary bytes (interior + terminal)."""
-    return _BYTES_INTERIOR + _BYTES_TERMINAL
+    """Total boundary bytes (interior + terminal), process-global."""
+    return _GLOBAL_COUNTERS.bytes_materialized()
 
 
 def bytes_interior() -> int:
-    """Interior-boundary bytes only (must be 0 on a fully handed-off chain)."""
-    return _BYTES_INTERIOR
+    """Interior-boundary bytes only (must be 0 on a fully handed-off chain).
+    Process-global; per-session gates read ``ctx.counters`` instead."""
+    return _GLOBAL_COUNTERS.interior
 
 
 def bytes_terminal() -> int:
-    """Bytes merged lazily at *observed* terminal outputs only."""
-    return _BYTES_TERMINAL
+    """Bytes merged lazily at *observed* terminal outputs only (global)."""
+    return _GLOBAL_COUNTERS.terminal
 
 
 def reset_materialized() -> None:
-    """Zero both byte counters and drop the event trail (smoke rows, tests)."""
-    global _BYTES_INTERIOR, _BYTES_TERMINAL
-    _BYTES_INTERIOR = 0
-    _BYTES_TERMINAL = 0
-    _EVENTS.clear()
+    """Zero the GLOBAL byte counters and drop its event trail (tests).
+    Scoped counters are unaffected — reset those via ``ctx.counters.reset()``."""
+    _GLOBAL_COUNTERS.interior = 0
+    _GLOBAL_COUNTERS.terminal = 0
+    _GLOBAL_COUNTERS.events.clear()
 
 
 def materialize_events() -> list[tuple[str, str, int]]:
-    """Recent ``(kind, where, nbytes)`` materialization events (bounded)."""
-    return list(_EVENTS)
+    """Recent ``(kind, where, nbytes)`` materialization events (global)."""
+    return _GLOBAL_COUNTERS.materialize_events()
 
 
 def _value_nbytes(v: Any) -> int:
@@ -271,17 +345,22 @@ class ChunkStream:
     ``Future`` forces it, or a stream-incapable executor resolves it);
     ``materialize`` caches the merged value so it is paid at most once.
 
-    Two storage forms share this class.  The chunk-LIST form holds one
+    Three storage forms share this class.  The chunk-LIST form holds one
     buffer per grid range (the chunk-loop executors' native output).  The
     STACKED form (``from_stacked``) holds the ``scan`` driver's carry layout
     directly — one ``(n_chunks, batch, …)`` leaf per pytree leaf plus an
     optional ragged ``tail`` chunk — so a scan→scan boundary hands the carry
     buffer over with zero slicing; a chunk-loop consumer derives the chunk
-    list lazily (paying, and counting, one slice pass).
+    list lazily (paying, and counting, one slice pass).  The SHARDED form
+    (``from_sharded``) holds the sharded driver's device-resident global
+    ``jax.Array`` plus its ``Sharding`` — one grid range per mesh shard — so
+    a sharded→sharded boundary passes the global array straight through
+    (zero interior bytes, no all-gather) and a chunk-loop consumer derives
+    per-shard chunk views from ``addressable_shards`` without copying.
     """
 
     __slots__ = ("_chunks", "ranges", "split_type", "aval", "_merged",
-                 "consumed", "stacked", "tail")
+                 "consumed", "stacked", "tail", "sharded", "sharding")
 
     def __init__(self, chunks: list | None, ranges: list,
                  split_type: st.SplitType, aval: Any):
@@ -293,6 +372,8 @@ class ChunkStream:
         self.consumed = False              # chunk buffers donated to a driver
         self.stacked = None                # (n_chunks, batch, …) carry layout
         self.tail = None                   # ragged tail chunk (chunk-shaped)
+        self.sharded = None                # device-resident global jax.Array
+        self.sharding = None               # its jax.sharding.Sharding
 
     @classmethod
     def from_stacked(cls, stacked: Any, tail: Any, ranges: list,
@@ -305,6 +386,24 @@ class ChunkStream:
         s = cls(None, ranges, split_type, aval)
         s.stacked = stacked
         s.tail = tail
+        return s
+
+    @classmethod
+    def from_sharded(cls, sharded: Any, ranges: list,
+                     split_type: st.SplitType, aval: Any,
+                     sharding: Any) -> "ChunkStream":
+        """Wrap the sharded driver's global array without gathering it.
+
+        ``sharded`` is a device-resident ``jax.Array`` laid out by
+        ``sharding`` along the stream's split axis; ``ranges`` is the
+        per-shard grid (one range per mesh shard).  A sharded consumer with
+        the same layout takes ``sharded`` as-is; any other consumer either
+        derives the per-shard chunk views (``.chunks``, zero-copy) or
+        materializes (counted ``interior:gather`` — the honest cost of
+        leaving the mesh)."""
+        s = cls(None, ranges, split_type, aval)
+        s.sharded = sharded
+        s.sharding = sharding
         return s
 
     # -- aval-like surface (batch sizing reads .shape/.dtype) ---------------
@@ -339,9 +438,17 @@ class ChunkStream:
 
         A stacked stream only pays this slice pass when a chunk-loop
         consumer actually iterates it; a scan consumer uses ``stacked``
-        directly and the derivation never happens."""
+        directly and the derivation never happens.  A sharded stream derives
+        zero-copy per-shard views (``addressable_shards`` in grid order) —
+        the buffers stay committed to their devices, so only shard-aware
+        consumers may iterate them."""
         if self._chunks is None:
             ax = self._axis()
+            if self.sharded is not None:
+                shards = sorted(self.sharded.addressable_shards,
+                                key=lambda sh: sh.index[ax].start or 0)
+                self._chunks = [sh.data for sh in shards]
+                return self._chunks
             k = len(self.ranges) - (1 if self.tail is not None else 0)
 
             def unstack_one(i):
@@ -362,6 +469,8 @@ class ChunkStream:
 
         Degenerate zero-element grids (``ranges == [(0, 0)]``) may carry no
         buffer at all; they resolve to an empty value built from the aval."""
+        if self._chunks is None and self.sharded is not None:
+            return self.chunks[i]          # zero-copy per-shard views
         if self._chunks is None and self.stacked is not None:
             k = len(self.ranges) - (1 if self.tail is not None else 0)
             if i >= k and self.tail is not None:
@@ -398,6 +507,16 @@ class ChunkStream:
         if self._merged is None:
             if self.consumed:
                 raise RuntimeError(DONATED_MERGE_ERROR)
+            if self.sharded is not None:
+                # The global array IS the merged value; returning it is free
+                # NOW, but a non-mesh consumer forces XLA to gather/reshard
+                # it on use — count that honestly as a "gather" event (the
+                # sharded→sharded smoke gate asserts no interior:gather).
+                self._merged = self.sharded
+                note_materialized(_value_nbytes(self._merged),
+                                  terminal=terminal, kind="gather",
+                                  where=f"stream n={self.n} {self.split_type}")
+                return self._merged
             if self.stacked is not None and self._chunks is None:
                 self._merged = self._merge_stacked()
             elif not self._chunks:
@@ -427,8 +546,12 @@ class ChunkStream:
         return self.split_type.merge([main, self.tail])
 
     def __repr__(self) -> str:
-        form = ("stacked" if self._chunks is None and self.stacked is not None
-                else f"{len(self._chunks or ())} chunks")
+        if self.sharded is not None:
+            form = f"sharded×{len(self.ranges)}"
+        elif self._chunks is None and self.stacked is not None:
+            form = "stacked"
+        else:
+            form = f"{len(self._chunks or ())} chunks"
         return f"ChunkStream({form}, n={self.n}, {self.split_type})"
 
 
@@ -610,30 +733,48 @@ def has_dynamic(stage: Stage) -> bool:
 
 def adapt_stream(v: "ChunkStream", consumer: st.SplitType) -> "ChunkStream | None":
     """Reinterpret a fresh-output (ConcatSplit) stream under the consumer's
-    concrete ArraySplit grid — the runtime half of the ConcatSplit→ArraySplit
-    handoff rule.
+    concrete grid — the runtime half of the ConcatSplit→{ArraySplit,
+    PytreeSplit} handoff rules.
 
     A ConcatSplit producer's piece sizes are unknowable at plan time, so the
     analysis only records that the conversion is *permitted*
     (``StageHandoff.convert_in``); here the sizes are read off the concrete
     chunk buffers, and when they tile the consumer's geometry exactly the
     SAME buffers are re-wrapped under the consumer's split type — zero
-    copies.  Returns None when the pieces do not form the consumer's grid
-    (multi-leaf chunks, axis out of range, total mismatch); the caller
-    materializes instead, which is always correct."""
-    if not (isinstance(v.split_type, st.ConcatSplit)
-            and isinstance(consumer, st.ArraySplit) and consumer.shape):
+    copies.  An ArraySplit consumer requires single-leaf chunks; a
+    PytreeSplit consumer accepts pytree chunks, deciding PER LEAF — every
+    leaf of a chunk must agree on its split-axis extent for the chunk to
+    contribute one grid range.  Returns None when the pieces do not form
+    the consumer's grid (axis out of range, leaves disagree, total
+    mismatch); the caller materializes instead, which is always correct."""
+    if not isinstance(v.split_type, st.ConcatSplit):
         return None
     if v._chunks is None:              # stacked ConcatSplit streams don't exist
         return None
-    ax = consumer.axis
-    sizes = []
-    for c in v._chunks:
-        leaves = jax.tree_util.tree_leaves(c)
-        if len(leaves) != 1 or len(getattr(leaves[0], "shape", ())) <= ax:
-            return None
-        sizes.append(int(leaves[0].shape[ax]))
-    if sum(sizes) != consumer.shape[ax]:
+    if isinstance(consumer, st.ArraySplit) and consumer.shape:
+        ax, total = consumer.axis, consumer.shape[consumer.axis]
+        sizes = []
+        for c in v._chunks:
+            leaves = jax.tree_util.tree_leaves(c)
+            if len(leaves) != 1 or len(getattr(leaves[0], "shape", ())) <= ax:
+                return None
+            sizes.append(int(leaves[0].shape[ax]))
+    elif isinstance(consumer, st.PytreeSplit):
+        ax, total = consumer.axis, consumer.length
+        sizes = []
+        for c in v._chunks:
+            leaf_sizes = set()
+            for l in jax.tree_util.tree_leaves(c):
+                shp = getattr(l, "shape", ())
+                if len(shp) <= ax:
+                    return None
+                leaf_sizes.add(int(shp[ax]))
+            if len(leaf_sizes) != 1:   # leaves disagree (or chunk is leafless)
+                return None
+            sizes.append(leaf_sizes.pop())
+    else:
+        return None
+    if sum(sizes) != total:
         return None
     ranges, s = [], 0
     for z in sizes:
@@ -645,7 +786,8 @@ def adapt_stream(v: "ChunkStream", consumer: st.SplitType) -> "ChunkStream | Non
 
 
 def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
-                         streams_ok: bool, tally: bool = True) -> dict[tuple, Any]:
+                         streams_ok: bool, tally: bool = True,
+                         shard_ok: bool = False) -> dict[tuple, Any]:
     """Resolve stage inputs, ingesting producer ChunkStreams where allowed.
 
     An input keeps its stream form only when (a) the executor can iterate a
@@ -653,8 +795,12 @@ def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
     position as a stream ingest, and (c) the stream's grid actually fits the
     input's split type at run time (always re-checked: cross-evaluation
     edges carry whatever grid the *previous* evaluation produced).  A
-    permitted ConcatSplit→ArraySplit edge re-wraps the producer's fresh
-    pieces under the consumer's grid (``adapt_stream``).  Anything else is
+    permitted ConcatSplit→{ArraySplit,PytreeSplit} edge re-wraps the
+    producer's fresh pieces under the consumer's grid (``adapt_stream``).
+    SHARDED-form streams (device-resident global array) additionally require
+    ``shard_ok`` — their chunks are committed to different devices, so a
+    single-device chunk loop must not iterate them; materializing instead
+    lets XLA reshard (counted ``interior:gather``).  Anything else is
     materialized — correct by construction, merely the old cost.
     ``tally=False`` skips the ingest/materialize stats (scoring-only
     resolves, e.g. ``AutoExecutor``, whose delegate re-resolves and counts)."""
@@ -666,6 +812,8 @@ def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
         if isinstance(v, ChunkStream):
             ok = (streams_ok and ho is not None and i in ho.stream_in
                   and v.compatible(si.split_type))
+            if ok and v.sharded is not None and not shard_ok:
+                ok = False
             if ok and type(v.split_type) is not type(si.split_type):
                 # Grid conversion only where the PLAN permitted it — the
                 # recorded ``convert_in`` decision replays, never a fresh
@@ -799,7 +947,7 @@ def _block_stage_outputs(stage: Stage) -> None:
                 if isinstance(r, ChunkStream):
                     # Raw storage, never the derived chunk list: blocking must
                     # not charge an unstack pass to the boundary counters.
-                    r = [x for x in (r._chunks, r.stacked, r.tail)
+                    r = [x for x in (r._chunks, r.stacked, r.tail, r.sharded)
                          if x is not None]
                 jax.block_until_ready(r)
             except Exception:
@@ -845,10 +993,15 @@ class StageExecutor:
     #: whether ``execute`` can iterate a ChunkStream input directly (the
     #: chunk-loop drivers can; whole-array strategies materialize instead).
     stream_capable: bool = False
+    #: whether ``execute`` accepts SHARDED-form streams (chunks committed to
+    #: different mesh devices).  Only the sharded executor places per-shard
+    #: buffers; everything else materializes and lets XLA reshard.
+    shard_capable: bool = False
 
     # -- template method ----------------------------------------------------
     def run(self, stage: Stage, graph: DataflowGraph, ctx) -> None:
-        concrete = resolve_stage_inputs(stage, graph, ctx, self.stream_capable)
+        concrete = resolve_stage_inputs(stage, graph, ctx, self.stream_capable,
+                                        shard_ok=self.shard_capable)
         entry = getattr(ctx, "_plan_entry", None)
         if self._should_tune(stage, ctx, entry):
             # Sampled tuning re-slices inputs at arbitrary offsets: a one-time

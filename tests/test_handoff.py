@@ -10,8 +10,12 @@ retraces); interior-vs-terminal boundary-byte accounting; zero-chunk
 stream hardening; chunk-buffer donation safety (plan-time veto of
 observable producers + the pinned runtime backstop); and
 ``MOZART_PLAN_CACHE`` round trips asserting recorded decisions — including
-ConcatSplit conversions and migrated v2 files — replay in a fresh process
-with zero planner calls.
+ConcatSplit conversions and migrated v2/v3 files — replay in a fresh
+process with zero planner calls.  Also: per-context counter scoping
+(``ctx.counters`` sees only its own session's traffic), the
+ConcatSplit→PytreeSplit per-leaf conversion rule, and donation-veto aging
+(stale plan-time vetoes re-analyze after ``handoff.STALE_THRESHOLD``
+consecutive disagreements with observed liveness).
 """
 
 import json
@@ -622,6 +626,39 @@ def _make_repeat2():
     return _REPEAT2
 
 
+_TREE_REPEAT2 = None
+_TREE_SCALE = None
+
+
+def _make_tree_repeat2():
+    # Fresh-output producer whose pieces are PYTREES with mixed leaf ranks
+    # (the optimizer-state shape) — exercises the per-leaf conversion rule.
+    global _TREE_REPEAT2
+    if _TREE_REPEAT2 is None:
+        from repro.core import splittable
+
+        @splittable(x=st.Along(0), ret=st.Concat("trep2", 0))
+        def tree_repeat2(x):
+            y = jnp.repeat(x, 2)
+            return {"p": y, "m": jnp.stack([y, y * 2.0], axis=1)}
+
+        _TREE_REPEAT2 = tree_repeat2
+    return _TREE_REPEAT2
+
+
+def _make_tree_scale():
+    global _TREE_SCALE
+    if _TREE_SCALE is None:
+        from repro.core import splittable
+
+        @splittable(s=st.Pytree(0), ret=st.Pytree(0))
+        def tree_scale(s):
+            return {"p": (s["p"] + 1.0) * 0.5, "m": s["m"] * 2.0}
+
+        _TREE_SCALE = tree_scale
+    return _TREE_SCALE
+
+
 class TestConcatHandoff:
     N, BATCH = 10_000, 2048
 
@@ -681,6 +718,69 @@ class TestConcatHandoff:
         good = adapt_stream(s, st.ArraySplit((7,), 0))
         assert good is not None and good.ranges == [(0, 3), (3, 7)]
         assert adapt_stream(s, st.ArraySplit((8,), 0)) is None
+
+    def test_concat_producer_hands_off_to_pytree_consumer(self):
+        """Fresh-output producers that emit PYTREES hand off to PytreeSplit
+        consumers: the conversion decides per LEAF (mixed ranks/trailing
+        dims are fine as long as every leaf of a chunk agrees on its
+        split-axis extent) — previously this edge always merged."""
+        tree_rep2 = _make_tree_repeat2()
+        tree_scale = _make_tree_scale()
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+
+        def run(handoff):
+            plan_cache.clear()
+            for _ in range(2):               # plan, then warm
+                with mozart.session(executor="fused",
+                                    batch_elements=self.BATCH,
+                                    handoff=handoff) as ctx:
+                    out = jax.tree_util.tree_map(
+                        np.asarray, tree_scale(tree_rep2(x)).value)
+            return out, ctx
+
+        out, ctx = run(True)
+        assert ctx.stats["stream_converted"] == 1
+        assert ctx.counters.bytes_interior() == 0
+        assert ctx.stats["planner_calls"] == 0
+        off, _ = run(False)
+        for k in ("p", "m"):
+            np.testing.assert_allclose(out[k], off[k], rtol=1e-6)
+        want_p = (np.repeat(np.linspace(0., 1., self.N, dtype=np.float32), 2)
+                  + 1.0) * 0.5
+        np.testing.assert_allclose(out["p"], want_p, rtol=2e-5)
+
+    def test_pytree_protocol_rule(self):
+        c = st.ConcatSplit("t", 0)
+        assert c.can_handoff(st.PytreeSplit("t", 64, 0))
+        assert not c.can_handoff(st.PytreeSplit("t", 64, 1))  # axis mismatch
+        assert not st.ConcatSplit("t", 1).can_handoff(st.PytreeSplit("t", 64, 0))
+
+    def test_pytree_leaf_extent_mismatch_materializes(self):
+        """Per-leaf rule: every leaf of a chunk must agree on its split-axis
+        extent — a disagreeing chunk cannot define one grid range, so
+        adapt_stream falls back to the merge (returns None)."""
+        from repro.core.stage_exec import adapt_stream
+        t = st.ConcatSplit("t", 0)
+        aval = {"a": jax.ShapeDtypeStruct((7,), jnp.float32),
+                "b": jax.ShapeDtypeStruct((7, 2), jnp.float32)}
+        good = [{"a": jnp.ones((3,), jnp.float32),
+                 "b": jnp.ones((3, 2), jnp.float32)},
+                {"a": jnp.ones((4,), jnp.float32),
+                 "b": jnp.ones((4, 2), jnp.float32)}]
+        s = ChunkStream(good, [(0, 2), (2, 4)], t, aval)
+        ok = adapt_stream(s, st.PytreeSplit("t", 7, 0))
+        assert ok is not None and ok.ranges == [(0, 3), (3, 7)]
+        # same buffers re-wrapped: zero copies
+        assert ok._chunks is s._chunks or ok._chunks == s._chunks
+
+        bad = [{"a": jnp.ones((3,), jnp.float32),
+                "b": jnp.ones((4, 2), jnp.float32)}]   # leaves disagree
+        s2 = ChunkStream(bad, [(0, 1)], t,
+                         {"a": jax.ShapeDtypeStruct((3,), jnp.float32),
+                          "b": jax.ShapeDtypeStruct((4, 2), jnp.float32)})
+        assert adapt_stream(s2, st.PytreeSplit("t", 3, 0)) is None
+        # total mismatch still falls back too
+        assert adapt_stream(s, st.PytreeSplit("t", 8, 0)) is None
 
     def test_empty_concat_pieces_stream(self):
         """Zero-size fresh pieces (filter-to-nothing) hand off as an empty
@@ -799,6 +899,149 @@ class TestDonationVeto:
                                  "merged"):
             s.materialize()
         assert "handoff analysis bug" in stage_exec.DONATED_MERGE_ERROR
+
+
+# ---------------------------------------------------------------------------
+# Donation-veto aging: stale vetoes re-analyze instead of persisting forever
+# ---------------------------------------------------------------------------
+
+
+class TestVetoAging:
+    """A plan-time donation decision is a snapshot of Future liveness.  When
+    observed liveness disagrees with the recorded ``vetoed``/``last_use``
+    sets for ``handoff.STALE_THRESHOLD`` consecutive calls, the entry
+    re-analyzes against current liveness — so a producer that stops being
+    observed regains its donation point, and one that STARTS being observed
+    stops paying per-chunk defensive copies."""
+
+    N, B = 20_000, 4096
+
+    def _once(self, hold):
+        x = jnp.linspace(0., 1., self.N, dtype=jnp.float32)
+        with mozart.session(executor="fused", batch_elements=self.B,
+                            pipeline=False) as ctx:
+            a = anp.add(x, 1.0)              # own stage (pipeline=False)
+            e = anp.multiply(a, 0.5)
+            if not hold:
+                del a                        # producer dies pre-analysis
+            out = np.asarray(e)
+            if hold:
+                _ = np.asarray(a)            # observed after consumption
+        return out, ctx
+
+    def test_stale_veto_ages_into_donation(self):
+        """Producer observable at plan time → vetoed (no donation).  After
+        it stops being observed, two stale calls age the veto out and the
+        donation point comes back copy-free."""
+        from repro.core import handoff as ho_mod
+        plan_cache.clear()
+        out0, c0 = self._once(hold=True)     # analysis: Future alive → veto
+        assert c0.stats.get("donated_chunks", 0) == 0
+        assert c0.stats.get("donation_copies", 0) == 0
+        _, c1 = self._once(hold=False)       # stale ×1: hysteresis holds
+        assert c1.stats.get("handoff_reanalyzed", 0) == 0
+        assert c1.stats.get("donated_chunks", 0) == 0
+        _, c2 = self._once(hold=False)       # stale ×2 == STALE_THRESHOLD
+        assert ho_mod.STALE_THRESHOLD == 2
+        assert c2.stats.get("handoff_reanalyzed", 0) == 1
+        out3, c3 = self._once(hold=False)    # re-analyzed plan replays
+        assert c3.stats.get("handoff_reanalyzed", 0) == 0
+        assert c3.stats.get("donated_chunks", 0) > 0
+        assert c3.stats.get("donation_copies", 0) == 0   # real donation, no copies
+        assert c3.stats.get("planner_calls", 0) == 0     # aging ≠ replanning
+        np.testing.assert_allclose(out0, out3, rtol=1e-6)
+
+    def test_fresh_observation_ages_out_donation_copies(self):
+        """The reverse direction: a donation point recorded against a dead
+        producer ships per-chunk defensive copies once the producer IS
+        observed — until aging re-vetoes it and the copies drop to zero."""
+        plan_cache.clear()
+        out0, c0 = self._once(hold=False)    # analysis: dead → donation point
+        assert c0.stats.get("donated_chunks", 0) > 0
+        _, c1 = self._once(hold=True)        # runtime backstop: copies
+        assert c1.stats.get("donation_copies", 0) > 0
+        assert c1.stats.get("handoff_reanalyzed", 0) == 0
+        _, c2 = self._once(hold=True)        # stale ×2 → re-analyze → veto
+        assert c2.stats.get("handoff_reanalyzed", 0) == 1
+        out3, c3 = self._once(hold=True)
+        assert c3.stats.get("donation_copies", 0) == 0   # copy count dropped
+        assert c3.stats.get("donated_chunks", 0) == 0
+        np.testing.assert_allclose(out0, out3, rtol=1e-6)
+
+    def test_single_flap_never_reanalyzes(self):
+        """One disagreeing call is noise (liveness legitimately varies);
+        the age resets on the next agreeing call."""
+        plan_cache.clear()
+        self._once(hold=True)                # veto recorded
+        _, c1 = self._once(hold=False)       # stale ×1
+        assert c1.stats.get("handoff_reanalyzed", 0) == 0
+        _, c2 = self._once(hold=True)        # agrees again: age resets
+        assert c2.stats.get("handoff_reanalyzed", 0) == 0
+        _, c3 = self._once(hold=False)       # stale ×1 again, not ×2
+        assert c3.stats.get("handoff_reanalyzed", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Per-context counter scoping
+# ---------------------------------------------------------------------------
+
+
+class TestScopedCounters:
+    """Boundary traffic and trace counts attribute to the owning session's
+    ``ctx.counters`` (plus the process-global aggregate): one session's
+    merge round trips can never leak into another session's gate."""
+
+    N, BATCH = 30_000, 4096
+
+    def _once(self, handoff):
+        with mozart.session(executor="fused", batch_elements=self.BATCH,
+                            handoff=handoff) as ctx:
+            out = np.asarray(_eval_chain(
+                jnp.linspace(0., 1., self.N, dtype=jnp.float32)))
+        return out, ctx
+
+    def test_sessions_see_only_their_own_traffic(self):
+        plan_cache.clear()
+        self._once(True); self._once(True)   # plan + warm both configs
+        self._once(False)
+        g_int = stage_exec.bytes_interior()
+        g_term = stage_exec.bytes_terminal()
+        on_out, on_ctx = self._once(True)
+        off_out, off_ctx = self._once(False)
+        # Disjoint scoped views: the handoff session's gate reads zero even
+        # though a merge-everything session ran in the same process.
+        assert on_ctx.counters.bytes_interior() == 0
+        assert on_ctx.counters.bytes_terminal() == self.N * 4
+        assert off_ctx.counters.bytes_interior() >= 5 * self.N * 4
+        assert off_ctx.counters.bytes_terminal() == 0
+        # The process-global aggregate is exactly the sum of the scopes.
+        assert (stage_exec.bytes_interior() - g_int
+                == off_ctx.counters.bytes_interior())
+        assert (stage_exec.bytes_terminal() - g_term
+                == on_ctx.counters.bytes_terminal())
+        np.testing.assert_allclose(on_out, off_out, rtol=2e-5)
+
+    def test_scoped_event_trail_and_traces(self):
+        plan_cache.clear()
+        self._once(True); self._once(True)
+        _, ctx = self._once(True)            # warm: zero scoped retraces
+        assert ctx.counters.trace_count() == 0
+        kinds = {k.split(":")[0] for k, _, _ in ctx.counters.materialize_events()}
+        assert kinds == {"terminal"}         # only the observed output
+        _, off_ctx = self._once(False)
+        off_kinds = {k.split(":")[0]
+                     for k, _, _ in off_ctx.counters.materialize_events()}
+        assert off_kinds == {"interior"}
+
+    def test_global_reset_does_not_touch_scoped_views(self):
+        plan_cache.clear()
+        self._once(True); self._once(True)
+        _, ctx = self._once(True)
+        before = ctx.counters.bytes_terminal()
+        assert before == self.N * 4
+        stage_exec.reset_materialized()      # resets the GLOBAL aggregate
+        assert stage_exec.bytes_terminal() == 0
+        assert ctx.counters.bytes_terminal() == before
 
 
 # ---------------------------------------------------------------------------
@@ -989,6 +1232,52 @@ def test_v2_plan_file_migrates_forward(tmp_path):
         if e.handoff:
             for ho in e.handoff.values():
                 assert ho.convert_in == frozenset()
+
+    # and the migrated plans actually replay
+    with mozart.session(executor="fused", batch_elements=4096) as ctx:
+        out = np.asarray(_eval_chain(x))
+    assert ctx.stats["planner_calls"] == 0
+    assert ctx.stats["streamed_outputs"] == 3
+    want = np.asarray(x)
+    for _ in range(3):
+        want = (want + 1.0) * 0.5
+    np.testing.assert_allclose(out, want, rtol=2e-5)
+
+
+def test_v3_plan_file_migrates_forward(tmp_path):
+    """A schema-v3 cache file (pre ``shard_in``/``vetoed``) loads under v4:
+    handoff records default the new fields to empty — correct for every
+    pre-bump plan, since the rules they gate did not exist — and the
+    migrated plans replay with zero planner calls."""
+    path = str(tmp_path / "plans.json")
+    plan_cache.clear()
+    x = jnp.linspace(0., 1., 30_000, dtype=jnp.float32)
+    with mozart.session(executor="fused", batch_elements=4096):
+        np.asarray(_eval_chain(x))
+    assert plan_cache.save(path) >= 1
+
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema"] == plan_cache.SCHEMA_VERSION
+    payload["schema"] = 3                 # rewrite as a v3-era file
+    for e in payload["entries"]:
+        if e.get("handoff"):
+            for ho in e["handoff"].values():
+                ho.pop("shard_in", None)
+                ho.pop("vetoed", None)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+    plan_cache.clear()
+    before = plan_cache.stats.get("persist_migrated_v3", 0)
+    loaded = plan_cache.load(path)
+    assert loaded >= 1
+    assert plan_cache.stats.get("persist_migrated_v3", 0) == before + 1
+    for e in plan_cache.entries():
+        if e.handoff:
+            for ho in e.handoff.values():
+                assert ho.shard_in == frozenset()
+                assert ho.vetoed == frozenset()
 
     # and the migrated plans actually replay
     with mozart.session(executor="fused", batch_elements=4096) as ctx:
