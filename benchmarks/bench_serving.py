@@ -1,8 +1,11 @@
 """Serving throughput: prefill+decode tokens/s across batch sizes (smoke
-configs on CPU; the production path is the dry-run's serve_step), plus the
-Mozart serving-replica restart scenario: a persisted plan cache
-(``plan_cache_path`` / ``MOZART_PLAN_CACHE``) warm-starts a fresh process
-with zero planner calls and zero tuning executions."""
+configs on CPU; the production path is the dry-run's serve_step), the
+continuous-batching scheduler vs the fixed-group baseline under mixed
+``max_new`` (p50/p99 latency + tokens/s, zero planner calls / zero retraces
+asserted on warm scheduler steps), plus the Mozart serving-replica restart
+scenario: a persisted plan cache (``plan_cache_path`` / ``MOZART_PLAN_CACHE``)
+warm-starts a fresh process with zero planner calls and zero tuning
+executions."""
 
 from __future__ import annotations
 
@@ -28,9 +31,80 @@ def bench_arch(arch: str, batches=(1, 4), prompt_len=16, max_new=16):
                         max_new=max_new)
                 for i in range(batch * 2)]
         srv = Server(cfg, params, batch, max_len=prompt_len + max_new + 1)
+        srv.warmup(prompt_len)
         stats = srv.run(reqs)
         record(f"serve/{arch}/batch_{batch}", stats["wall_s"] * 1e6,
                f"tokens_per_s={stats['tokens_per_s']:.1f}")
+
+
+def bench_continuous_vs_fixed(arch="internlm2-20b", batch=4, max_new_hi=16,
+                              n_req=None):
+    """The headline serving comparison: the continuous-batching scheduler vs
+    the fixed-group baseline, same driver, under a mixed ``max_new`` workload
+    (the fixed batcher decodes dead air until the group's slowest request
+    finishes; the scheduler refills the slot immediately).  Reports warm
+    tokens/s, decode p50/p99 and per-request latency p50/p99, and asserts
+    zero planner calls / zero retraces on the scheduler's warm run."""
+    import jax
+    from repro.core.serving import ContinuousBatcher
+
+    cfg = get_smoke_config(arch)
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req = n_req or batch * 4
+    plens = rng.integers(4, 13, n_req)
+    max_news = rng.integers(1, max_new_hi + 1, n_req)
+    max_len = 16 + max_new_hi + 1
+    prompts = [rng.integers(0, cfg.vocab_size, int(p)).astype(np.int32)
+               for p in plens]
+
+    def fixed_reqs():
+        return [Request(rid=i, prompt=prompts[i], max_new=int(max_news[i]))
+                for i in range(n_req)]
+
+    for driver in ("jit", "mozart"):
+        fsrv = Server(cfg, params, batch, max_len=max_len, driver=driver,
+                      mode="fixed")
+        fsrv.run(fixed_reqs())                      # compile every group shape
+        fstats = fsrv.run(fixed_reqs())             # warm measurement
+
+        b = ContinuousBatcher(cfg, params, batch, max_len=max_len,
+                              driver=driver)
+        b.warmup(max_prompt_len=16)
+        b.run([b.make_request(prompts[i], int(max_news[i]))
+               for i in range(n_req)])              # warm residual host paths
+        cstats = b.run([b.make_request(prompts[i], int(max_news[i]))
+                        for i in range(n_req)])
+
+        ratio = cstats["tokens_per_s"] / max(fstats["tokens_per_s"], 1e-9)
+        warm_ok = (driver != "mozart"
+                   or (cstats["planner_calls"] == 0
+                       and cstats["jit_traces"] == 0))
+        record(f"serve/continuous_vs_fixed/{driver}",
+               cstats["wall_s"] * 1e6,
+               f"tokens_per_s={cstats['tokens_per_s']:.1f};"
+               f"fixed_tokens_per_s={fstats['tokens_per_s']:.1f};"
+               f"ratio={ratio:.2f};"
+               f"decode_p50_us={cstats['decode_p50_us']:.0f};"
+               f"decode_p99_us={cstats['decode_p99_us']:.0f};"
+               f"request_p50_ms={cstats['request_p50_ms']:.1f};"
+               f"request_p99_ms={cstats['request_p99_ms']:.1f};"
+               f"occupancy={cstats['mean_occupancy']:.2f};"
+               f"planner_calls={cstats['planner_calls']};"
+               f"jit_traces={cstats['jit_traces']};"
+               f"{'ok' if ratio > 1.0 and warm_ok else 'REGRESSED'}",
+               extra={
+                   "tokens_per_s": cstats["tokens_per_s"],
+                   "fixed_tokens_per_s": fstats["tokens_per_s"],
+                   "ratio": ratio,
+                   "decode_p50_us": cstats["decode_p50_us"],
+                   "decode_p99_us": cstats["decode_p99_us"],
+                   "request_p50_ms": cstats["request_p50_ms"],
+                   "request_p99_ms": cstats["request_p99_ms"],
+                   "mean_occupancy": cstats["mean_occupancy"],
+                   "planner_calls": int(cstats["planner_calls"]),
+                   "jit_traces": int(cstats["jit_traces"]),
+               })
 
 
 def bench_decode_drivers(arch="rwkv6-1.6b", batch=2, prompt_len=8, max_new=16):
@@ -48,7 +122,7 @@ def bench_decode_drivers(arch="rwkv6-1.6b", batch=2, prompt_len=8, max_new=16):
                         max_new=max_new)
                 for i in range(batch * 2)]
         srv = Server(cfg, params, batch, max_len=prompt_len + max_new + 1,
-                     driver=driver)
+                     driver=driver, mode="fixed")
         srv.warmup(prompt_len)
         srv.run(reqs)                     # warm every per-shape compile
         stats = srv.run(reqs)
@@ -120,6 +194,9 @@ def bench_mozart_warm_start(n=500_000):
 def main(quick=False):
     bench_mozart_warm_start(n=500_000 // (4 if quick else 1))
     bench_decode_drivers(max_new=8 if quick else 16)
+    bench_continuous_vs_fixed(batch=2 if quick else 4,
+                              max_new_hi=8 if quick else 16,
+                              n_req=6 if quick else None)
     for arch in ("rwkv6-1.6b", "gemma3-4b", "olmoe-1b-7b"):
         bench_arch(arch, batches=(1, 4) if not quick else (2,))
 

@@ -12,8 +12,10 @@ cache + auto-tuner with repeated runs, verifies that ``auto`` matches or
 beats the fixed ``pipelined`` default in steady state, replays a persisted
 plan-cache file with zero planner calls, gates cross-stage chunk handoff
 (interior boundary ``bytes_materialized`` must drop to zero and warm
-wall-clock must not regress vs the merge-everything path), and exits
-nonzero on any mismatch.
+wall-clock must not regress vs the merge-everything path), gates the
+continuous-batching serving scheduler (per-request token parity vs the
+fixed-group baseline, zero warm planner calls / retraces, p50/p99 in the
+JSON artifact), and exits nonzero on any mismatch.
 """
 
 from __future__ import annotations
@@ -303,7 +305,13 @@ print(json.dumps({
 
     def sharded_row(handoff: bool) -> dict | None:
         env = dict(os.environ)
-        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        # Run on the real mesh when the parent already sees one (GPU/TPU
+        # runner); otherwise force a 2-device host platform, same as CI's
+        # sharded tests.
+        if jax.device_count() < 2:
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                                " --xla_force_host_platform_device_count=2"
+                                ).strip()
         env["PYTHONPATH"] = os.pathsep.join(
             p for p in (env.get("PYTHONPATH"),
                         os.path.join(os.path.dirname(
@@ -374,6 +382,119 @@ print(json.dumps({
                })
     if sharded_failures:
         failures.append(f"handoff/sharded:{sharded_failures}")
+
+    # -- serving: continuous batching matches fixed-group, stays warm ------
+    # Subprocess (fresh jax state, same pattern as the sharded row).  Gates:
+    # per-request token parity between the continuous-batching scheduler
+    # (mozart driver, right-pad + per-slot caches) and the fixed-group
+    # baseline (jit driver, left-pad + mask) under mixed prompt lengths and
+    # mixed max_new; zero planner calls and zero retraces across the warm
+    # run's occupancy churn.  p50/p99 latencies land in the JSON artifact.
+    _SERVING_ROW = r'''
+import warnings; warnings.filterwarnings("ignore")
+import json
+import numpy as np, jax
+from repro.configs.registry import get_smoke_config
+from repro.core.serving import ContinuousBatcher, ServeRequest
+from repro.launch.serve import Request, Server
+from repro.models import transformer as tfm
+
+cfg = get_smoke_config("internlm2-20b")
+params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+specs = [(5, 3), (9, 7), (6, 2), (3, 5), (8, 4), (9, 1), (7, 6), (4, 2)]
+prompts = [rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+           for p, _ in specs]
+max_len = 32
+
+def fixed_requests():
+    return [Request(rid=i, prompt=p, max_new=n)
+            for i, (p, (_, n)) in enumerate(zip(prompts, specs))]
+
+fixed = Server(cfg, params, batch=2, max_len=max_len, driver="jit",
+               mode="fixed")
+fixed.run(fixed_requests())                  # compile every group shape
+freqs = fixed_requests()
+fstats = fixed.run(freqs)
+
+def cont_requests():
+    return [ServeRequest(rid=i, prompt=p, max_new=n)
+            for i, (p, (_, n)) in enumerate(zip(prompts, specs))]
+
+b = ContinuousBatcher(cfg, params, batch=2, max_len=max_len, driver="mozart")
+b.warmup(max_prompt_len=9)
+b.run(cont_requests())                       # warm residual host paths
+creqs = cont_requests()
+cstats = b.run(creqs)
+
+print(json.dumps({
+    "parity": all(c.out == f.out for c, f in zip(creqs, freqs)),
+    "planner_calls": int(cstats["planner_calls"]),
+    "jit_traces": int(cstats["jit_traces"]),
+    "tokens": int(cstats["tokens"]),
+    "tokens_per_s": cstats["tokens_per_s"],
+    "fixed_tokens_per_s": fstats["tokens_per_s"],
+    "decode_p50_us": cstats["decode_p50_us"],
+    "decode_p99_us": cstats["decode_p99_us"],
+    "request_p50_ms": cstats["request_p50_ms"],
+    "request_p99_ms": cstats["request_p99_ms"],
+    "mean_occupancy": cstats["mean_occupancy"],
+    "us": cstats["wall_s"] * 1e6,
+}))
+'''
+
+    def serving_row() -> dict | None:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (env.get("PYTHONPATH"),
+                        os.path.join(os.path.dirname(
+                            os.path.dirname(os.path.abspath(__file__))), "src"))
+            if p)
+        proc = _subprocess.run(
+            [sys.executable, "-c", _SERVING_ROW],
+            env=env, capture_output=True, text=True, timeout=900)
+        if proc.returncode != 0:
+            print(f"smoke/serving subprocess failed:\n{proc.stderr}",
+                  file=sys.stderr)
+            return None
+        return _json.loads(proc.stdout.strip().splitlines()[-1])
+
+    srow = serving_row()
+    serving_failures = []
+    if srow is None:
+        serving_failures.append("subprocess")
+        record("smoke/serving", 0.0, "SUBPROCESS_FAILED")
+    else:
+        if not srow["parity"]:
+            serving_failures.append("parity")
+        if srow["planner_calls"] != 0:
+            serving_failures.append("warm_planned")
+        if srow["jit_traces"] != 0:
+            serving_failures.append("warm_retraced")
+        ratio = srow["tokens_per_s"] / max(srow["fixed_tokens_per_s"], 1e-9)
+        record("smoke/serving", srow["us"],
+               f"tokens_per_s={srow['tokens_per_s']:.1f};"
+               f"fixed_tokens_per_s={srow['fixed_tokens_per_s']:.1f};"
+               f"ratio={ratio:.2f};"
+               f"decode_p50_us={srow['decode_p50_us']:.0f};"
+               f"decode_p99_us={srow['decode_p99_us']:.0f};"
+               f"occupancy={srow['mean_occupancy']:.2f};"
+               f"{'ok' if not serving_failures else 'REGRESSED'}",
+               extra={
+                   "tokens": int(srow["tokens"]),
+                   "tokens_per_s": srow["tokens_per_s"],
+                   "fixed_tokens_per_s": srow["fixed_tokens_per_s"],
+                   "ratio": ratio,
+                   "decode_p50_us": srow["decode_p50_us"],
+                   "decode_p99_us": srow["decode_p99_us"],
+                   "request_p50_ms": srow["request_p50_ms"],
+                   "request_p99_ms": srow["request_p99_ms"],
+                   "mean_occupancy": srow["mean_occupancy"],
+                   "planner_calls": int(srow["planner_calls"]),
+                   "jit_traces": int(srow["jit_traces"]),
+               })
+    if serving_failures:
+        failures.append(f"serving:{serving_failures}")
 
     # -- AOT pipeline: warm calls do ZERO planner calls and ZERO retraces ---
     plan_cache.clear()

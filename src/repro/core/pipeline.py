@@ -123,9 +123,15 @@ class Pipeline:
         self._n_stages: int | None = None
         self._fast: _FastReplay | None = None
         self.compiled = False
-        #: stat deltas of the most recent ``__call__`` (includes
-        #: ``jit_traces``, the stage_exec trace-counter delta).
-        self.last_call_stats: dict[str, int] = {}
+        # stat deltas of the most recent ``__call__`` (includes
+        # ``jit_traces``, the stage_exec trace-counter delta).  Private:
+        # read through the ``last_call_stats`` property (snapshot under the
+        # lock) or, for concurrent callers, atomically via
+        # ``call_with_stats()``.
+        self._last_call_stats: dict[str, int] = {}
+        #: bucket label -> resolved PlanEntry, one per ``compile(bucket=...)``
+        #: (serving: a (kind, batch, length) bucket per pinned shape).
+        self._buckets: dict[tuple, Any] = {}
 
     # -- session compatibility ----------------------------------------------
     @contextlib.contextmanager
@@ -179,14 +185,23 @@ class Pipeline:
             self._entry = entry
             return self
 
-    def compile(self, *args, **kwargs) -> "Pipeline":
+    def compile(self, *args, bucket: tuple | None = None, **kwargs) -> "Pipeline":
         """Drive the pipeline to its pinned steady state.
 
         Runs the lowered example repeatedly (bounded by
         ``MAX_COMPILE_PASSES``) until a pass performs zero planner calls,
         zero tuning/measurement runs and zero jit traces — at which point
         every chunk size, executor choice and compiled executable is pinned
-        and subsequent ``__call__``s are pure split/drive/merge."""
+        and subsequent ``__call__``s are pure split/drive/merge.
+
+        ``bucket`` labels the plan entry this example resolves to (e.g. a
+        serving scheduler's ``("prefill", batch, length)`` shape bucket) and
+        records it in ``self.buckets``.  One pipeline may pin many buckets:
+        each distinct example shape fingerprints to its own plan entry, so
+        ``compile(ex_a, bucket=A); compile(ex_b, bucket=B)`` leaves both
+        executables pinned and every warm call replays whichever bucket the
+        call's shapes match — no retrace when occupancy moves between
+        buckets."""
         self._require_fn()
         if args or kwargs:
             self._example = (args, kwargs)
@@ -207,6 +222,16 @@ class Pipeline:
                 f"{self.last_call_stats}); the pipeline is likely "
                 "uncacheable (unfingerprintable values / plan_cache=False) "
                 "and every call will replan", RuntimeWarning, stacklevel=2)
+        if bucket is not None:
+            # Resolve this example's plan entry (cache hit after the warm
+            # loop above) and stamp the bucket label on it.
+            self.lower(*a, **kw)
+            entry = self._entry
+            if entry is not None:
+                with entry._lock:
+                    entry.bucket = tuple(bucket)
+            with self._lock:
+                self._buckets[tuple(bucket)] = entry
         if self.ctx.plan_cache_path:
             from repro.core import plan_cache as _pc
             _pc.save(self.ctx.plan_cache_path)
@@ -246,8 +271,19 @@ class Pipeline:
             delta = {k: v - before.get(k, 0)
                      for k, v in ctx.stats.items() if v != before.get(k, 0)}
             delta["jit_traces"] = stage_exec.trace_count() - traces_before
-            self.last_call_stats = delta
+            self._last_call_stats = delta
             return result
+
+    def call_with_stats(self, *args, **kwargs):
+        """``(result, stats_delta)`` for one call, atomically.
+
+        Concurrent callers reading ``last_call_stats`` after ``__call__``
+        can observe another call's delta; this holds the pipeline lock
+        across call + read so each caller gets exactly its own delta (the
+        serving scheduler's per-step retrace accounting relies on this)."""
+        with self._lock:
+            result = self(*args, **kwargs)
+            return result, dict(self._last_call_stats)
 
     # -- bound-arguments fast path (arg_transparent, ROADMAP follow-up) ------
     def _build_fast(self, out, args, kwargs):
@@ -365,14 +401,35 @@ class Pipeline:
         return self._entry if self._entry is not None else self.ctx._plan_entry
 
     @property
+    def last_call_stats(self) -> dict:
+        """Snapshot of the most recent call's stat deltas (lock-consistent).
+
+        Under concurrency this tells you about *some* recent call, not
+        necessarily yours — use ``call_with_stats()`` to pair a call with
+        its own delta."""
+        with self._lock:
+            return dict(self._last_call_stats)
+
+    @last_call_stats.setter
+    def last_call_stats(self, value: dict) -> None:
+        with self._lock:
+            self._last_call_stats = dict(value)
+
+    @property
+    def buckets(self) -> dict:
+        """Bucket label -> pinned plan entry, from ``compile(bucket=...)``."""
+        with self._lock:
+            return dict(self._buckets)
+
+    @property
     def stats(self):
         """Cumulative context stats across every call of this pipeline."""
         return self.ctx.stats
 
     def warm(self) -> bool:
         """True when the most recent call ran at pinned steady state."""
-        return bool(self.last_call_stats) and all(
-            self.last_call_stats.get(k, 0) == 0 for k in WARM_STATS)
+        stats = self.last_call_stats          # one lock-consistent snapshot
+        return bool(stats) and all(stats.get(k, 0) == 0 for k in WARM_STATS)
 
     def describe(self) -> str:
         e = self.plan_entry

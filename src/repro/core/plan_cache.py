@@ -68,7 +68,9 @@ _MAX_ENTRIES = 256
 #: v3: ``convert_in`` on handoff records (ConcatSplit→ArraySplit edges).
 #: v4: ``shard_in`` (sharded-form stream ingests) and ``vetoed`` (recorded
 #:     donation vetoes, for the staleness aging path) on handoff records.
-SCHEMA_VERSION = 4
+#: v5: ``bucket`` — the serving-scheduler bucket label a pinned entry was
+#:     compiled for (``Pipeline.compile(bucket=...)``).
+SCHEMA_VERSION = 5
 
 #: older schemas the loader can migrate forward in place.  v2 files differ
 #: from v3/v4 only by the absence of ``convert_in`` on handoff records, and
@@ -76,8 +78,9 @@ SCHEMA_VERSION = 4
 #: default to empty, correct for every pre-bump plan (the rules did not
 #: exist, so no recorded decision could have used them; an empty ``vetoed``
 #: merely means the aging path has nothing to reconsider until the first
-#: re-analysis).
-_MIGRATABLE_SCHEMAS = (2, 3)
+#: re-analysis).  v4 files lack only ``bucket``, which defaults to None
+#: (unlabelled) — correct for every pre-serving plan.
+_MIGRATABLE_SCHEMAS = (2, 3, 4)
 
 #: process-global cache statistics (benchmarks report these).
 stats: collections.Counter = collections.Counter()
@@ -389,6 +392,12 @@ class PlanEntry:
     #: re-analyze (``handoff.resolve_decisions``).  Runtime-only — never
     #: persisted: a warm-started process re-observes staleness from zero.
     ho_age: int = 0
+    #: serving-scheduler bucket label this entry was pinned for
+    #: (``Pipeline.compile(bucket=...)``); None = not bucket-labelled.  Purely
+    #: descriptive — lookup is still by structural fingerprint — but persisted
+    #: so a warm-started server can report which (batch, length) buckets its
+    #: plan file covers before replaying them.
+    bucket: tuple | None = None
     hits: int = 0
     loaded: bool = False                             # rehydrated from disk
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
@@ -705,6 +714,7 @@ def _entry_enc(e: PlanEntry) -> dict:
     return {
         "key": _enc(e.key),
         "fn_names": list(e.fn_names),
+        "bucket": None if e.bucket is None else _enc(tuple(e.bucket)),
         "tuned_batch": {str(k): v for k, v in tuned.items()},
         "chosen_exec": {str(k): v for k, v in chosen.items()},
         "exec_timings": {str(k): v for k, v in timings.items()},
@@ -755,6 +765,7 @@ def _entry_dec(d: dict, classes: dict[str, type]) -> PlanEntry:
                      for k, v in d.get("block_shape", {}).items()},
         handoff=None if raw_ho is None else {
             int(sid): StageHandoff.from_json(ho) for sid, ho in raw_ho.items()},
+        bucket=None if d.get("bucket") is None else tuple(_dec(d["bucket"])),
         loaded=True,
     )
 

@@ -1,0 +1,531 @@
+"""Continuous-batching serving runtime over pinned AOT pipelines.
+
+``launch/serve.py``'s fixed-group batcher drains whole groups: every slot
+decodes until ``max(r.max_new)`` even after its own request finished, and a
+queued request waits for the entire group to drain.  This module replaces
+that with a **rolling decode batch**: the decode batch has a fixed ``batch``
+slots; requests join a free slot at the next step boundary (prefilled into
+the slot's rows of a shared per-slot KV cache) and leave the moment they
+finish, freeing the slot for the next queued request.  Occupancy varies
+step to step, but the decode computation never changes shape — idle slots
+decode dead air whose cache writes are dropped (``mode="drop"`` scatter) —
+so every warm step replays the same pinned executable: zero planner calls,
+zero retraces, at any occupancy.
+
+Shape discipline (the bucketed-batch pinning contract):
+
+* **Decode** is always ``(batch, 1)`` tokens against the full per-slot
+  cache — exactly one plan entry, pinned once, labelled
+  ``("decode", batch)``.
+* **Prefill** is bucketed: prompts are right-padded to a power-of-two
+  length bucket and grouped into a power-of-two batch bucket; each
+  ``(batch_bucket, len_bucket)`` pair fingerprints to its own plan entry,
+  compiled ahead of serving (``warmup``) and labelled
+  ``("prefill", bb, lb)`` via ``Pipeline.compile(bucket=...)``.  A
+  half-empty admission group replays the pinned executable of its bucket
+  instead of retracing.
+* Right-padding + per-slot ``length`` keeps prefill correct without
+  position arithmetic: causal masking already ignores the future, the
+  ``pad_mask`` keeps garbage keys out of every real query's softmax, and
+  ``last_pos`` gathers each row's true last-position logits.  Recurrent
+  families (ssm/hybrid) scan state over every position, so padding would
+  corrupt them — for those the scheduler buckets by *exact* prompt length
+  (pad-free groups, one plan entry per distinct length).
+
+Prefilled caches are scattered into the rolling cache slot-by-slot with a
+jitted per-leaf batch-axis scatter (axes inferred once by diffing
+``jax.eval_shape`` of ``init_caches`` at two batch sizes).  Dummy rows in a
+padded admission group scatter to slot index ``batch`` — out of bounds,
+dropped.
+
+Latency is honest: each decode step is timed through the host sync
+(``np.asarray`` of the argmax), so ``decode_us_per_call`` measures compute,
+not dispatch.  Per-request latency runs submit -> final token.
+
+``AsyncServer`` is the async front-end: a daemon thread drives
+``ContinuousBatcher.step()`` while any number of ``asyncio`` callers
+``await generate(...)`` — submissions multiplex into the rolling batch and
+resolve independently.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import itertools
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+__all__ = ["ServeRequest", "ContinuousBatcher", "AsyncServer"]
+
+#: model families whose per-position recurrence makes padded prefill
+#: incorrect (state integrates every position, real or pad) — bucketed by
+#: exact prompt length instead.
+_PAD_FREE_FAMILIES = ("ssm", "hybrid")
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new: int
+    eos: int | None = None
+    out: list = dataclasses.field(default_factory=list)
+    submitted_s: float = 0.0
+    first_token_s: float | None = None
+    done_s: float | None = None
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+
+    @property
+    def finished(self) -> bool:
+        return self.done.is_set()
+
+
+def _pow2_buckets(lo: int, hi: int) -> list:
+    """Powers of two covering [lo, hi]: smallest bucket >= any n in range."""
+    out, b = [], max(1, lo)
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return out
+
+
+def _bucket_for(n: int, buckets: list) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def _cache_batch_axes(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-leaf batch-axis index of the per-slot cache pytree.
+
+    Found structurally: evaluate ``init_caches`` shapes at ``batch`` and
+    ``batch + 1`` and diff each leaf — exactly one dim differs (the batch
+    dim), whatever the leaf layout (KV blocks put it at axis 3, lengths at
+    axis 1, recurrent states elsewhere)."""
+    a = jax.eval_shape(lambda: tfm.init_caches(cfg, batch, max_len,
+                                               per_slot=True))
+    b = jax.eval_shape(lambda: tfm.init_caches(cfg, batch + 1, max_len,
+                                               per_slot=True))
+    la, _ = jax.tree_util.tree_flatten(a)
+    lb = jax.tree_util.tree_leaves(b)
+    axes = []
+    for sa, sb in zip(la, lb):
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        if len(diff) != 1:
+            raise ValueError(
+                f"cache leaf {sa.shape} has no unique batch axis vs "
+                f"{sb.shape}")
+        axes.append(diff[0])
+    return axes
+
+
+def _make_join(axes: list):
+    """Jitted scatter of a prefill-group cache into rolling-cache slots.
+
+    ``slots`` maps group row -> rolling slot index; rows whose slot index
+    is out of bounds (dummy padding rows pointed at slot ``batch``) are
+    dropped, not clamped."""
+    def join(roll, pref, slots):
+        rl, td = jax.tree_util.tree_flatten(roll)
+        pl = jax.tree_util.tree_leaves(pref)
+        out = [
+            r.at[(slice(None),) * ax + (slots,)].set(
+                p.astype(r.dtype), mode="drop")
+            for r, p, ax in zip(rl, pl, axes)
+        ]
+        return jax.tree_util.tree_unflatten(td, out)
+    return jax.jit(join)
+
+
+def _make_prefill_bucket(cfg: ModelConfig, masked: bool):
+    """The scheduler's prefill step for one admission group.
+
+    ``masked=True`` (attention families): prompts are right-padded to the
+    length bucket, a pad mask keeps garbage keys out of every softmax and
+    ``last_pos`` gathers each row's own last real position.  ``masked=False``
+    (pad-free recurrent families): the group is exact-length, no padding
+    exists, and the fast unmasked attention paths stay eligible."""
+    def prefill_bucket(p, toks, plens, caches):
+        if not masked:
+            return tfm.prefill(p, cfg, tokens=toks, caches=caches)
+        S = toks.shape[1]
+        mask = jnp.arange(S, dtype=jnp.int32)[None, :] < plens[:, None]
+        return tfm.prefill(p, cfg, tokens=toks, caches=caches,
+                           pad_mask=mask,
+                           last_pos=jnp.maximum(plens - 1, 0))
+    return prefill_bucket
+
+
+def _annotated_steps(cfg: ModelConfig, masked: bool):
+    """Scheduler prefill/decode as annotated opaque library calls."""
+    from repro.core import annotate
+    from repro.core.split_types import Unknown, _
+
+    decode = annotate(
+        lambda p, tok, caches: tfm.decode_step(p, cfg, tok, caches),
+        name="sched_decode_step", ret=Unknown(), p=_, tok=_, caches=_)
+    prefill = annotate(
+        _make_prefill_bucket(cfg, masked),
+        name="sched_prefill_bucket", ret=Unknown(),
+        p=_, toks=_, plens=_, caches=_)
+    return prefill, decode
+
+
+class ContinuousBatcher:
+    """Rolling decode batch with step-boundary admission.
+
+    Single-driver: ``step()`` (and ``run``/``warmup``) must be called from
+    one thread at a time; ``submit()`` is thread-safe and may be called
+    from anywhere (the async front-end's pattern)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch: int, max_len: int,
+                 driver: str = "mozart",
+                 prompt_buckets: list | None = None,
+                 plan_cache_path: str | None = None):
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.driver = driver
+        self.pad_free = cfg.family in _PAD_FREE_FAMILIES
+        self.prompt_buckets = (sorted(prompt_buckets)
+                               if prompt_buckets else None)
+        self.batch_buckets = _pow2_buckets(1, batch)
+
+        self.slots: list = [None] * batch
+        self.caches = tfm.init_caches(cfg, batch, max_len, per_slot=True)
+        self._tok = np.zeros((batch, 1), np.int32)
+        self._queue: collections.deque = collections.deque()
+        self._qlock = threading.Lock()
+        self._rids = itertools.count()
+
+        self.stats: collections.Counter = collections.Counter()
+        self.decode_lat_s: list = []
+        self.request_lat_s: list = []
+        self.occupancy: list = []
+
+        self._join = _make_join(_cache_batch_axes(cfg, batch, max_len))
+        if driver == "mozart":
+            from repro.core import mozart
+            prefill_fn, decode_fn = _annotated_steps(
+                cfg, masked=not self.pad_free)
+            self._prefill = mozart.pipeline(
+                prefill_fn, executor="eager",
+                plan_cache_path=plan_cache_path)
+            self._decode = mozart.pipeline(
+                decode_fn, executor="eager",
+                plan_cache_path=plan_cache_path)
+        else:
+            self._prefill = jax.jit(
+                _make_prefill_bucket(cfg, masked=not self.pad_free))
+            self._decode = jax.jit(
+                lambda p, tok, caches: tfm.decode_step(p, cfg, tok, caches))
+
+    # -- driver dispatch -----------------------------------------------------
+    def _call_prefill(self, toks, plens, caches):
+        if self.driver == "mozart":
+            out, delta = self._prefill.call_with_stats(
+                self.params, toks, plens, caches)
+            return out, delta
+        return self._prefill(self.params, toks, plens, caches), {}
+
+    def _call_decode(self, tok, caches):
+        if self.driver == "mozart":
+            out, delta = self._decode.call_with_stats(
+                self.params, tok, caches)
+            return out, delta
+        return self._decode(self.params, tok, caches), {}
+
+    def _note_delta(self, delta: dict) -> None:
+        for k in ("planner_calls", "jit_traces", "autotuned_stages",
+                  "auto_measured_stages"):
+            if delta.get(k, 0):
+                self.stats[k] += delta[k]
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: ServeRequest) -> ServeRequest:
+        if req.max_new < 1:
+            raise ValueError(f"rid {req.rid}: max_new must be >= 1")
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"rid {req.rid}: prompt + max_new exceeds max_len "
+                f"({len(req.prompt)} + {req.max_new} > {self.max_len})")
+        req.submitted_s = time.perf_counter()
+        with self._qlock:
+            self._queue.append(req)
+        return req
+
+    def _bucket_len(self, plen: int) -> int:
+        if self.pad_free:
+            return plen                      # exact length: no padding at all
+        if self.prompt_buckets:
+            return _bucket_for(plen, self.prompt_buckets)
+        return _pow2_buckets(1, plen)[-1]
+
+    def _admit(self) -> None:
+        while self._admit_once():
+            pass
+
+    def _admit_once(self) -> int:
+        """Admit one same-length-bucket group into free slots; 0 = nothing."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return 0
+        group: list = []
+        with self._qlock:
+            if not self._queue:
+                return 0
+            lb = self._bucket_len(len(self._queue[0].prompt))
+            kept: collections.deque = collections.deque()
+            while self._queue and len(group) < len(free):
+                r = self._queue.popleft()
+                if self._bucket_len(len(r.prompt)) == lb:
+                    group.append(r)
+                else:
+                    kept.append(r)
+            while kept:                       # preserve arrival order
+                self._queue.appendleft(kept.pop())
+        if not group:
+            return 0
+
+        bb = _bucket_for(len(group), self.batch_buckets)
+        toks = np.zeros((bb, lb), np.int32)
+        plens = np.ones((bb,), np.int32)      # dummy rows: 1-token prompt
+        slots = np.full((bb,), self.batch, np.int32)   # default: dropped
+        for i, r in enumerate(group):
+            toks[i, : len(r.prompt)] = r.prompt
+            plens[i] = len(r.prompt)
+            slots[i] = free[i]
+
+        pref_caches = tfm.init_caches(self.cfg, bb, self.max_len,
+                                      per_slot=True)
+        t0 = time.perf_counter()
+        (logits, pref_caches), delta = self._call_prefill(
+            jnp.asarray(toks), jnp.asarray(plens), pref_caches)
+        first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self.caches = self._join(self.caches, pref_caches,
+                                 jnp.asarray(slots))
+        dt = time.perf_counter() - t0
+
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_s_x1e6"] += int(dt * 1e6)
+        self._note_delta(delta)
+        now = time.perf_counter()
+        for i, r in enumerate(group):
+            s = int(slots[i])
+            t = int(first[i])
+            self.slots[s] = r
+            r.first_token_s = now
+            r.out.append(t)
+            self._tok[s, 0] = t
+            self.stats["tokens"] += 1
+            self._retire_if_done(r, s, now)
+        return len(group)
+
+    # -- decode --------------------------------------------------------------
+    def _retire_if_done(self, r: ServeRequest, slot: int, now: float) -> None:
+        if len(r.out) >= r.max_new or (r.eos is not None
+                                       and r.out[-1] == r.eos):
+            r.done_s = now
+            self.request_lat_s.append(now - r.submitted_s)
+            self.slots[slot] = None
+            self.stats["completed"] += 1
+            r.done.set()
+
+    def _decode_once(self) -> bool:
+        active = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return False
+        t0 = time.perf_counter()
+        (logits, new_caches), delta = self._call_decode(
+            jnp.asarray(self._tok), self.caches)
+        tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        dt = time.perf_counter() - t0        # through the host sync: honest
+        self.caches = new_caches
+        self.decode_lat_s.append(dt)
+        self.occupancy.append(len(active))
+        self.stats["decode_steps"] += 1
+        self._note_delta(delta)
+        now = time.perf_counter()
+        for i, r in active:
+            t = int(tok[i])
+            r.out.append(t)
+            self._tok[i, 0] = t
+            self.stats["tokens"] += 1
+            self._retire_if_done(r, i, now)
+        return True
+
+    def step(self) -> bool:
+        """Admit at the step boundary, then decode once; False when idle."""
+        self._admit()
+        return self._decode_once()
+
+    # -- warmup --------------------------------------------------------------
+    def warmup(self, max_prompt_len: int | None = None,
+               prompt_lens: list | None = None) -> None:
+        """Pin every (batch, length) bucket's executable ahead of serving.
+
+        For pad-free (recurrent) families pass ``prompt_lens`` — the exact
+        lengths expected; otherwise ``max_prompt_len`` bounds the pow-2
+        length buckets (defaults to the largest bucket under ``max_len``)."""
+        if self.pad_free:
+            len_buckets = sorted(set(prompt_lens or []))
+            if not len_buckets:
+                raise ValueError(
+                    f"{self.cfg.family} prefill is pad-free: warmup needs "
+                    "the exact prompt_lens it will serve")
+        else:
+            if self.prompt_buckets is None:
+                hi = max_prompt_len or max(1, self.max_len - 1)
+                self.prompt_buckets = _pow2_buckets(8, hi)
+            len_buckets = self.prompt_buckets
+
+        # Decode: one bucket, full batch.
+        caches = tfm.init_caches(self.cfg, self.batch, self.max_len,
+                                 per_slot=True)
+        tok = jnp.zeros((self.batch, 1), jnp.int32)
+        if self.driver == "mozart":
+            self._decode.lower(self.params, tok, caches)
+            self._decode.compile(bucket=("decode", self.batch))
+        (logits, _), _d = self._call_decode(tok, caches)
+        np.asarray(jnp.argmax(logits[:, -1], axis=-1))   # warm the argmax
+
+        # Prefill: one bucket per (batch_bucket, len_bucket); also warm the
+        # slot-join scatter at each batch bucket (all rows dropped).
+        for bb in self.batch_buckets:
+            for lb in len_buckets:
+                toks = jnp.zeros((bb, lb), jnp.int32)
+                plens = jnp.full((bb,), min(lb, 2), jnp.int32)
+                pc = tfm.init_caches(self.cfg, bb, self.max_len,
+                                     per_slot=True)
+                if self.driver == "mozart":
+                    self._prefill.lower(self.params, toks, plens, pc)
+                    self._prefill.compile(bucket=("prefill", bb, lb))
+                else:
+                    self._call_prefill(toks, plens, pc)
+            pc = tfm.init_caches(self.cfg, bb, self.max_len, per_slot=True)
+            slots = jnp.full((bb,), self.batch, jnp.int32)
+            self.caches = self._join(self.caches, pc, slots)
+        # Serving-phase counters start clean: warmup planner/trace activity
+        # is expected, warm steps after this point must add zero.
+        for k in ("planner_calls", "jit_traces", "autotuned_stages",
+                  "auto_measured_stages"):
+            self.stats.pop(k, None)
+
+    # -- batch front-end -----------------------------------------------------
+    def reset_metrics(self) -> None:
+        """Zero the per-run counters (stats, latency samples, occupancy)."""
+        self.stats.clear()
+        self.decode_lat_s.clear()
+        self.request_lat_s.clear()
+        self.occupancy.clear()
+
+    def run(self, requests: list) -> dict:
+        """Serve a request list to completion; returns the summary stats.
+
+        Metrics are per-run: counters reset on entry, so a reused batcher
+        (the warm-measurement pattern) reports this run alone."""
+        self.reset_metrics()
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        while True:
+            if not self.step():
+                with self._qlock:
+                    if not self._queue:
+                        break
+        return self.summary(time.perf_counter() - t0)
+
+    def summary(self, wall_s: float) -> dict:
+        def pct(xs, p):
+            if not xs:
+                return 0.0
+            ys = sorted(xs)
+            return ys[min(len(ys) - 1, int(round(p / 100 * (len(ys) - 1))))]
+
+        toks = int(self.stats["tokens"])
+        out = {
+            "wall_s": wall_s,
+            "tokens": toks,
+            "tokens_per_s": toks / max(wall_s, 1e-9),
+            "decode_steps": int(self.stats["decode_steps"]),
+            "decode_us_per_call": (
+                sum(self.decode_lat_s) * 1e6
+                / max(len(self.decode_lat_s), 1)),
+            "decode_p50_us": pct(self.decode_lat_s, 50) * 1e6,
+            "decode_p99_us": pct(self.decode_lat_s, 99) * 1e6,
+            "request_p50_ms": pct(self.request_lat_s, 50) * 1e3,
+            "request_p99_ms": pct(self.request_lat_s, 99) * 1e3,
+            "mean_occupancy": (sum(self.occupancy)
+                               / max(len(self.occupancy), 1)),
+            "prefill_calls": int(self.stats["prefill_calls"]),
+            "completed": int(self.stats["completed"]),
+            "planner_calls": int(self.stats["planner_calls"]),
+            "jit_traces": int(self.stats["jit_traces"]),
+        }
+        out["warm"] = (out["planner_calls"] == 0 and out["jit_traces"] == 0)
+        if self.driver == "mozart":
+            out["buckets"] = sorted(
+                list(self._prefill.buckets) + list(self._decode.buckets))
+        return out
+
+    def make_request(self, prompt, max_new: int,
+                     eos: int | None = None) -> ServeRequest:
+        return ServeRequest(rid=next(self._rids),
+                            prompt=np.asarray(prompt, np.int32),
+                            max_new=max_new, eos=eos)
+
+
+class AsyncServer:
+    """``asyncio`` front-end: a daemon thread drives the batcher's steps
+    while any number of coroutines await ``generate()``."""
+
+    def __init__(self, batcher: ContinuousBatcher, idle_poll_s: float = 1e-3):
+        self.batcher = batcher
+        self.idle_poll_s = idle_poll_s
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> "AsyncServer":
+        self._thread = threading.Thread(target=self._drive, daemon=True,
+                                        name="serving-driver")
+        self._thread.start()
+        return self
+
+    def _drive(self) -> None:
+        while not self._stop.is_set():
+            if not self.batcher.step():
+                time.sleep(self.idle_poll_s)
+
+    async def generate(self, prompt, max_new: int,
+                       eos: int | None = None) -> list:
+        req = self.batcher.make_request(prompt, max_new, eos=eos)
+        self.batcher.submit(req)
+        loop = asyncio.get_running_loop()
+        await loop.run_in_executor(None, req.done.wait)
+        return list(req.out)
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+
+    def __enter__(self) -> "AsyncServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -263,22 +263,30 @@ def counter_scope(counters: "BoundaryCounters | None"):
         stack.remove(counters)
 
 
+#: guards counter increments: concurrent pipelines (the serving scheduler's
+#: pattern) must never lose an increment to a racing ``+=`` — a dropped
+#: trace count would let a real retrace read as warm.
+_counts_lock = threading.Lock()
+
+
 def note_trace() -> None:
-    _GLOBAL_COUNTERS.traces += 1
-    for c in _scopes():
-        c.traces += 1
+    with _counts_lock:
+        _GLOBAL_COUNTERS.traces += 1
+        for c in _scopes():
+            c.traces += 1
 
 
 def note_materialized(nbytes: int, terminal: bool = False,
                       kind: str = "merge", where: str = "") -> None:
     nbytes = int(nbytes)
     event = (("terminal:" if terminal else "interior:") + kind, where, nbytes)
-    for c in (_GLOBAL_COUNTERS, *_scopes()):
-        if terminal:
-            c.terminal += nbytes
-        else:
-            c.interior += nbytes
-        c.events.append(event)
+    with _counts_lock:
+        for c in (_GLOBAL_COUNTERS, *_scopes()):
+            if terminal:
+                c.terminal += nbytes
+            else:
+                c.interior += nbytes
+            c.events.append(event)
 
 
 def trace_count() -> int:

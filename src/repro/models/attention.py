@@ -33,7 +33,18 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jax.Array          # (n_blk, blk, B, Hkv, D)
     v: jax.Array
-    length: jax.Array     # () int32 — tokens currently stored
+    #: tokens currently stored.  Either () int32 — every row shares one
+    #: timeline (train/fixed-group serving) — or (B,) int32 — each row has
+    #: its own position (continuous batching: slots join/leave mid-flight,
+    #: so their sequence lengths diverge).  Decode inserts at ``length`` and
+    #: attends ``[start, length)``; with per-slot lengths both become
+    #: per-row scatters/masks.
+    length: jax.Array
+    #: (B,) int32 — first VALID position per row.  Left-padded prefills set
+    #: it to the pad width so decode attention never reads the pad K/V that
+    #: prefill wrote into positions ``[0, start)``; everywhere else it is
+    #: zeros (a no-op mask).
+    start: jax.Array
 
 
 def init_attn(key, cfg: ModelConfig, d_model: int | None = None) -> dict:
@@ -86,7 +97,7 @@ def _qkv(p, x, a: AttnConfig, positions, cfg: ModelConfig):
 
 
 def _dense_attention(q, k, v, *, causal, window, offset=0, kv_len=None,
-                     softcap=None):
+                     softcap=None, kv_mask=None):
     B, Hq, Sq, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     group = Hq // Hkv
@@ -105,14 +116,19 @@ def _dense_attention(q, k, v, *, causal, window, offset=0, kv_len=None,
         m = m & (k_ids > q_ids - window)
     if kv_len is not None:
         m = m & (k_ids < kv_len)
-    s = jnp.where(m[None, None, None], s, NEG_INF)
+    if kv_mask is not None:               # (B, Sk): pad keys drop per row
+        mb = m[None] & kv_mask.astype(bool)[:, None, :]     # (B, Sq, Sk)
+        s = jnp.where(mb[:, None, None], s, NEG_INF)
+    else:
+        s = jnp.where(m[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bghqk,bhkd->bghqd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
     return o.reshape(B, Hq, Sq, D).astype(q.dtype)
 
 
-def _blocked_attention(q, k, v, *, causal, window, block_k, softcap=None):
+def _blocked_attention(q, k, v, *, causal, window, block_k, softcap=None,
+                       kv_mask=None):
     """jnp flash: scan over KV blocks with online softmax (O(block) scores)."""
     B, Hq, Sq, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
@@ -125,10 +141,15 @@ def _blocked_attention(q, k, v, *, causal, window, block_k, softcap=None):
     vb = vp.reshape(B, Hkv, nk, block_k, D).transpose(2, 0, 1, 3, 4)
     qs = (q * (D ** -0.5)).astype(q.dtype).reshape(B, group, Hkv, Sq, D)
     q_ids = jnp.arange(Sq)[:, None]
+    if kv_mask is not None:               # (B, Sk) -> per-block (nk, B, blk)
+        kmb = jnp.pad(kv_mask.astype(bool), ((0, 0), (0, pad))
+                      ).reshape(B, nk, block_k).transpose(1, 0, 2)
+    else:
+        kmb = jnp.ones((nk, 1, 1), bool)  # scanned placeholder (broadcasts)
 
     def step(carry, inp):
         m_prev, l_prev, acc = carry
-        idx, kblk, vblk = inp
+        idx, kblk, vblk, km = inp
         s = jnp.einsum("bghqd,bhkd->bghqk", qs, kblk,
                        preferred_element_type=jnp.float32)
         if softcap is not None:
@@ -139,11 +160,13 @@ def _blocked_attention(q, k, v, *, causal, window, block_k, softcap=None):
             msk = msk & (q_ids >= k_ids)
         if window is not None:
             msk = msk & (k_ids > q_ids - window)
-        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        # (B, Sq, blk): structural mask x per-row pad-key mask
+        mb = msk[None] & km[:, None, :]
+        s = jnp.where(mb[:, None, None], s, NEG_INF)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         pexp = jnp.exp(s - m_new)
-        pexp = jnp.where(msk[None, None, None], pexp, 0.0)
+        pexp = jnp.where(mb[:, None, None], pexp, 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_new = alpha * l_prev + jnp.sum(pexp, axis=-1, keepdims=True)
         acc = acc * alpha + jnp.einsum("bghqk,bhkd->bghqd",
@@ -162,7 +185,7 @@ def _blocked_attention(q, k, v, *, causal, window, block_k, softcap=None):
         jnp.zeros((B, group, Hkv, Sq, 1), jnp.float32),
         jnp.zeros((B, group, Hkv, Sq, D), jnp.float32),
     )
-    (m, l, acc), _ = jax.lax.scan(step, init, (jnp.arange(nk), kb, vb))
+    (m, l, acc), _ = jax.lax.scan(step, init, (jnp.arange(nk), kb, vb, kmb))
     safe = jnp.where(l == 0, 1.0, l)
     return (acc / safe).reshape(B, Hq, Sq, D).astype(q.dtype)
 
@@ -228,15 +251,21 @@ def _decode_attention_blocked(q, cache: KVCache, *, window=None, softcap=None):
                    preferred_element_type=jnp.float32)
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
-    pos = jnp.arange(n_blk * blk).reshape(n_blk, blk)
-    valid = pos < cache.length
+    # validity per (block, row, offset): rows may sit at different positions
+    # (per-slot ``length``) and may start past 0 (left-pad ``start``).
+    pos = jnp.arange(n_blk * blk).reshape(n_blk, 1, blk)          # (n,1,blk)
+    length = cache.length
+    lb = length[None, :, None] if length.ndim else length
+    valid = pos < lb
     if window is not None:
-        valid = valid & (pos > cache.length - 1 - window)
-    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        valid = valid & (pos > lb - 1 - window)
+    valid = valid & (pos >= cache.start[None, :, None])
+    valid = jnp.broadcast_to(valid, (n_blk, B, blk))
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
 
     m_blk = jnp.max(s, axis=-1, keepdims=True)                    # (n,B,g,h,1)
     p = jnp.exp(s - m_blk)
-    p = jnp.where(valid[:, None, None, None, :], p, 0.0)
+    p = jnp.where(valid[:, :, None, None, :], p, 0.0)
     l_blk = jnp.sum(p, axis=-1, keepdims=True)
     o_blk = jnp.einsum("nbghk,nkbhd->nbghd", p.astype(cache.v.dtype), cache.v,
                        preferred_element_type=jnp.float32)
@@ -251,7 +280,8 @@ def _decode_attention_blocked(q, cache: KVCache, *, window=None, softcap=None):
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
-                  n_kv_heads: int | None = None) -> KVCache:
+                  n_kv_heads: int | None = None,
+                  per_slot: bool = False) -> KVCache:
     a = cfg.attn
     n_blk = max(cfg.kv_cache_blocks, 1)
     blk = -(-max_len // n_blk)
@@ -260,25 +290,48 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     return KVCache(
         k=jnp.zeros(shape, cfg.dtype),
         v=jnp.zeros(shape, cfg.dtype),
-        length=jnp.zeros((), jnp.int32),
+        # per_slot: every row tracks its own position (continuous batching)
+        length=jnp.zeros((batch,) if per_slot else (), jnp.int32),
+        start=jnp.zeros((batch,), jnp.int32),
     )
 
 
 def cache_update_decode(cache: KVCache, k_new, v_new) -> KVCache:
-    """Insert one token (S==1) at position ``length``."""
+    """Insert one token (S==1) at position ``length`` (per row if (B,))."""
     blk = cache.k.shape[1]
     pos = cache.length
+    if pos.ndim:
+        # per-slot positions: scatter each row's token at its own
+        # (block, offset).  Rows past capacity scatter out of bounds and
+        # are DROPPED (idle slots in a rolling batch decode dead air —
+        # their writes must not wrap or clamp onto live rows' blocks).
+        B = pos.shape[0]
+        bi, off = pos // blk, pos % blk
+        rows = jnp.arange(B)
+        k = cache.k.at[bi, off, rows].set(
+            k_new[:, :, 0].astype(cache.k.dtype), mode="drop")
+        v = cache.v.at[bi, off, rows].set(
+            v_new[:, :, 0].astype(cache.v.dtype), mode="drop")
+        return cache._replace(k=k, v=v, length=pos + 1)
     bi, off = pos // blk, pos % blk
     # (B, Hkv, 1, D) -> (1, 1, B, Hkv, D) slab at (block, offset)
     k_slab = k_new.transpose(2, 0, 1, 3)[None].astype(cache.k.dtype)
     v_slab = v_new.transpose(2, 0, 1, 3)[None].astype(cache.v.dtype)
     k = jax.lax.dynamic_update_slice(cache.k, k_slab, (bi, off, 0, 0, 0))
     v = jax.lax.dynamic_update_slice(cache.v, v_slab, (bi, off, 0, 0, 0))
-    return KVCache(k=k, v=v, length=pos + 1)
+    return cache._replace(k=k, v=v, length=pos + 1)
 
 
-def cache_fill_prefill(cache: KVCache, k_full, v_full) -> KVCache:
-    """Write a full prefill (B, Hkv, S, D) into the blocked cache."""
+def cache_fill_prefill(cache: KVCache, k_full, v_full,
+                       pad_mask=None) -> KVCache:
+    """Write a full prefill (B, Hkv, S, D) into the blocked cache.
+
+    ``pad_mask`` (B, S) bool, True = real token: rows record where their
+    valid span begins (``start``, left-pad width) and — when the cache
+    carries per-slot lengths — where it ends (right-pad rows stop at their
+    true prompt length, so decode never attends the garbage tail).  A
+    scalar-length cache keeps ``length = S`` and can therefore only mask
+    LEFT pads; right-padded prefills require a per-slot cache."""
     n_blk, blk = cache.k.shape[0], cache.k.shape[1]
     B, Hkv, S, D = k_full.shape
     pad = n_blk * blk - S
@@ -286,8 +339,17 @@ def cache_fill_prefill(cache: KVCache, k_full, v_full) -> KVCache:
     vp = jnp.pad(v_full, ((0, 0), (0, 0), (0, pad), (0, 0)))
     k = kp.transpose(2, 0, 1, 3).reshape(n_blk, blk, B, Hkv, D)
     v = vp.transpose(2, 0, 1, 3).reshape(n_blk, blk, B, Hkv, D)
+    if pad_mask is None:
+        start = jnp.zeros((B,), jnp.int32)
+        end = jnp.full((B,), S, jnp.int32)
+    else:
+        real = pad_mask.astype(bool)
+        idx = jnp.arange(S, dtype=jnp.int32)[None, :]
+        start = jnp.min(jnp.where(real, idx, S), axis=1).astype(jnp.int32)
+        end = (jnp.max(jnp.where(real, idx, -1), axis=1) + 1).astype(jnp.int32)
+    length = end if cache.length.ndim else jnp.asarray(S, jnp.int32)
     return KVCache(k=k.astype(cache.k.dtype), v=v.astype(cache.v.dtype),
-                   length=jnp.asarray(S, jnp.int32))
+                   length=length, start=start)
 
 
 def attention_block(
@@ -302,8 +364,17 @@ def attention_block(
     mode: str = "train",          # train | prefill | decode
     cross_kv: tuple[jax.Array, jax.Array] | None = None,
     use_pallas: bool = False,
+    pad_mask: jax.Array | None = None,   # (B, S) bool, True = real token
 ):
-    """Full attention sub-layer.  Returns (out, new_cache|None, (k,v)|None)."""
+    """Full attention sub-layer.  Returns (out, new_cache|None, (k,v)|None).
+
+    ``pad_mask`` (prefill/train): key positions that are padding are masked
+    out of every query's softmax, and the prefill cache records each row's
+    valid span so later decode steps skip the pad K/V too.  RoPE positions
+    stay the plain ``arange`` — a left pad shifts every real token of a row
+    by the same offset, and rotary scores depend only on relative distance,
+    so the shift cancels; what does NOT cancel is attending pad K/V, which
+    is exactly what the mask removes."""
     a = cfg.attn
     B, S, _ = x.shape
 
@@ -316,7 +387,9 @@ def attention_block(
 
     if positions is None:
         if mode == "decode" and cache is not None:
-            positions = jnp.broadcast_to(cache.length[None, None], (B, 1))
+            length = cache.length
+            positions = (length[:, None] if length.ndim
+                         else jnp.broadcast_to(length[None, None], (B, 1)))
         else:
             positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     q, k, v = _qkv(p, x, a, positions, cfg)
@@ -329,20 +402,21 @@ def attention_block(
                                       softcap=a.logit_softcap)
     else:
         if mode == "prefill" and cache is not None:
-            new_cache = cache_fill_prefill(cache, k, v)
-        if use_pallas and jax.default_backend() == "tpu":
+            new_cache = cache_fill_prefill(cache, k, v, pad_mask=pad_mask)
+        if use_pallas and jax.default_backend() == "tpu" and pad_mask is None:
             from repro.kernels.flash_attention import flash_attention
             o = flash_attention(q, k, v, causal=causal, window=window)
         elif (cfg.banded_attention and a.window and not a.pattern_period
-              and causal and k.shape[2] == S and S > 2 * a.window):
+              and causal and k.shape[2] == S and S > 2 * a.window
+              and pad_mask is None):
             o = _banded_attention(q, k, v, window=a.window,
                                   softcap=a.logit_softcap)
         elif k.shape[2] <= cfg.dense_attn_threshold:
             o = _dense_attention(q, k, v, causal=causal, window=window,
-                                 softcap=a.logit_softcap)
+                                 softcap=a.logit_softcap, kv_mask=pad_mask)
         else:
             o = _blocked_attention(q, k, v, causal=causal, window=window,
                                    block_k=cfg.attn_block_k,
-                                   softcap=a.logit_softcap)
+                                   softcap=a.logit_softcap, kv_mask=pad_mask)
     out = _merge_heads(o) @ p["wo"].astype(x.dtype)
     return out, new_cache, (k, v)

@@ -135,7 +135,7 @@ class BlockIO(NamedTuple):
 
 
 def _apply_block(p, x, cfg: ModelConfig, io: BlockIO, *, kind: str,
-                 mode: str, causal: bool, positions):
+                 mode: str, causal: bool, positions, pad_mask=None):
     from repro.models.shard_ctx import constrain_residual
     x = constrain_residual(x)
     new_cache = io.cache
@@ -153,7 +153,7 @@ def _apply_block(p, x, cfg: ModelConfig, io: BlockIO, *, kind: str,
     kv_cache = io.cache["kv"] if isinstance(io.cache, dict) else io.cache
     a_out, kv_new, _ = attn_mod.attention_block(
         p["attn"], h, cfg, positions=positions, causal=causal,
-        window=io.window, cache=kv_cache, mode=mode)
+        window=io.window, cache=kv_cache, mode=mode, pad_mask=pad_mask)
     if kind == "hybrid":
         ssm_state = io.cache["ssm"] if isinstance(io.cache, dict) else None
         s_out, ssm_new = ssm_mod.ssm_block(p["ssm"], h, cfg, ssm_state,
@@ -217,11 +217,13 @@ def _scan_inner_size(cfg: ModelConfig, L: int) -> int:
 
 
 def run_stack(params, x, cfg: ModelConfig, *, caches=None, mode="train",
-              causal=True, positions=None, cross_kv=None):
+              causal=True, positions=None, cross_kv=None, pad_mask=None):
     """Run the (optionally pre-staged +) scanned layer stack.
 
     Returns (x, new_caches, aux_sum).  ``caches`` is a stacked pytree with
-    leading L axis (or None in train mode).
+    leading L axis (or None in train mode).  ``pad_mask`` (B, S) marks real
+    tokens — identical for every layer, so it closes over the scan body
+    rather than travelling through xs.
     """
     kind = layer_kind(cfg)
     aux_total = jnp.float32(0.0)
@@ -234,7 +236,8 @@ def run_stack(params, x, cfg: ModelConfig, *, caches=None, mode="train",
                 window=jnp.int32(BIG_WINDOW), cross_kv=None)
             x, new_c, aux = _apply_block(pl, x, cfg, io, kind="dense",
                                          mode=mode, causal=causal,
-                                         positions=positions)
+                                         positions=positions,
+                                         pad_mask=pad_mask)
             aux_total = aux_total + aux
             if caches is not None:
                 caches = dict(caches)
@@ -267,7 +270,8 @@ def run_stack(params, x, cfg: ModelConfig, *, caches=None, mode="train",
         io = BlockIO(cache=cache_l, window=win, cross_kv=ckv)
         x, new_cache, aux = _apply_block(layer_p, x, cfg, io, kind=kind,
                                          mode=mode, causal=causal,
-                                         positions=positions)
+                                         positions=positions,
+                                         pad_mask=pad_mask)
         if has_cache:
             cache_stack = jax.tree_util.tree_map(
                 lambda c, n: jax.lax.dynamic_update_index_in_dim(
@@ -393,7 +397,10 @@ def forward_train(params, cfg: ModelConfig, tokens=None, input_embeds=None,
 # -- serving ------------------------------------------------------------------
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                per_slot: bool = False):
+    """Decode-state pytree.  ``per_slot=True`` gives every batch row its own
+    KV position counter (continuous batching: rows join/leave mid-flight)."""
     kind = layer_kind(cfg)
     L = cfg.n_layers
     n_scan = L - (cfg.moe.first_k_dense if cfg.moe else 0)
@@ -405,7 +412,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
 
     if kind == "rwkv":
         return stacked(lambda: rwkv_mod.init_rwkv_state(cfg, batch), n_scan)
-    kv = lambda: attn_mod.init_kv_cache(cfg, batch, max_len)
+    kv = lambda: attn_mod.init_kv_cache(cfg, batch, max_len,
+                                        per_slot=per_slot)
     if kind == "hybrid":
         return stacked(lambda: {"kv": kv(), "ssm": ssm_mod.init_ssm_state(cfg, batch)}, n_scan)
     caches = stacked(kv, n_scan)
@@ -416,8 +424,16 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def prefill(params, cfg: ModelConfig, tokens=None, input_embeds=None,
-            enc_embeds=None, caches=None, positions=None):
-    """Process the prompt, fill caches, return logits of the LAST position."""
+            enc_embeds=None, caches=None, positions=None, pad_mask=None,
+            last_pos=None):
+    """Process the prompt, fill caches, return logits of the LAST position.
+
+    ``pad_mask`` (B, S) bool, True = real token: pad key positions are
+    masked out of every attention softmax and the cache records each row's
+    valid span, so neither the prefill logits nor later decode steps attend
+    padding.  ``last_pos`` (B,) int32 selects each row's own last REAL
+    position for the returned logits (right-padded rows); default is the
+    final array position (correct for unpadded and left-padded prompts)."""
     x = _inputs_to_embeds(params, cfg, tokens, input_embeds)
     cross_kv = None
     if cfg.encdec:
@@ -425,8 +441,13 @@ def prefill(params, cfg: ModelConfig, tokens=None, input_embeds=None,
         cross_kv = _cross_kv_per_layer(params, enc_out, cfg)
     x, caches, _ = run_stack(params, x, cfg, caches=caches, mode="prefill",
                              causal=True, positions=positions,
-                             cross_kv=cross_kv)
-    return logits_from_hidden(params, x[:, -1:], cfg), caches
+                             cross_kv=cross_kv, pad_mask=pad_mask)
+    if last_pos is not None:
+        x = jnp.take_along_axis(
+            x, last_pos.astype(jnp.int32)[:, None, None], axis=1)
+    else:
+        x = x[:, -1:]
+    return logits_from_hidden(params, x, cfg), caches
 
 
 def decode_step(params, cfg: ModelConfig, token, caches, enc_out=None,

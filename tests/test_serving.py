@@ -1,0 +1,320 @@
+"""Continuous-batching serving runtime (``repro.core.serving``).
+
+Differential suite: the rolling-batch scheduler's per-request tokens must
+equal a sequential single-request run — across join/leave churn, wildly
+different ``max_new``, occupancy 1..batch, and an empty queue — plus the
+zero-retrace guarantee across occupancy changes (mozart driver), the
+padded-vs-unpadded prefill parity regression (the left-pad bugfix in
+``launch/serve.py``), thread-safe per-call pipeline stats, and the
+``bucket`` label's plan-cache round trip.
+"""
+
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core import mozart, plan_cache
+from repro.core import annotated_numpy as anp
+from repro.core.serving import (AsyncServer, ContinuousBatcher, ServeRequest,
+                                _bucket_for, _pow2_buckets)
+from repro.models import transformer as tfm
+
+ARCH = "internlm2-20b"            # dense rows: batched == per-row exactly
+MAX_LEN = 48
+
+#: (prompt_len, max_new) — mixed lengths exercise both length buckets,
+#: mixed max_new forces join/leave churn (slots free at different steps),
+#: the trailing singles drive occupancy through 1..batch.
+SPECS = [(5, 3), (9, 7), (6, 2), (3, 5), (8, 4), (9, 1)]
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config(ARCH)
+    params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+               for p, _ in SPECS]
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def reference(model):
+    """Greedy tokens per request from sequential unpadded batch-1 runs."""
+    cfg, params, prompts = model
+
+    def one(prompt, max_new):
+        caches = tfm.init_caches(cfg, 1, MAX_LEN)
+        logits, caches = tfm.prefill(params, cfg,
+                                     tokens=jnp.asarray(prompt[None]),
+                                     caches=caches)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out = [int(tok[0, 0])]
+        while len(out) < max_new:
+            logits, caches = tfm.decode_step(params, cfg, tok, caches)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+        return out
+
+    return [one(p, n) for p, (_, n) in zip(prompts, SPECS)]
+
+
+def _requests(batcher, prompts):
+    return [batcher.make_request(p, n) for p, (_, n) in zip(prompts, SPECS)]
+
+
+# ---------------------------------------------------------------------------
+# Differential: scheduler tokens == sequential single-request tokens
+# ---------------------------------------------------------------------------
+
+
+class TestSchedulerDifferential:
+    def test_join_leave_churn_matches_sequential(self, model, reference):
+        """Six requests through two slots: every admission joins mid-flight
+        of another request's decode, every finish frees a slot early."""
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=2, max_len=MAX_LEN,
+                              driver="jit")
+        reqs = _requests(b, prompts)
+        stats = b.run(reqs)
+        assert [r.out for r in reqs] == reference
+        assert stats["completed"] == len(SPECS)
+        assert all(r.finished for r in reqs)
+        # churn actually happened: more admissions than one batch fill
+        assert stats["prefill_calls"] >= 3
+        # slots went below full occupancy at the tail (max_new=1 leaves)
+        assert 1 <= min(b.occupancy) <= stats["mean_occupancy"] <= 2
+
+    def test_occupancy_one_to_batch(self, model, reference):
+        """A single request (occupancy 1 of 4) still matches, as does a
+        full house; idle slots decode dead air harmlessly."""
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=4, max_len=MAX_LEN,
+                              driver="jit")
+        r = b.make_request(prompts[1], SPECS[1][1])
+        b.run([r])
+        assert r.out == reference[1]
+        reqs = _requests(b, prompts)
+        b.run(reqs)
+        assert [r.out for r in reqs] == reference
+
+    def test_empty_queue(self, model):
+        cfg, params, _ = model
+        b = ContinuousBatcher(cfg, params, batch=2, max_len=MAX_LEN,
+                              driver="jit")
+        stats = b.run([])
+        assert stats["tokens"] == 0
+        assert stats["decode_steps"] == 0
+        assert b.step() is False          # idle: nothing queued, no slots
+
+    def test_rejects_oversized_and_empty_generation(self, model):
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=2, max_len=MAX_LEN,
+                              driver="jit")
+        with pytest.raises(ValueError, match="max_new"):
+            b.submit(b.make_request(prompts[0], 0))
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            b.submit(b.make_request(prompts[0], MAX_LEN))
+
+    def test_async_front_end(self, model, reference):
+        """Concurrent coroutines multiplex into one rolling batch."""
+        import asyncio
+
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=2, max_len=MAX_LEN,
+                              driver="jit")
+
+        async def client(server, i):
+            return await server.generate(prompts[i], SPECS[i][1])
+
+        async def main():
+            with AsyncServer(b) as server:
+                return await asyncio.gather(
+                    *(client(server, i) for i in range(len(SPECS))))
+
+        outs = asyncio.run(main())
+        assert outs == reference
+
+
+# ---------------------------------------------------------------------------
+# Zero retraces across occupancy churn (mozart driver)
+# ---------------------------------------------------------------------------
+
+
+def test_mozart_warm_zero_retrace_across_occupancy(model, reference):
+    cfg, params, prompts = model
+    b = ContinuousBatcher(cfg, params, batch=2, max_len=MAX_LEN,
+                          driver="mozart")
+    b.warmup(max_prompt_len=max(p for p, _ in SPECS))
+    reqs = _requests(b, prompts)
+    stats = b.run(reqs)
+    assert [r.out for r in reqs] == reference
+    # occupancy moved (joins, leaves, dead-air tail) yet nothing replanned
+    # or retraced: every step replayed a pinned per-bucket executable.
+    assert stats["planner_calls"] == 0, stats
+    assert stats["jit_traces"] == 0, stats
+    assert stats["warm"] is True
+    assert ("decode", 2) in b._decode.buckets
+    prefill_buckets = set(b._prefill.buckets)
+    assert {("prefill", 1, 8), ("prefill", 2, 8),
+            ("prefill", 1, 16), ("prefill", 2, 16)} <= prefill_buckets
+    # per-bucket plan entries are distinct pins, each bucket-labelled
+    entries = {b._prefill.buckets[k].uid for k in prefill_buckets}
+    assert len(entries) == len(prefill_buckets)
+    for k in prefill_buckets:
+        assert tuple(b._prefill.buckets[k].bucket) == k
+
+
+# ---------------------------------------------------------------------------
+# Satellite regression: prefill must not attend left-pad tokens
+# ---------------------------------------------------------------------------
+
+
+def test_padded_prefill_matches_unpadded(model, reference):
+    """The fixed-group server left-pads prompts to a common length; with the
+    pad mask threaded through prefill, the padded batch's tokens must equal
+    the unpadded single-request run (before the fix, pad keys polluted the
+    KV cache and the first argmax)."""
+    cfg, params, prompts = model
+    plens = [len(p) for p in prompts[:2]]
+    S = max(plens)
+    padded = np.stack([np.pad(p, (S - len(p), 0)) for p in prompts[:2]])
+    mask = np.stack([np.arange(S) >= S - len(p) for p in prompts[:2]])
+    caches = tfm.init_caches(cfg, 2, MAX_LEN)
+    logits, caches = tfm.prefill(params, cfg,
+                                 tokens=jnp.asarray(padded, jnp.int32),
+                                 caches=caches, pad_mask=jnp.asarray(mask))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    got = [[int(t)] for t in np.asarray(tok)[:, 0]]
+    for _ in range(max(SPECS[0][1], SPECS[1][1]) - 1):
+        logits, caches = tfm.decode_step(params, cfg, tok, caches)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        for i, t in enumerate(np.asarray(tok)[:, 0]):
+            got[i].append(int(t))
+    for i in range(2):
+        n = SPECS[i][1]
+        assert got[i][:n] == reference[i][:n], f"rid{i} pad pollution"
+
+
+def test_fixed_group_server_parity(model, reference):
+    """End-to-end: the legacy fixed-group Server (left-pad + mask) produces
+    the reference tokens for mixed-length prompts within one group."""
+    from repro.launch.serve import Request, Server
+    cfg, params, prompts = model
+    srv = Server(cfg, params, batch=2, max_len=MAX_LEN, driver="jit",
+                 mode="fixed")
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=SPECS[i][1])
+            for i in range(len(SPECS))]
+    srv.run(reqs)
+    assert [r.out for r in reqs] == reference
+
+
+# ---------------------------------------------------------------------------
+# Satellite: thread-safe per-call pipeline stats
+# ---------------------------------------------------------------------------
+
+
+def _saxpy_chain(x):
+    return anp.multiply(anp.add(x, 1.0), 0.5)
+
+
+def test_call_with_stats_is_atomic_under_concurrency():
+    """Two threads hammering one pipeline: each call's delta is its own
+    (lock held across call + read), warm calls all report zero planner
+    calls, and no torn read mixes another call's stats in."""
+    x = jnp.linspace(0.0, 1.0, 8192, dtype=jnp.float32)
+    p = mozart.pipeline(_saxpy_chain, executor="fused")
+    p.lower(x).compile()
+    assert p.warm()
+
+    deltas, errors = [], []
+
+    def worker():
+        try:
+            for _ in range(10):
+                out, delta = p.call_with_stats(x)
+                np.testing.assert_allclose(np.asarray(out),
+                                           (np.asarray(x) + 1.0) * 0.5,
+                                           rtol=1e-6)
+                deltas.append(delta)
+        except Exception as e:            # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(deltas) == 40
+    for d in deltas:
+        assert d.get("planner_calls", 0) == 0
+        assert d["jit_traces"] == 0
+
+
+def test_last_call_stats_property_returns_snapshot():
+    x = jnp.linspace(0.0, 1.0, 4096, dtype=jnp.float32)
+    p = mozart.pipeline(_saxpy_chain, executor="fused")
+    p.lower(x).compile()
+    snap = p.last_call_stats
+    snap["planner_calls"] = 999           # mutating the copy is harmless
+    assert p.last_call_stats.get("planner_calls", 0) != 999
+
+
+# ---------------------------------------------------------------------------
+# Bucket labels persist through the plan cache (schema v5)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_label_round_trips_through_plan_cache(tmp_path):
+    path = os.fspath(tmp_path / "plans.json")
+    x = jnp.linspace(0.0, 1.0, 4096, dtype=jnp.float32)
+    p = mozart.pipeline(_saxpy_chain, executor="fused",
+                        plan_cache_path=path)
+    p.lower(x)
+    p.compile(bucket=("prefill", 2, 16))
+    assert p.buckets == {("prefill", 2, 16): p.plan_entry}
+    assert p.plan_entry.bucket == ("prefill", 2, 16)
+    plan_cache.save(path, force=True)
+
+    payload = json.load(open(path))
+    assert payload["schema"] == 5
+    plan_cache.clear()
+    assert plan_cache.load(path) >= 1
+    entry = [e for e in plan_cache.entries() if e.bucket is not None]
+    assert entry and entry[0].bucket == ("prefill", 2, 16)
+
+
+def test_v4_plan_file_migrates_without_bucket(tmp_path):
+    path = os.fspath(tmp_path / "plans.json")
+    x = jnp.linspace(0.0, 1.0, 4096, dtype=jnp.float32)
+    p = mozart.pipeline(_saxpy_chain, executor="fused")
+    p.lower(x).compile()
+    plan_cache.save(path, force=True)
+    payload = json.load(open(path))
+    payload["schema"] = 4
+    for e in payload["entries"]:
+        e.pop("bucket", None)             # a genuine pre-v5 file
+    json.dump(payload, open(path, "w"))
+    plan_cache.clear()
+    assert plan_cache.load(path) >= 1
+    assert all(e.bucket is None for e in plan_cache.entries())
+
+
+# ---------------------------------------------------------------------------
+# Bucketing helpers
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_buckets_cover_range():
+    assert _pow2_buckets(8, 48) == [8, 16, 32, 64]
+    assert _pow2_buckets(1, 4) == [1, 2, 4]
+    assert _bucket_for(5, [8, 16]) == 8
+    assert _bucket_for(9, [8, 16]) == 16
+    assert _bucket_for(99, [8, 16]) == 16   # clamp to largest
