@@ -4,13 +4,26 @@
 PYTHON ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-slow bench-smoke bench help
+.PHONY: test test-slow bench-smoke bench lint help
 
 help:
 	@echo "test        tier-1: fast, dependency-light suite (pytest -m 'not slow')"
 	@echo "test-slow   full suite including @slow (multi-device subprocesses, train loops)"
 	@echo "bench-smoke executor-parity + plan-cache smoke; exits nonzero on mismatch"
 	@echo "bench       full benchmark harness at --quick sizes"
+	@echo "lint        Mozart annotation verifier (zero MZ errors) + ruff if installed"
+
+# Annotation verifier gate: split-type laws, SA condition over every
+# annotated op, example-pipeline dataflow analysis, config registry — zero
+# MZ errors or nonzero exit.  The ruff leg is best-effort: it runs only
+# where ruff is installed (CI installs it; the pinned local env may not).
+lint:
+	$(PYTHON) -m repro.launch.lint
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src; \
+	else \
+		echo "ruff not installed; skipping style check"; \
+	fi
 
 test:
 	$(PYTHON) -m pytest -x -q

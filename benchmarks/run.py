@@ -496,6 +496,98 @@ print(json.dumps({
     if serving_failures:
         failures.append(f"serving:{serving_failures}")
 
+    # -- sanitize: boundary sanitizer stays quiet on a clean handoff chain --
+    # Subprocess so MOZART_SANITIZE=1 is scoped to the row: a 3-stage
+    # handoff chain (exp -> add -> multiply -> sum) runs cold + warm on the
+    # fused executor with every MZ3xx boundary check armed (use-after-donate
+    # poisoning, stream-tiling validation, scoped-counter cross-checks).
+    # Gates: value parity vs numpy and zero SanitizerError violations.
+    _SANITIZE_ROW = r'''
+import warnings; warnings.filterwarnings("ignore")
+import json, time
+import numpy as np, jax.numpy as jnp
+from repro.core import mozart
+from repro.core import annotated_numpy as anp
+from repro.core.stage_exec import SanitizerError, sanitize_active
+
+n = 200_000
+x = jnp.linspace(0.1, 2.0, n, dtype=jnp.float32)
+y = jnp.linspace(0.2, 1.0, n, dtype=jnp.float32)
+
+def chain():
+    with mozart.session(executor="fused", handoff=True) as ctx:
+        a = anp.exp(x)
+        mozart.evaluate()                # stage boundary: streamed handoff
+        b = anp.add(a, y)
+        mozart.evaluate()                # second boundary (donated chunks)
+        c = anp.multiply(b, 0.5)
+        out = float(np.asarray(anp.sum(c)))
+    return out, ctx
+
+violations = []
+try:
+    chain()                              # cold: plan + sanitized run
+    t0 = time.perf_counter()
+    out, ctx = chain()                   # warm: sanitized handoff replay
+    us = (time.perf_counter() - t0) * 1e6
+except SanitizerError as e:
+    violations.append(str(e)); out, us, ctx = float("nan"), 0.0, None
+xs, ys = np.asarray(x), np.asarray(y)
+want = float(((np.exp(xs) + ys) * 0.5).sum())
+print(json.dumps({
+    "armed": bool(sanitize_active()),
+    "parity": bool(np.isfinite(out) and abs(out - want) <= 1e-2 * abs(want)),
+    "violations": violations,
+    "us": us,
+    "interior": int(ctx.counters.bytes_interior()) if ctx else -1,
+    "donated": int(ctx.stats.get("donated_chunks", 0)) if ctx else -1,
+}))
+'''
+
+    def sanitize_row() -> dict | None:
+        env = dict(os.environ)
+        env["MOZART_SANITIZE"] = "1"
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (env.get("PYTHONPATH"),
+                        os.path.join(os.path.dirname(
+                            os.path.dirname(os.path.abspath(__file__))), "src"))
+            if p)
+        proc = _subprocess.run(
+            [sys.executable, "-c", _SANITIZE_ROW],
+            env=env, capture_output=True, text=True, timeout=900)
+        if proc.returncode != 0:
+            print(f"smoke/sanitize subprocess failed:\n{proc.stderr}",
+                  file=sys.stderr)
+            return None
+        return _json.loads(proc.stdout.strip().splitlines()[-1])
+
+    zrow = sanitize_row()
+    sanitize_failures = []
+    if zrow is None:
+        sanitize_failures.append("subprocess")
+        record("smoke/sanitize", 0.0, "SUBPROCESS_FAILED")
+    else:
+        if not zrow["armed"]:
+            sanitize_failures.append("not_armed")
+        if not zrow["parity"]:
+            sanitize_failures.append("parity")
+        if zrow["violations"]:
+            print("smoke/sanitize: boundary sanitizer tripped:\n" +
+                  "\n".join(f"  - {v}" for v in zrow["violations"]),
+                  file=sys.stderr)
+            sanitize_failures.append(f"violations={len(zrow['violations'])}")
+        record("smoke/sanitize", zrow["us"],
+               f"armed={zrow['armed']};violations={len(zrow['violations'])};"
+               f"interior={zrow['interior']};donated={zrow['donated']};"
+               f"{'ok' if not sanitize_failures else 'TRIPPED'}",
+               extra={
+                   "violations": zrow["violations"],
+                   "interior_bytes": int(zrow["interior"]),
+                   "donated_chunks": int(zrow["donated"]),
+               })
+    if sanitize_failures:
+        failures.append(f"sanitize:{sanitize_failures}")
+
     # -- AOT pipeline: warm calls do ZERO planner calls and ZERO retraces ---
     plan_cache.clear()
     p = mozart.pipeline(lambda: w.black_scholes(**d), executor="auto")

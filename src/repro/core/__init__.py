@@ -13,6 +13,7 @@ Public API:
 """
 
 from repro.core import runtime as mozart
+from repro.core.analysis import CODES, Diagnostic, Report, verify
 from repro.core.annotation import SA, AnnotatedFn, annotate, splittable
 from repro.core.future import Future
 from repro.core.pipeline import Pipeline
@@ -59,4 +60,5 @@ __all__ = [
     "default_split_type", "_",
     "ChunkStream", "StageExecutor", "available_executors", "bytes_materialized",
     "get_executor", "register_executor",
+    "CODES", "Diagnostic", "Report", "verify",
 ]

@@ -140,3 +140,20 @@ def blur(img, radius: int = 2):
     out = jax.lax.conv_general_dilated(
         x, kern.transpose(2, 3, 0, 1), (1, 1), "SAME")
     return out.reshape(3, *img.shape[:2]).transpose(1, 2, 0)
+
+
+def __probe_examples__(n: int = 12) -> dict[str, object]:
+    """Tiny concrete inputs per op for the annotation contract checker."""
+    img = (jnp.arange(n * 5 * 3, dtype=jnp.float32).reshape(n, 5, 3)
+           / float(n * 5 * 3))
+    return {
+        "colortone": {"img": img, "color": (0.2, 0.3, 0.5), "level": 0.5,
+                      "negate": True},
+        "gamma": {"img": img, "g": 2.2},
+        "modulate": {"img": img, "brightness": 120.0, "saturation": 80.0,
+                     "hue": 110.0},
+        "contrast": {"img": img, "amount": 1.5},
+        "level": {"img": img, "black": 0.1, "white": 0.9},
+        "screen_blend": {"img": img, "other": 1.0 - img},
+        "brightness_histogram": {"img": img},
+    }

@@ -63,6 +63,9 @@ class CorpusSplit(st.SplitType):
         return Corpus(value.tokens[start:end], value.lengths[start:end])
 
     def merge(self, pieces: Sequence[Corpus]) -> Corpus:
+        st._require_pieces(pieces, self.name)
+        if len(pieces) == 1:
+            return pieces[0]
         return Corpus(jnp.concatenate([p.tokens for p in pieces]),
                       jnp.concatenate([p.lengths for p in pieces]))
 
@@ -139,3 +142,17 @@ def make_corpus(n_docs: int, max_len: int = 64, vocab: int = 1000,
     lengths = r.randint(4, max_len, n_docs).astype(np.int32)
     toks = r.randint(0, vocab, (n_docs, max_len)).astype(np.int32)
     return Corpus(jnp.asarray(toks), jnp.asarray(lengths))
+
+
+def __probe_examples__(n: int = 12) -> dict[str, Any]:
+    """Tiny concrete inputs per op for the annotation contract checker."""
+    vocab, d, tags = 50, 4, 5
+    corpus = make_corpus(n, max_len=8, vocab=vocab, seed=0)
+    r = np.random.RandomState(1)
+    emb = jnp.asarray(r.standard_normal((vocab, d)).astype(np.float32))
+    head = jnp.asarray(r.standard_normal((d, tags)).astype(np.float32))
+    return {
+        "pos_tag": {"corpus": corpus, "emb": emb, "head": head},
+        "token_counts": {"corpus": corpus},
+        "normalize_case": {"corpus": corpus, "vocab_size": vocab},
+    }

@@ -94,6 +94,7 @@ class TableSplit(st.SplitType):
         return Table({k: v[start:end] for k, v in value.cols.items()})
 
     def merge(self, pieces: Sequence[Table]) -> Table:
+        st._require_pieces(pieces, self.name)
         if len(pieces) == 1:
             return pieces[0]
         keys = pieces[0].cols.keys()
@@ -111,7 +112,9 @@ class GroupSplit(st.SplitType):
 
     def __init__(self, op: str, key: str, val: str):
         super().__init__(op, key, val)
-        self.op, self.key, self.val = op, key, val
+        # NOT ``self.key``/``self.val``: those would shadow SplitType.key(),
+        # breaking __eq__/__hash__ for every GroupSplit (caught by MZ107).
+        self.op, self.key_col, self.val_col = op, key, val
 
     @property
     def splittable(self) -> bool:
@@ -124,6 +127,7 @@ class GroupSplit(st.SplitType):
         raise TypeError("GroupSplit values are partials; merge first")
 
     def merge(self, pieces: Sequence[Table]) -> Table:
+        st._require_pieces(pieces, self.name)
         cat = Table({
             k: np.concatenate([np.asarray(p.cols[k]) for p in pieces])
             for k in pieces[0].cols
@@ -131,7 +135,7 @@ class GroupSplit(st.SplitType):
         # Re-aggregate the partials.  Partial columns already hold partial
         # sums/counts/extrema, so the second-level reduction is sum for
         # sum/count/mean and the op itself for max/min (associativity).
-        keys = np.asarray(cat.cols[self.key])
+        keys = np.asarray(cat.cols[self.key_col])
         uniq, inv = np.unique(keys, return_inverse=True)
 
         def resum(colname):
@@ -140,15 +144,15 @@ class GroupSplit(st.SplitType):
             return out
 
         if self.op == "sum":
-            return Table({self.key: uniq, "sum": resum("sum")})
+            return Table({self.key_col: uniq, "sum": resum("sum")})
         if self.op == "count":
-            return Table({self.key: uniq, "count": resum("count").astype(np.int64)})
+            return Table({self.key_col: uniq, "count": resum("count").astype(np.int64)})
         if self.op == "mean":
-            return Table({self.key: uniq, "mean": resum("mean"), "_cnt": resum("_cnt")})
+            return Table({self.key_col: uniq, "mean": resum("mean"), "_cnt": resum("_cnt")})
         vals = np.asarray(cat.cols[self.op], np.float64)
         out = np.full(len(uniq), -np.inf if self.op == "max" else np.inf)
         (np.maximum if self.op == "max" else np.minimum).at(out, inv, vals)
-        return Table({self.key: uniq, self.op: out})
+        return Table({self.key_col: uniq, self.op: out})
 
 
 class TableUnknown(st.UnknownSplit):
@@ -157,6 +161,7 @@ class TableUnknown(st.UnknownSplit):
     name = "unknown"
 
     def merge(self, pieces: Sequence[Table]) -> Table:
+        st._require_pieces(pieces, self.name)
         if len(pieces) == 1:
             return pieces[0]
         keys = pieces[0].cols.keys()
@@ -325,3 +330,21 @@ _join = annotate(_join_inner, name="join_inner", static=("on",),
                  left=st.Generic("S"), right=st._, ret=TableUnknownSpec())
 _join.sa.dynamic = True
 _reg("join_inner", _join)
+
+
+def __probe_examples__(n: int = 12) -> dict[str, Any]:
+    """Tiny concrete inputs per op for the annotation contract checker."""
+    t = Table({"k": jnp.asarray(np.arange(n) % 3, jnp.int32),
+               "v": jnp.linspace(0.5, 2.0, n, dtype=jnp.float32)})
+    right = Table({"k": jnp.asarray([0, 1, 2], jnp.int32),
+                   "w": jnp.asarray([1.0, 2.0, 3.0], jnp.float32)})
+    return {
+        "col": {"t": t, "name": "v"},
+        "with_column": {"t": t, "name": "v2",
+                        "values": jnp.linspace(1.0, 3.0, n, dtype=jnp.float32)},
+        "select": {"t": t, "names": ("k",)},
+        "filter_rows": {"t": t, "mask": jnp.asarray(np.arange(n) % 2 == 0)},
+        "groupby_agg": [{"t": t, "key": "k", "val": "v", "op": op}
+                        for op in ("sum", "count", "mean", "max", "min")],
+        "join_inner": {"left": t, "right": right, "on": "k"},
+    }

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import weakref
 from typing import Any, Callable, Sequence
 
 import jax
@@ -29,6 +30,19 @@ import jax
 from repro.core import split_types as st
 from repro.core.future import Future
 from repro.core.graph import NodeRef
+
+#: every live AnnotatedFn, for the contract checker (``core/analysis.py``):
+#: module-level annotated APIs register themselves at decoration time, so a
+#: full-repo sweep needs no per-module enumeration.  Weak so short-lived
+#: test/bench annotations do not accumulate.
+_REGISTERED_FNS: "weakref.WeakSet[AnnotatedFn]" = weakref.WeakSet()
+
+
+def registered_fns() -> list["AnnotatedFn"]:
+    """All live AnnotatedFns, deterministically ordered."""
+    return sorted(_REGISTERED_FNS,
+                  key=lambda f: (getattr(f.fn, "__module__", "") or "",
+                                 f.name))
 
 
 class SA:
@@ -62,6 +76,7 @@ class AnnotatedFn:
         self.signature = inspect.signature(fn)
         self._jitted: Callable | None = None
         self._aval_cache: dict[tuple, Any] = {}
+        _REGISTERED_FNS.add(self)
 
     # -- plain execution ----------------------------------------------------
     @property

@@ -216,6 +216,33 @@ def _stage_count(stage: Stage) -> int | None:
     return None
 
 
+def edge_fallback_reason(pt: st.SplitType, ct: st.SplitType,
+                         stage_count: int | None = None) -> str | None:
+    """Why a producer→consumer edge cannot stream, or None when it can.
+
+    The exact conjunction ``analyze`` tests per edge, decomposed so callers
+    that need to *explain* a merge+re-split fallback (the MZ203 diagnostic
+    in ``core/analysis.py``, the runtime fallback events in
+    ``stage_exec.resolve_stage_inputs``) report the failing conjunct
+    instead of a bare verdict."""
+    if not ct.splittable:
+        return f"unsplittable consumer type ({type(ct).__name__})"
+    if not _streamable_out(pt, stage_count):
+        if isinstance(pt, (st.ArraySplit, st.PytreeSplit)):
+            return ("producer chunk grid does not ride the stage's "
+                    "iteration grid (extent {} vs stage count {})".format(
+                        pt.shape[pt.axis] if isinstance(pt, st.ArraySplit)
+                        else pt.length, stage_count))
+        return f"non-streamable producer type ({type(pt).__name__})"
+    if not pt.can_handoff(ct):
+        pa = getattr(pt, "axis", None)
+        ca = getattr(ct, "axis", None)
+        if pa is not None and ca is not None and pa != ca:
+            return f"axis mismatch (producer axis {pa}, consumer axis {ca})"
+        return f"geometry mismatch ({pt} cannot hand off to {ct})"
+    return None
+
+
 def analyze(stages: list[Stage],
             executor: str | None = None) -> dict[int, StageHandoff]:
     """Per-stage handoff decisions for one planned evaluation.
@@ -259,9 +286,8 @@ def analyze(stages: list[Stage],
             if ps.id == s.id:
                 continue                           # self-edge: internal value
             pt = ps.out_types[v.node_id]
-            ok = (_streamable_out(pt, _stage_count(ps))
-                  and pt.can_handoff(si.split_type)
-                  and si.split_type.splittable)
+            ok = edge_fallback_reason(
+                pt, si.split_type, _stage_count(ps)) is None
             accepts.setdefault(v.node_id, []).append(ok)
             if ok:
                 edges[(s.id, i)] = v.node_id

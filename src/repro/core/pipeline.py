@@ -441,6 +441,23 @@ class Pipeline:
                 f"chosen_exec={dict(e.chosen_exec)}, "
                 f"executables={sorted(e.exec_table())}")
 
+    def verify(self, *args, **kwargs):
+        """Static analysis of this pipeline (never executes it): trace with
+        the given example arguments — or the ones ``lower()`` saw — and run
+        the Mozart dataflow analyzer (``repro.core.analysis``, MZ2xx codes)
+        under this Pipeline's configuration.  Returns an
+        ``analysis.Report``."""
+        from repro.core import analysis
+        self._require_fn()
+        if not args and not kwargs and self._example is not None:
+            args, kwargs = self._example
+        c = self.ctx
+        return analysis.verify_pipeline(
+            lambda *a: self.fn(*a, **kwargs), *args,
+            executor=c.executor, chip=c.chip, mesh=c.mesh,
+            batch_elements=c.batch_elements, inner_executor=c.inner_executor,
+            pipeline=c.pipeline, handoff=c.handoff)
+
     def _require_fn(self) -> None:
         if self.fn is None:
             raise TypeError(

@@ -827,7 +827,12 @@ def _load(path: str) -> tuple[int, int]:
         stats["persist_missing"] += 1    # normal cold start, not an error
         return 0, 0
     except (OSError, ValueError, KeyError, TypeError):
-        stats["persist_rejected_corrupt"] += 1
+        stats["persist_corrupt"] += 1
+        return 0, 0
+    if not isinstance(raw_entries, list):
+        # Well-formed JSON, wrong shape ("entries" not a list): corrupt all
+        # the same — the per-entry loop below must never raise.
+        stats["persist_corrupt"] += 1
         return 0, 0
     if schema != SCHEMA_VERSION:
         if schema in _MIGRATABLE_SCHEMAS:

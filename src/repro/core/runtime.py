@@ -214,3 +214,12 @@ def evaluate() -> None:
     ctx = current_context()
     if ctx is not None:
         ctx.evaluate()
+
+
+def verify(target=None, *args, **kwargs):
+    """``mozart.verify()``: lint every registered split annotation, or
+    ``mozart.verify(fn, *args, executor=...)``: trace one pipeline and run
+    the dataflow analyzer over its plan.  Returns an
+    ``analysis.Report``; see ``repro.core.analysis`` for the MZ codes."""
+    from repro.core import analysis
+    return analysis.verify(target, *args, **kwargs)

@@ -31,6 +31,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _require_pieces(pieces: Sequence[Any], type_name: str) -> None:
+    """Degenerate-merge guard (lint code MZ109): ``merge([])`` has no
+    identity element for concat/fold merges, so every split type must fail
+    it with one clear error instead of whatever its library backend throws
+    (``tree_map`` with zero trees, ``pieces[0]`` IndexError, …)."""
+    if not len(pieces):
+        raise ValueError(
+            f"{type_name}.merge requires at least one piece (merge of an "
+            "empty chunk list has no identity element)")
+
+
 @dataclasses.dataclass(frozen=True)
 class RuntimeInfo:
     """Relayed to Mozart by ``info`` (paper Table 1) to size batches."""
@@ -154,6 +165,7 @@ class ScalarSplit(SplitType):
         return value                     # pointer copy in the paper
 
     def merge(self, pieces: Sequence[Any]) -> Any:
+        _require_pieces(pieces, self.name)
         return pieces[-1]
 
 
@@ -201,6 +213,7 @@ class ArraySplit(SplitType):
         return jax.lax.slice_in_dim(value, start, end, axis=self.axis)
 
     def merge(self, pieces: Sequence[Any]) -> Any:
+        _require_pieces(pieces, self.name)
         if len(pieces) == 1:
             return pieces[0]
         return jnp.concatenate(list(pieces), axis=self.axis)
@@ -245,6 +258,7 @@ class ReduceSplit(SplitType):
         raise TypeError("ReduceSplit values are partial results; merge first")
 
     def merge(self, pieces: Sequence[Any]) -> Any:
+        _require_pieces(pieces, self.name)
         op = self._OPS[self.op_name]
         out = pieces[0]
         for p in pieces[1:]:
@@ -281,6 +295,7 @@ class ConcatSplit(SplitType):
         raise TypeError("ConcatSplit values are fresh outputs; merge first")
 
     def merge(self, pieces: Sequence[Any]) -> Any:
+        _require_pieces(pieces, self.name)
         if len(pieces) == 1:
             return pieces[0]
         return jax.tree_util.tree_map(
@@ -331,6 +346,7 @@ class UnknownSplit(SplitType):
         raise TypeError("unknown-typed values cannot be re-split without a merge")
 
     def merge(self, pieces: Sequence[Any]) -> Any:
+        _require_pieces(pieces, self.name)
         if len(pieces) == 1:
             return pieces[0]
         return jnp.concatenate(list(pieces), axis=self.axis)
@@ -362,6 +378,7 @@ class PytreeSplit(SplitType):
         )
 
     def merge(self, pieces: Sequence[Any]) -> Any:
+        _require_pieces(pieces, self.name)
         if len(pieces) == 1:
             return pieces[0]
         return jax.tree_util.tree_map(
@@ -533,7 +550,13 @@ class Custom(SplitSpec):
 
 
 class Pytree(SplitSpec):
-    """PytreeSplit along ``axis`` of every leaf; length from the first leaf."""
+    """PytreeSplit along ``axis`` of every leaf, lockstep across leaves.
+
+    Every leaf must carry the SAME extent along ``axis`` — a PytreeSplit
+    split slices all leaves in lockstep, so a value whose leaves disagree
+    (lint code MZ103: the declared length would misdescribe some leaf)
+    falls back to BROADCAST and is seen whole, the same conservative
+    fallback ``planner._resolve`` uses for shape-mismatched arrays."""
 
     def __init__(self, axis: int = 0):
         self.axis = axis
@@ -542,7 +565,15 @@ class Pytree(SplitSpec):
         leaves, treedef = jax.tree_util.tree_flatten(value)
         if not leaves:
             return BROADCAST
-        return PytreeSplit(str(treedef), leaves[0].shape[self.axis], self.axis)
+        extents = set()
+        for leaf in leaves:
+            shape = tuple(getattr(leaf, "shape", ()))
+            if len(shape) <= self.axis:
+                return BROADCAST
+            extents.add(int(shape[self.axis]))
+        if len(extents) != 1:
+            return BROADCAST
+        return PytreeSplit(str(treedef), extents.pop(), self.axis)
 
 
 #: per-data-type default split constructors (paper §5.1: "annotators provide

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import os
 import threading
 import time
 from typing import Any, Callable
@@ -37,11 +38,47 @@ import jax.numpy as jnp
 from repro import hardware
 from repro.core import split_types as st
 from repro.core.graph import DataflowGraph, Node, NodeRef
-from repro.core.planner import Stage, _value_key
+from repro.core.planner import Stage, _count_of_type, _value_key
 
 
 class PedanticError(RuntimeError):
     pass
+
+
+def sanitize_active() -> bool:
+    """True when ``MOZART_SANITIZE`` is set (and not "0"): the boundary
+    sanitizer poisons donated chunk buffers, validates stream grids before
+    ingest, and cross-checks scoped counters (codes MZ301/MZ302/MZ303,
+    ``core/analysis.py``).  Read per call — tests flip it mid-process."""
+    return os.environ.get("MOZART_SANITIZE", "") not in ("", "0")
+
+
+class SanitizerError(RuntimeError):
+    """A boundary invariant the sanitizer caught red-handed (MZ3xx)."""
+
+
+class _PoisonedChunks(list):
+    """Donated chunk list stand-in under MOZART_SANITIZE=1.
+
+    Stays EMPTY (``len`` 0 keeps ``__repr__`` and consumed-first code paths
+    benign) but any attempt to read a chunk out of it — iterating or
+    indexing — raises with the donating stage/edge, instead of silently
+    handing back buffers XLA has already reused."""
+
+    def __init__(self, donor: str):
+        super().__init__()
+        self.donor = donor
+
+    def _blow(self) -> None:
+        raise SanitizerError(
+            f"[MZ301] use-after-donate: chunk buffers were donated at "
+            f"{self.donor or 'an unknown stage/edge'} and then read")
+
+    def __getitem__(self, i):
+        self._blow()
+
+    def __iter__(self):
+        self._blow()
 
 
 # ---------------------------------------------------------------------------
@@ -257,10 +294,39 @@ def counter_scope(counters: "BoundaryCounters | None"):
         yield                             # already attributed: no double count
         return
     stack.append(counters)
+    snap = None
+    if sanitize_active():
+        with _counts_lock:
+            snap = (counters.traces, counters.interior, counters.terminal,
+                    _GLOBAL_COUNTERS.traces, _GLOBAL_COUNTERS.interior,
+                    _GLOBAL_COUNTERS.terminal)
+    clean = False
     try:
         yield
+        clean = True
     finally:
         stack.remove(counters)
+        if snap is not None and clean:
+            # MZ303: every event lands on the global aggregate AND every
+            # active scope under one lock, so a scope can never see MORE
+            # than the global did over the same window.  (Other threads may
+            # inflate the global side; that is fine and expected.)
+            with _counts_lock:
+                deltas = (
+                    ("traces", counters.traces - snap[0],
+                     _GLOBAL_COUNTERS.traces - snap[3]),
+                    ("interior", counters.interior - snap[1],
+                     _GLOBAL_COUNTERS.interior - snap[4]),
+                    ("terminal", counters.terminal - snap[2],
+                     _GLOBAL_COUNTERS.terminal - snap[5]),
+                )
+            for field, scoped, global_ in deltas:
+                if scoped > global_:
+                    raise SanitizerError(
+                        f"[MZ303] scoped BoundaryCounters recorded more "
+                        f"{field} ({scoped}) than the process-global "
+                        f"aggregate ({global_}) over the same scope — "
+                        "counter attribution is corrupt")
 
 
 #: guards counter increments: concurrent pipelines (the serving scheduler's
@@ -338,8 +404,9 @@ def _value_nbytes(v: Any) -> int:
 #: should make this unreachable; it stays as the runtime guard of last
 #: resort and its text is asserted by tests/test_handoff.py.
 DONATED_MERGE_ERROR = (
-    "ChunkStream buffers were donated to a driver and can no longer be "
-    "merged (handoff analysis bug: a donated stream was observed afterwards)")
+    "[MZ301] ChunkStream buffers were donated to a driver and can no longer "
+    "be merged (handoff analysis bug: a donated stream was observed "
+    "afterwards)")
 
 
 class ChunkStream:
@@ -368,7 +435,7 @@ class ChunkStream:
     """
 
     __slots__ = ("_chunks", "ranges", "split_type", "aval", "_merged",
-                 "consumed", "stacked", "tail", "sharded", "sharding")
+                 "consumed", "donor", "stacked", "tail", "sharded", "sharding")
 
     def __init__(self, chunks: list | None, ranges: list,
                  split_type: st.SplitType, aval: Any):
@@ -378,6 +445,7 @@ class ChunkStream:
         self.aval = aval                   # full-value ShapeDtypeStruct pytree
         self._merged = None
         self.consumed = False              # chunk buffers donated to a driver
+        self.donor = ""                    # "stage N input K" that donated them
         self.stacked = None                # (n_chunks, batch, …) carry layout
         self.tail = None                   # ragged tail chunk (chunk-shaped)
         self.sharded = None                # device-resident global jax.Array
@@ -514,7 +582,9 @@ class ChunkStream:
         the interior-boundary gate never charges observation costs."""
         if self._merged is None:
             if self.consumed:
-                raise RuntimeError(DONATED_MERGE_ERROR)
+                raise RuntimeError(
+                    DONATED_MERGE_ERROR
+                    + f" [donated at {self.donor or 'unknown stage/edge'}]")
             if self.sharded is not None:
                 # The global array IS the merged value; returning it is free
                 # NOW, but a non-mesh consumer forces XLA to gather/reshard
@@ -814,36 +884,90 @@ def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
     resolves, e.g. ``AutoExecutor``, whose delegate re-resolves and counts)."""
     plan = getattr(ctx, "_handoff", None)
     ho = plan.get(stage.id) if plan else None
+    sanitize = sanitize_active()
     concrete: dict[tuple, Any] = {}
     for i, (key, si) in enumerate(stage.inputs.items()):
         v = graph.resolve(si.value)
         if isinstance(v, ChunkStream):
-            ok = (streams_ok and ho is not None and i in ho.stream_in
-                  and v.compatible(si.split_type))
-            if ok and v.sharded is not None and not shard_ok:
-                ok = False
-            if ok and type(v.split_type) is not type(si.split_type):
+            reason = _stream_fallback_reason(v, si, i, ho, streams_ok,
+                                             shard_ok)
+            if reason is None and type(v.split_type) is not type(si.split_type):
                 # Grid conversion only where the PLAN permitted it — the
                 # recorded ``convert_in`` decision replays, never a fresh
                 # type-level judgement.
-                adapted = (adapt_stream(v, si.split_type)
-                           if i in getattr(ho, "convert_in", frozenset())
-                           else None)
-                if adapted is None:
-                    ok = False
+                if i in getattr(ho, "convert_in", frozenset()):
+                    adapted = adapt_stream(v, si.split_type)
+                    if adapted is None:
+                        reason = "non-tiling ConcatSplit pieces"
+                    else:
+                        v = adapted
+                        if tally:
+                            ctx.stats["stream_converted"] += 1
                 else:
-                    v = adapted
-                    if tally:
-                        ctx.stats["stream_converted"] += 1
-            if ok:
+                    reason = "grid conversion not planned"
+            if reason is None:
+                if sanitize:
+                    _check_stream_tiles(v, si.split_type,
+                                        f"stage {stage.id} input "
+                                        f"{stage.ckey(key)}")
                 if tally:
                     ctx.stats["stream_ingests"] += 1
             else:
+                if tally:
+                    # Zero-byte breadcrumb: the dataflow analyzer predicts
+                    # fallbacks from the plan (MZ203); this event records
+                    # the ones that actually happened, with the reason.
+                    note_materialized(
+                        0, kind="fallback",
+                        where=f"[MZ203] stage {stage.id} input "
+                              f"{stage.ckey(key)}: {reason}")
                 v = v.materialize()
                 if tally:
                     ctx.stats["stream_materialized"] += 1
         concrete[key] = v
     return concrete
+
+
+def _stream_fallback_reason(v: "ChunkStream", si, i: int, ho,
+                            streams_ok: bool, shard_ok: bool) -> str | None:
+    """Why this stream input must materialize, or None to ingest it.
+
+    The SAME predicate ``resolve_stage_inputs`` always applied — decomposed
+    so the fallback event (and ``core/analysis.py``) can say WHY."""
+    if not streams_ok:
+        return "stream-incapable executor"
+    if ho is None or i not in ho.stream_in:
+        return "edge not planned for streaming"
+    if v.consumed:
+        return "stream already donated"
+    if not v.split_type.can_handoff(si.split_type):
+        pa, ca = split_axis_of(v.split_type), split_axis_of(si.split_type)
+        if pa is not None and ca is not None and pa != ca:
+            return f"axis mismatch (producer axis {pa}, consumer axis {ca})"
+        return f"grid geometry mismatch ({v.split_type} vs {si.split_type})"
+    if v.sharded is not None and not shard_ok:
+        return "shard-incapable consumer"
+    return None
+
+
+def _check_stream_tiles(v: "ChunkStream", consumer_type: st.SplitType,
+                        where: str) -> None:
+    """MZ302 (MOZART_SANITIZE=1): a stream about to be ingested must carry
+    sorted, contiguous ranges tiling [0, n) — and n must match the extent
+    the consumer's split type declares.  A hole or overlap here means the
+    consumer would silently skip or double-process rows."""
+    prev = 0
+    for s, e in v.ranges:
+        if s != prev or e < s:
+            raise SanitizerError(
+                f"[MZ302] {where}: stream ranges {v.ranges} do not tile "
+                f"[0, {v.n}) (hole/overlap at ({s}, {e}))")
+        prev = e
+    expect = _count_of_type(consumer_type)
+    if expect is not None and prev != expect:
+        raise SanitizerError(
+            f"[MZ302] {where}: stream extent {prev} != consumer extent "
+            f"{expect} declared by {consumer_type}")
 
 
 # ---------------------------------------------------------------------------
@@ -916,14 +1040,27 @@ def mark_stream_consumed(stage: Stage, concrete: dict[tuple, Any], ctx,
                          consumed: "set | frozenset | tuple") -> None:
     """After real (non-copy) donation of the canonical keys in ``consumed``:
     flag the stream AND its graph-node original so a late ``materialize``
-    hits the pinned backstop error instead of returning freed buffers."""
+    hits the pinned backstop error instead of returning freed buffers.
+    Under ``MOZART_SANITIZE=1`` the chunk storage itself is also poisoned
+    (``_PoisonedChunks``): any read raises MZ301 naming this stage/edge,
+    instead of depending on every consumer checking ``consumed`` first."""
+    sanitize = sanitize_active()
     for key, si in stage.inputs.items():
         v = concrete.get(key)
         if stage.ckey(key) in consumed and isinstance(v, ChunkStream):
-            v.consumed = True              # buffers are gone: mark both the
+            donor = f"stage {stage.id} input {stage.ckey(key)}"
+            targets = [v]                  # the stream and its graph-node
             orig = ctx.graph.nodes[si.value.node_id].result
-            if isinstance(orig, ChunkStream):
-                orig.consumed = True       # original and adapted/rechunked aliases
+            if isinstance(orig, ChunkStream) and orig is not v:
+                targets.append(orig)       # original / adapted aliases
+            for t in targets:
+                t.consumed = True
+                t.donor = t.donor or donor
+                if sanitize:
+                    t._chunks = _PoisonedChunks(t.donor)
+                    t.stacked = t.tail = t.sharded = None
+            if sanitize:
+                note_materialized(0, kind="donate", where=donor)
 
 
 def materialize_inputs(stage: Stage, concrete: dict[tuple, Any],

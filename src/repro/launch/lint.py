@@ -1,0 +1,165 @@
+"""Mozart lint CLI: run the annotation verifier over the whole repo.
+
+    PYTHONPATH=src python -m repro.launch.lint [-v] [--json out.json]
+
+Three sweeps, all through ``repro.core.analysis``:
+
+* **contract** — every shipped split type against the MZ1xx laws, every
+  integration's annotated ops against the SA condition (MZ108), plus the
+  plan-cache guard audit (MZ205);
+* **examples** — representative pipelines (the same shapes as examples/:
+  numpy chain, image chain, table chain, NLP chain) traced and run through
+  the dataflow analyzer (MZ2xx) on stream-capable and chunk-loop executors;
+* **configs** — every architecture in ``configs/registry.py`` must
+  construct in both full and smoke flavors (MZ110).
+
+Exit status is nonzero iff any MZ *error* was found — warnings and info
+notes never gate (``make lint`` / CI run exactly this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analysis
+
+
+def _example_pipelines() -> list[tuple[str, Any, tuple, dict]]:
+    """(name, fn, args, config) cells mirroring the examples/ scripts.
+
+    Kept in-file (not imported from examples/) so lint never executes
+    example __main__ blocks and stays fast; the pipelines use the same ops
+    and the same stage shapes."""
+    from repro.core import annotated_image as img
+    from repro.core import annotated_nlp as nlp
+    from repro.core import annotated_numpy as anp
+    from repro.core import annotated_table as tbl
+
+    n = 64
+    x = jnp.linspace(0.1, 0.9, n, dtype=jnp.float32)
+    y = jnp.linspace(0.2, 1.1, n, dtype=jnp.float32)
+
+    def numpy_chain(x, y):                   # examples/quickstart.py shape
+        a = anp.exp(x)
+        b = anp.add(a, y)
+        c = anp.multiply(b, 0.5)
+        return anp.sum(c)
+
+    im = (jnp.arange(n * 8 * 3, dtype=jnp.float32).reshape(n, 8, 3)
+          / float(n * 8 * 3))
+
+    def image_chain(im):                     # examples/image_pipeline.py shape
+        a = img.colortone(im, (0.2, 0.3, 0.5), 0.5, True)
+        b = img.gamma(a, 2.2)
+        return img.contrast(b, 1.4)
+
+    t = tbl.Table({"k": jnp.asarray(np.arange(n) % 5, jnp.int32),
+                   "v": jnp.linspace(0.5, 2.0, n, dtype=jnp.float32)})
+
+    def table_chain(t):
+        t2 = tbl.with_column(t, "v2",
+                             jnp.linspace(1.0, 3.0, n, dtype=jnp.float32))
+        f = tbl.filter_rows(t2, jnp.asarray(np.arange(n) % 2 == 0))
+        return tbl.groupby_agg(f, "k", "v", "sum")
+
+    corpus = nlp.make_corpus(n, max_len=16, vocab=50, seed=0)
+    r = np.random.RandomState(1)
+    emb = jnp.asarray(r.standard_normal((50, 8)).astype(np.float32))
+    head = jnp.asarray(r.standard_normal((8, 5)).astype(np.float32))
+
+    def nlp_chain(corpus):
+        c = nlp.normalize_case(corpus, 50)
+        tags = nlp.pos_tag(c, emb, head)
+        return anp.sum(tags), nlp.token_counts(c)
+
+    cells = []
+    for executor in ("fused", "scan"):
+        cells.append((f"numpy_chain/{executor}", numpy_chain, (x, y),
+                      {"executor": executor}))
+    cells.append(("image_chain/fused", image_chain, (im,),
+                  {"executor": "fused"}))
+    cells.append(("table_chain/fused", table_chain, (t,),
+                  {"executor": "fused"}))
+    cells.append(("nlp_chain/fused", nlp_chain, (corpus,),
+                  {"executor": "fused"}))
+    cells.append(("numpy_chain/eager-nopipe", numpy_chain, (x, y),
+                  {"executor": "eager", "pipeline": False}))
+    return cells
+
+
+def check_examples() -> analysis.Report:
+    rep = analysis.Report()
+    for name, fn, args, config in _example_pipelines():
+        sub = analysis.verify_pipeline(fn, *args, **config)
+        for d in sub.diagnostics:
+            rep.diagnostics.append(analysis.Diagnostic(
+                d.code, d.severity, f"{name}: {d.subject}", d.message,
+                d.where))
+        rep.checked += 1
+    return rep
+
+
+def check_configs() -> analysis.Report:
+    from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+
+    rep = analysis.Report()
+    for aid in ARCH_IDS:
+        rep.checked += 1
+        for flavor, getter in (("config", get_config),
+                               ("smoke_config", get_smoke_config)):
+            try:
+                getter(aid)
+            except Exception as e:  # noqa: BLE001 - the raise is the finding
+                rep.diagnostics.append(analysis.Diagnostic(
+                    "MZ110", "error", f"configs.{aid}",
+                    f"{flavor}() raised {type(e).__name__}: {e}"))
+    return rep
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.lint",
+        description="Mozart annotation verifier (zero-MZ-error gate)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="show info-severity notes too")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also dump the structured report as JSON")
+    ap.add_argument("--skip-contract", action="store_true",
+                    help="skip the split-type/annotated-op law sweep")
+    ap.add_argument("--skip-examples", action="store_true",
+                    help="skip the example-pipeline dataflow sweep")
+    ap.add_argument("--skip-configs", action="store_true",
+                    help="skip the architecture-config construction sweep")
+    ap.add_argument("--plan-cache", metavar="PATH", default=None,
+                    help="persisted plan-cache file to audit (MZ205)")
+    args = ap.parse_args(argv)
+
+    rep = analysis.Report()
+    if not args.skip_contract:
+        print("== contract: split-type laws + SA condition ==")
+        rep.extend(analysis.check_split_types())
+        rep.extend(analysis.check_annotated_ops())
+        rep.extend(analysis.check_plan_cache(args.plan_cache))
+    if not args.skip_examples:
+        print("== examples: pipeline dataflow analysis ==")
+        rep.extend(check_examples())
+    if not args.skip_configs:
+        print("== configs: registry construction ==")
+        rep.extend(check_configs())
+
+    print(rep.render(verbose=args.verbose))
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(rep.to_json(), f, indent=2)
+        print(f"wrote {args.json}")
+    return 0 if rep.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,362 @@
+"""Verifier tests: the law matrix, seeded mutants, dataflow analysis, and
+the MOZART_SANITIZE boundary checks.
+
+The MZ1xx property suite is NOT hand-written per law: it parameterizes over
+``analysis.CONTRACT_LAWS`` x ``analysis.builtin_probes()`` — the exact list
+the linter sweeps — so adding a law (or a probe) to analysis.py grows this
+suite automatically.  The mutant tests then prove each law has teeth by
+feeding it a deliberately broken SplitType and pinning the MZ code it must
+emit."""
+
+import json
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analysis
+from repro.core import annotated_numpy as anp
+from repro.core import annotated_table as tbl
+from repro.core import mozart, plan_cache, stage_exec
+from repro.core import split_types as st
+from repro.core.annotation import annotate
+from repro.core.graph import NodeRef
+
+PROBES = analysis.builtin_probes()
+
+
+def _error_codes(diags):
+    return {d.code for d in diags if d.severity == "error"}
+
+
+# ---------------------------------------------------------------------------
+# The law matrix: every contract law against every shipped probe.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("law", analysis.CONTRACT_LAWS, ids=lambda l: l.name)
+@pytest.mark.parametrize("probe", PROBES, ids=lambda p: p.name)
+def test_contract_law_holds(law, probe):
+    diags = [d for d in analysis.check_split_type(probe, laws=[law])
+             if d.severity == "error"]
+    assert not diags, "\n".join(str(d) for d in diags)
+
+
+def test_laws_cover_every_contract_code():
+    """Each MZ1xx code is either a law or checked by a dedicated sweep
+    (MZ108 = check_annotated_fn, MZ110 = the config-registry sweep)."""
+    law_codes = {law.code for law in analysis.CONTRACT_LAWS}
+    contract = {c for c in analysis.CODES if c.startswith("MZ1")}
+    assert contract - law_codes == {"MZ108", "MZ110"}
+
+
+def test_builtin_sweep_has_zero_errors():
+    rep = analysis.check_split_types(probes=PROBES)
+    assert rep.ok, "\n".join(str(d) for d in rep.errors)
+    assert rep.checked == len(PROBES)
+
+
+def test_annotated_ops_sweep_has_zero_errors():
+    rep = analysis.check_annotated_ops(n=10)
+    assert rep.ok, "\n".join(str(d) for d in rep.errors)
+    assert rep.checked > 40            # every integration contributes ops
+
+
+# ---------------------------------------------------------------------------
+# Seeded mutants: each broken SplitType must trip its law's MZ code.
+# ---------------------------------------------------------------------------
+
+_N = 8
+_M = jnp.arange(_N * 3, dtype=jnp.float32).reshape(_N, 3) / (_N * 3)
+
+
+def _array_probe(split_type, **kw):
+    return analysis.Probe("mutant", split_type, value=_M,
+                          extent_of=lambda v: int(v.shape[0]), **kw)
+
+
+class _WrongAxisMerge(st.ArraySplit):
+    """Splits rows apart but glues them back as columns."""
+
+    def merge(self, chunks):
+        return jnp.concatenate([jnp.asarray(c) for c in chunks], axis=1)
+
+
+class _LossyRechunk(st.ArraySplit):
+    """Re-grids correctly, then drops the first row of every chunk."""
+
+    def rechunk(self, chunks, src, dst):
+        new, copied = super().rechunk(chunks, src, dst)
+        return [c[1:] for c in new], copied
+
+
+class _OverconfidentHandoff(st.ArraySplit):
+    """Grants handoff to any consumer grid, compatible or not."""
+
+    def can_handoff(self, consumer):
+        return True
+
+
+class _LyingReduce(st.ReduceSplit):
+    """Claims the declared combiner but always folds with addition."""
+
+    def merge(self, chunks):
+        out = jnp.asarray(chunks[0])
+        for c in chunks[1:]:
+            out = out + jnp.asarray(c)
+        return out
+
+
+class _SilentEmptyMerge(st.ArraySplit):
+    def merge(self, chunks):
+        if not chunks:
+            return jnp.zeros((0, 3), jnp.float32)
+        return super().merge(chunks)
+
+
+def test_mutant_wrong_merge_axis_trips_mz101():
+    probe = _array_probe(_WrongAxisMerge((_N, 3), 0))
+    assert "MZ101" in _error_codes(analysis.check_split_type(probe))
+
+
+def test_mutant_lossy_rechunk_trips_mz106():
+    probe = _array_probe(_LossyRechunk((_N, 3), 0))
+    assert "MZ106" in _error_codes(analysis.check_split_type(probe))
+
+
+def test_mutant_false_can_handoff_trips_mz105():
+    probe = _array_probe(
+        _OverconfidentHandoff((_N, 3), 0),
+        consumers=(st.ArraySplit((_N, 3), 1),))
+    assert "MZ105" in _error_codes(analysis.check_split_type(probe))
+
+
+def test_mutant_wrong_reduce_combiner_trips_mz104():
+    pieces = [jnp.asarray([1.0, 5.0]), jnp.asarray([4.0, 2.0])]
+    probe = analysis.Probe("mutant", _LyingReduce("max"), pieces=pieces)
+    assert "MZ104" in _error_codes(analysis.check_split_type(probe))
+
+
+def test_mutant_silent_empty_merge_trips_mz109():
+    probe = _array_probe(_SilentEmptyMerge((_N, 3), 0))
+    diags = analysis.check_split_type(probe)
+    assert any(d.code == "MZ109" and d.severity == "warning" for d in diags)
+
+
+def test_sa_condition_catches_unchunkable_function():
+    """cumsum annotated Along(0) is a lie: each chunk's prefix sums ignore
+    the rows before it, so F(a) != merge(F(a1..ak)) -> MZ108."""
+    bad = annotate(lambda x: jnp.cumsum(x), name="bad_cumsum",
+                   x=st.Along(0), ret=st.Along(0))
+    diags = analysis.check_annotated_fn(bad, {"x": jnp.arange(12.0)})
+    assert "MZ108" in _error_codes(diags)
+
+
+def test_sa_condition_accepts_chunkable_function():
+    good = annotate(lambda x: jnp.exp(x), name="good_exp",
+                    x=st.Along(0), ret=st.Along(0))
+    assert analysis.check_annotated_fn(good, {"x": jnp.arange(12.0)}) == []
+
+
+# ---------------------------------------------------------------------------
+# Regression: GroupSplit key/val must not shadow SplitType.key() (MZ107).
+# ---------------------------------------------------------------------------
+
+
+def test_group_split_params_do_not_shadow_identity():
+    a = tbl.GroupSplit("sum", "k", "v")
+    b = tbl.GroupSplit("sum", "k", "v")
+    assert a == b and len({a, b}) == 1
+    assert callable(a.key)             # still the identity method, not a str
+    probe = analysis.Probe("GroupSplit/sum", a)
+    assert analysis._law_params_round_trip(probe) == []
+
+
+# ---------------------------------------------------------------------------
+# Dataflow analyzer (MZ2xx)
+# ---------------------------------------------------------------------------
+
+
+def test_dataflow_dead_stage_and_axis_mismatch():
+    m = jnp.arange(48.0, dtype=jnp.float32).reshape(8, 6) / 48.0
+    v = jnp.linspace(0.1, 1.0, 6, dtype=jnp.float32)
+
+    def crafted(m, v):
+        a = anp.exp(m)
+        anp.log1p(a)                   # result dropped on the floor: dead
+        nm = anp.normalize_axis(a, axis=0)     # output split on axis 1
+        return anp.matvec(nm, v)               # consumer splits on axis 0
+
+    rep = analysis.verify_pipeline(crafted, m, v,
+                                   executor="eager", pipeline=False)
+    assert "MZ201" in rep.codes()
+    mismatches = [d for d in rep.diagnostics
+                  if d.code == "MZ203" and d.severity == "warning"]
+    assert any("axis mismatch" in d.message for d in mismatches)
+
+
+def test_dataflow_scalar_only_stage_is_whole_value():
+    rep = analysis.verify_pipeline(
+        lambda: anp.add(jnp.float32(1.0), jnp.float32(2.0)),
+        executor="eager", pipeline=False)
+    assert "MZ204" in rep.codes()
+
+
+def test_dataflow_clean_chain_has_no_errors():
+    x = jnp.linspace(0.1, 0.9, 16, dtype=jnp.float32)
+
+    def chain(x):
+        return anp.sum(anp.multiply(anp.exp(x), 0.5))
+
+    rep = analysis.verify_pipeline(chain, x, executor="fused")
+    assert rep.ok, "\n".join(str(d) for d in rep.errors)
+
+
+def test_verify_dispatcher():
+    x = jnp.linspace(0.1, 0.9, 16, dtype=jnp.float32)
+    rep = mozart.verify(lambda x: anp.sum(anp.exp(x)), x, executor="fused")
+    assert isinstance(rep, analysis.Report) and rep.ok
+    with pytest.raises(TypeError):
+        analysis.verify(42)
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache guard audit (MZ205)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_unreplayable_live_entry(monkeypatch):
+    from repro.core import plan_cache as pc
+
+    key = ("ghost-executor", "ghost-chip", "p", "m", "h")
+    with pc._lock:
+        pc._entries[key] = SimpleNamespace()
+    try:
+        rep = analysis.check_plan_cache()
+    finally:
+        with pc._lock:
+            pc._entries.pop(key, None)
+    assert any(d.code == "MZ205" and d.severity == "error"
+               and "ghost-executor" in d.subject for d in rep.diagnostics)
+    assert any(d.code == "MZ205" and d.severity == "warning"
+               and "chip guard" in d.message for d in rep.diagnostics)
+
+
+def test_plan_cache_persisted_file_audit(tmp_path):
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"schema": 1, "chip": "x", "entries": []}))
+    rep = analysis.check_plan_cache(str(stale))
+    assert any(d.code == "MZ205" and d.severity == "error"
+               and "schema" in d.message for d in rep.diagnostics)
+
+    broken = tmp_path / "broken.json"
+    broken.write_text('{"schema": 5, "entr')
+    rep = analysis.check_plan_cache(str(broken))
+    assert any(d.code == "MZ205" and "unreadable" in d.message
+               for d in rep.diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# Boundary sanitizer (MZ3xx, MOZART_SANITIZE=1)
+# ---------------------------------------------------------------------------
+
+
+def _stream(n=6):
+    t = st.ArraySplit((n, 2), 0)
+    x = jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2)
+    h = n // 2
+    chunks = [t.split(x, 0, h), t.split(x, h, n)]
+    return stage_exec.ChunkStream(chunks, [(0, h), (h, n)], t, st.aval_of(x)), x
+
+
+def _fake_donation(stream, orig):
+    """Minimal stage/ctx shims: just the surface mark_stream_consumed uses."""
+    node = SimpleNamespace(result=orig)
+    ctx = SimpleNamespace(graph=SimpleNamespace(nodes={11: node}))
+    si = SimpleNamespace(value=NodeRef(11), split_type=stream.split_type)
+    stage = SimpleNamespace(id=7, inputs={("x", 0): si}, ckey=lambda k: k)
+    stage_exec.mark_stream_consumed(stage, {("x", 0): stream}, ctx,
+                                    {("x", 0)})
+
+
+def test_use_after_donate_raises_mz301(monkeypatch):
+    monkeypatch.setenv("MOZART_SANITIZE", "1")
+    s, _ = _stream()
+    orig, _ = _stream()
+    _fake_donation(s, orig)
+    assert s.consumed and s.donor == "stage 7 input ('x', 0)"
+    with pytest.raises(stage_exec.SanitizerError, match=r"MZ301") as ei:
+        list(s._chunks)
+    assert "stage 7 input ('x', 0)" in str(ei.value)
+    with pytest.raises(stage_exec.SanitizerError, match=r"MZ301"):
+        orig._chunks[0]                # the graph-node alias is poisoned too
+    with pytest.raises(RuntimeError, match=r"MZ301") as ei:
+        s.materialize()
+    assert "stage 7 input ('x', 0)" in str(ei.value)
+
+
+def test_donation_not_poisoned_when_sanitize_off(monkeypatch):
+    monkeypatch.delenv("MOZART_SANITIZE", raising=False)
+    s, _ = _stream()
+    orig, _ = _stream()
+    _fake_donation(s, orig)
+    assert s.consumed                  # backstop flag always set...
+    assert len(s._chunks) == 2         # ...but the buffers stay readable
+    with pytest.raises(RuntimeError, match=r"MZ301"):
+        s.materialize()                # the pinned backstop still fires
+
+
+def test_stream_tiling_violations_raise_mz302():
+    t = st.ArraySplit((6, 2), 0)
+    s, x = _stream(6)
+    stage_exec._check_stream_tiles(s, t, "edge")       # clean: no raise
+
+    hole = stage_exec.ChunkStream(list(s._chunks), [(0, 2), (3, 6)], t,
+                                  st.aval_of(x))
+    with pytest.raises(stage_exec.SanitizerError, match=r"MZ302") as ei:
+        stage_exec._check_stream_tiles(hole, t, "stage 1 input ('x', 0)")
+    assert "do not tile" in str(ei.value)
+    assert "stage 1 input ('x', 0)" in str(ei.value)
+
+    with pytest.raises(stage_exec.SanitizerError, match=r"MZ302") as ei:
+        stage_exec._check_stream_tiles(s, st.ArraySplit((8, 2), 0), "edge")
+    assert "stream extent" in str(ei.value)
+
+
+def test_corrupt_scoped_counters_raise_mz303(monkeypatch):
+    monkeypatch.setenv("MOZART_SANITIZE", "1")
+    c = stage_exec.BoundaryCounters()
+    with pytest.raises(stage_exec.SanitizerError, match=r"MZ303"):
+        with stage_exec.counter_scope(c):
+            c.interior += 4096         # scoped bump with no global event
+
+    # Honest attribution passes the cross-check.
+    c2 = stage_exec.BoundaryCounters()
+    with stage_exec.counter_scope(c2):
+        stage_exec.note_materialized(128)
+    assert c2.interior == 128
+
+    # An exception inside the scope propagates untouched — the MZ303 check
+    # must never shadow the real failure.
+    c3 = stage_exec.BoundaryCounters()
+    with pytest.raises(ValueError, match="boom"):
+        with stage_exec.counter_scope(c3):
+            c3.interior += 1
+            raise ValueError("boom")
+
+
+def test_sanitized_handoff_chain_runs_clean(monkeypatch):
+    """End-to-end: a real donating handoff chain under MOZART_SANITIZE=1
+    completes with full parity and zero sanitizer trips."""
+    monkeypatch.setenv("MOZART_SANITIZE", "1")
+    n = 4096
+    x = jnp.linspace(0.1, 2.0, n, dtype=jnp.float32)
+    plan_cache.clear()
+    with mozart.session(executor="fused", handoff=True):
+        a = anp.exp(x)
+        mozart.evaluate()              # stage boundary: streamed + donated
+        b = anp.add(a, 1.0)
+        out = float(np.asarray(anp.sum(b)))
+    want = float((np.exp(np.asarray(x)) + 1.0).sum())
+    assert np.isclose(out, want, rtol=1e-4)

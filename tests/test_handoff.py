@@ -886,18 +886,23 @@ class TestDonationVeto:
         np.testing.assert_allclose(out, (np.asarray(x) + 1) * 0.5, rtol=1e-6)
 
     def test_runtime_backstop_message_pinned(self):
-        """The donated-stream late-merge raise stays as the backstop and its
-        message is pinned."""
+        """The donated-stream late-merge raise stays as the backstop; its
+        message is pinned and carries the MZ301 lint code plus the donating
+        stage/edge (``ChunkStream.donor``, set by mark_stream_consumed)."""
         t = st.ArraySplit((8,), 0)
         s = ChunkStream([jnp.arange(4, dtype=jnp.float32),
                          jnp.arange(4, dtype=jnp.float32)],
                         [(0, 4), (4, 8)], t,
                         jax.ShapeDtypeStruct((8,), jnp.float32))
         s.consumed = True
+        s.donor = "stage 7 input ('in', 0)"
         with pytest.raises(RuntimeError,
                            match="donated to a driver and can no longer be "
-                                 "merged"):
+                                 "merged") as ei:
             s.materialize()
+        assert "[MZ301]" in str(ei.value)
+        assert "stage 7 input ('in', 0)" in str(ei.value)
+        assert stage_exec.DONATED_MERGE_ERROR.startswith("[MZ301]")
         assert "handoff analysis bug" in stage_exec.DONATED_MERGE_ERROR
 
 

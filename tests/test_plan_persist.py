@@ -189,7 +189,7 @@ def test_truncated_file_rejected_not_fatal(tmp_path_factory, cut):
     blob = open(path).read()
     open(path, "w").write(blob[:max(0, len(blob) - cut)])
     assert plan_cache.load(path) == 0
-    assert plan_cache.stats["persist_rejected_corrupt"] >= 1
+    assert plan_cache.stats["persist_corrupt"] >= 1
     _assert_cold_planning_still_works(x)
 
 
@@ -343,3 +343,29 @@ def test_cross_process_warm_start(tmp_path):
     assert b["ctx"].get("auto_pinned_replays", 0) >= 1   # pinned choice reused
     assert b["ctx"].get("tuning_sample_elems", 0) == 0
     assert np.isclose(a["v"], b["v"], rtol=1e-5)
+
+
+def test_cross_process_corrupt_file_recovers(tmp_path):
+    """Process A saves; the file is truncated mid-JSON; a FRESH process B
+    must boot anyway — rejecting the file (``persist_corrupt``), replanning
+    from scratch, computing the right answer, and re-saving a VALID file on
+    session exit (regression: a half-written cache file must never wedge
+    every future process)."""
+    path = str(tmp_path / "plans.json")
+    a = _run_subprocess(_PROC_A, path)
+    blob = open(path).read()
+    open(path, "w").write(blob[: len(blob) // 2])
+
+    b = _run_subprocess(_PROC_B, path)
+    assert b["pc"].get("persist_corrupt", 0) >= 1
+    assert b["pc"].get("persist_loaded", 0) == 0
+    assert b["ctx"].get("planner_calls", 0) >= 1         # replanned cold
+    assert np.isclose(a["v"], b["v"], rtol=1e-5)
+
+    # B's session exit overwrote the truncated file with a good one:
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["entries"]
+    c = _run_subprocess(_PROC_B, path)
+    assert c["pc"].get("persist_corrupt", 0) == 0
+    assert c["pc"].get("persist_loaded", 0) >= 1
