@@ -588,6 +588,151 @@ print(json.dumps({
     if sanitize_failures:
         failures.append(f"sanitize:{sanitize_failures}")
 
+    # -- chaos: injected faults recover with exact results, nothing hangs ---
+    # Subprocess (fresh jax + fault-plan state).  Three scenarios from the
+    # resilience layer (core/resilience.py): an injected compile failure
+    # demotes down the executor ladder and quarantines the broken choice; an
+    # injected chunk OOM halves the batch (bounded) below the ladder; a
+    # serving step failure is routed into the in-flight requests while the
+    # driver thread survives to serve the next wave.  Gates: every fault run
+    # matches the fault-free baseline, retries stay bounded, recovery
+    # counters moved, and zero requests hang.
+    _CHAOS_ROW = r'''
+import warnings; warnings.filterwarnings("ignore")
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import mozart, plan_cache, resilience
+from repro.core import annotated_numpy as anp
+
+n = 200_000
+x = jnp.linspace(0.1, 2.0, n, dtype=jnp.float32)
+y = jnp.linspace(0.2, 1.0, n, dtype=jnp.float32)
+
+def chain():
+    """3-stage handoff chain (exp -> add -> multiply -> sum)."""
+    with mozart.session(executor="fused", handoff=True) as ctx:
+        a = anp.exp(x)
+        mozart.evaluate()                # stage boundary: streamed handoff
+        b = anp.add(a, y)
+        mozart.evaluate()                # second boundary
+        c = anp.multiply(b, 0.5)
+        out = float(np.asarray(anp.sum(c)))
+    return out, ctx
+
+want, _ = chain()                        # fault-free baseline
+fails = []
+t0 = time.perf_counter()
+
+# 1) compile failure -> ladder demotion + quarantine, same answer
+plan_cache.clear()                       # force a fresh driver build
+with mozart.inject_faults("compile:fail:1") as p1:
+    got, ctx1 = chain()
+demotions = int(ctx1.stats.get("exec_demotions", 0))
+if not np.isclose(got, want, rtol=1e-5):
+    fails.append("compile_parity")
+if not p1.fired or demotions < 1:
+    fails.append("no_demotion")
+quarantined = sum(1 for e in plan_cache.entries() if e.quarantined)
+if quarantined < 1:
+    fails.append("no_quarantine")
+
+# 2) chunk OOM -> bounded batch halvings below the ladder, same answer
+plan_cache.clear()
+with mozart.inject_faults("chunk:oom:1") as p2:
+    got2, ctx2 = chain()
+halvings = int(ctx2.stats.get("chunk_oom_halvings", 0))
+if not np.isclose(got2, want, rtol=1e-5):
+    fails.append("oom_parity")
+if not p2.fired or not (1 <= halvings <= resilience.MAX_OOM_HALVINGS):
+    fails.append(f"halvings={halvings}")
+
+# 3) serving churn: a step fault fails in-flight requests VISIBLY, the
+#    driver survives, the next wave completes — zero hung requests
+from repro.configs.registry import get_smoke_config
+from repro.core.serving import AsyncServer, ContinuousBatcher
+from repro.models import transformer as tfm
+cfg = get_smoke_config("internlm2-20b")
+params = tfm.init_model(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+           for p in (5, 7, 4, 6)]
+b = ContinuousBatcher(cfg, params, batch=2, max_len=32, driver="jit",
+                      max_queue=16)
+wave1 = [b.submit(b.make_request(p, 3)) for p in prompts[:2]]
+srv = AsyncServer(b, idle_poll_s=1e-4)
+with mozart.inject_faults("serve_step:fail:1"):
+    srv.start()
+    deadline = time.time() + 120
+    for r in wave1:
+        r.done.wait(max(0.0, deadline - time.time()))
+    wave2 = [b.submit(b.make_request(p, 4)) for p in prompts[2:]]
+    for r in wave2:
+        r.done.wait(max(0.0, deadline - time.time()))
+srv.close()
+hung = [r.rid for r in wave1 + wave2 if not r.finished]
+if hung:
+    fails.append(f"hung={hung}")
+if b.stats.get("step_failures", 0) != 1:
+    fails.append("driver_died_or_step_fault_missed")
+if not all(isinstance(r.error, resilience.InjectedFault) for r in wave1):
+    fails.append("fault_not_routed_to_requests")
+if not all(r.error is None and len(r.out) == 4 for r in wave2):
+    fails.append("post_fault_serving")
+
+print(json.dumps({
+    "fails": fails,
+    "us": (time.perf_counter() - t0) * 1e6,
+    "demotions": demotions,
+    "quarantined_entries": quarantined,
+    "oom_halvings": halvings,
+    "step_failures": int(b.stats.get("step_failures", 0)),
+    "failed_requests": int(b.stats.get("failed_requests", 0)),
+    "mz": {k: int(v) for k, v in resilience.stats.items()
+           if k.startswith("MZ")},
+}))
+'''
+
+    def chaos_row() -> dict | None:
+        env = dict(os.environ)
+        env.pop("MOZART_FAULTS", None)   # the row arms its own plans
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (env.get("PYTHONPATH"),
+                        os.path.join(os.path.dirname(
+                            os.path.dirname(os.path.abspath(__file__))), "src"))
+            if p)
+        proc = _subprocess.run(
+            [sys.executable, "-c", _CHAOS_ROW],
+            env=env, capture_output=True, text=True, timeout=900)
+        if proc.returncode != 0:
+            print(f"smoke/chaos subprocess failed:\n{proc.stderr}",
+                  file=sys.stderr)
+            return None
+        return _json.loads(proc.stdout.strip().splitlines()[-1])
+
+    crow = chaos_row()
+    chaos_failures = []
+    if crow is None:
+        chaos_failures.append("subprocess")
+        record("smoke/chaos", 0.0, "SUBPROCESS_FAILED")
+    else:
+        chaos_failures.extend(crow["fails"])
+        record("smoke/chaos", crow["us"],
+               f"demotions={crow['demotions']};"
+               f"quarantined={crow['quarantined_entries']};"
+               f"oom_halvings={crow['oom_halvings']};"
+               f"step_failures={crow['step_failures']};"
+               f"{'ok' if not chaos_failures else 'REGRESSED'}",
+               extra={
+                   "demotions": int(crow["demotions"]),
+                   "quarantined_entries": int(crow["quarantined_entries"]),
+                   "oom_halvings": int(crow["oom_halvings"]),
+                   "step_failures": int(crow["step_failures"]),
+                   "failed_requests": int(crow["failed_requests"]),
+                   "mz_counters": crow["mz"],
+               })
+    if chaos_failures:
+        failures.append(f"chaos:{chaos_failures}")
+
     # -- AOT pipeline: warm calls do ZERO planner calls and ZERO retraces ---
     plan_cache.clear()
     p = mozart.pipeline(lambda: w.black_scholes(**d), executor="auto")

@@ -44,7 +44,9 @@ from repro.core.planner import Stage, plan
 # ---------------------------------------------------------------------------
 
 #: Stable diagnostic codes.  MZ1xx = annotation contract, MZ2xx = pipeline
-#: dataflow, MZ3xx = runtime boundary sanitizer (MOZART_SANITIZE=1).
+#: dataflow, MZ3xx = runtime boundary sanitizer (MOZART_SANITIZE=1),
+#: MZ4xx = resilience events (core/resilience.py: faults, demotion,
+#: quarantine, serving failure domains).
 CODES: dict[str, str] = {
     "MZ101": "split followed by merge does not reproduce the value",
     "MZ102": "merge is not associative",
@@ -64,6 +66,12 @@ CODES: dict[str, str] = {
     "MZ301": "use-after-donate: donated chunk buffers were observed",
     "MZ302": "stream ranges do not tile the value's extent",
     "MZ303": "scoped boundary counters disagree with the global tallies",
+    "MZ401": "fault fired at an instrumented boundary (injected or real)",
+    "MZ402": "executor demoted down the degradation ladder",
+    "MZ403": "chunk batch halved after resource exhaustion and re-pinned",
+    "MZ404": "executor quarantined in the plan entry (aging until retry)",
+    "MZ405": "serving step failed; affected requests failed, driver survived",
+    "MZ406": "transient error swallowed at a probe site (counted, not hidden)",
 }
 
 _SEV_ORDER = {"error": 0, "warning": 1, "info": 2}

@@ -37,6 +37,7 @@ from typing import Any
 import jax
 
 from repro import hardware
+from repro.core import resilience
 from repro.core import split_types as st
 from repro.core.graph import DataflowGraph
 from repro.core.planner import Stage
@@ -144,16 +145,25 @@ def analytic_seconds(name: str, f: StageFeatures, chip: hardware.Chip) -> float:
     return math.inf                      # strategies the model cannot score
 
 
-def candidates(f: StageFeatures, ctx) -> list[str]:
-    """Applicable executors in deterministic preference order."""
+def candidates(f: StageFeatures, ctx,
+               blocked: "set | frozenset" = frozenset()) -> list[str]:
+    """Applicable executors in deterministic preference order.  ``blocked``
+    removes quarantined names (resilience degradation ladder) — unless that
+    would leave nothing, in which case the quarantine is overridden (a wrong
+    answer is never an option; a retried crash is recoverable)."""
     out = []
     for name in CANDIDATE_ORDER:
         if math.isfinite(analytic_seconds(name, f, ctx.chip)):
             out.append(name)
+    if blocked:
+        unblocked = [n for n in out if n not in blocked]
+        if unblocked:
+            out = unblocked
     return out or ["pipelined"]
 
 
-def choose(f: StageFeatures, ctx, timings: dict[str, float] | None = None) -> str:
+def choose(f: StageFeatures, ctx, timings: dict[str, float] | None = None,
+           blocked: "set | frozenset" = frozenset()) -> str:
     """Pick the cheapest applicable executor.
 
     Measured seconds (plan-cache feedback) are authoritative: when any
@@ -162,7 +172,7 @@ def choose(f: StageFeatures, ctx, timings: dict[str, float] | None = None) -> st
     wall-clock numbers.  Candidates are scanned in fixed order with strict
     improvement, so the choice is a pure function of (features, chip,
     recorded timings) — never of dict iteration order or wall clock."""
-    cands = candidates(f, ctx)
+    cands = candidates(f, ctx, blocked)
     if timings:
         best, best_s = None, math.inf
         for name in cands:
@@ -199,8 +209,17 @@ class AutoExecutor(StageExecutor):
         concrete = resolve_stage_inputs(stage, graph, ctx, streams_ok=True,
                                         tally=False, shard_ok=True)
         entry = getattr(ctx, "_plan_entry", None)
+        # Quarantined executors (resilience ladder) sit out selection —
+        # read-only here: run_stage already aged the quarantine this dispatch.
+        blocked = (entry.quarantined_execs(stage.id)
+                   if entry is not None else set())
         name = entry.chosen_exec.get(stage.id) if entry is not None else None
-        if name is not None and self._aged_out(stage, concrete, ctx, entry):
+        if name is not None and name in blocked:
+            # A pinned choice that later crashed: skip it (the pin stays —
+            # when the quarantine ages out, warm calls resume replaying it).
+            ctx.stats["auto_quarantine_skips"] += 1
+            name = None
+        elif name is not None and self._aged_out(stage, concrete, ctx, entry):
             name = None              # shape drift past a crossover: re-measure
         if name is not None:
             ctx.stats["auto_pinned_replays"] += 1
@@ -209,16 +228,18 @@ class AutoExecutor(StageExecutor):
                 and not has_dynamic(stage)
                 and entry.try_claim_exec(stage.id)):
             concrete = materialize_inputs(stage, concrete, ctx)
-            name = self._measure_and_pin(stage, concrete, ctx, entry)
+            name = self._measure_and_pin(stage, concrete, ctx, entry, blocked)
         if name is None:
             feats = features_of(stage, concrete, ctx)
             timings = entry.exec_timings.get(stage.id) if entry is not None else None
-            name = choose(feats, ctx, timings)
+            name = choose(feats, ctx, timings, blocked)
         ctx.stats["auto_stages"] += 1
         ctx.stats[f"auto_pick_{name}"] += 1
         if ctx.log:
             print(f"[mozart] stage {stage.id}: auto -> {name}")
-        get_executor(name).run(stage, graph, ctx)
+        # Delegate through the degradation ladder (no re-tick: this dispatch
+        # already aged the quarantine at the outer run_stage).
+        resilience.run_stage(name, stage, graph, ctx, _tick=False)
 
     def _aged_out(self, stage: Stage, concrete: dict[tuple, Any], ctx,
                   entry) -> bool:
@@ -248,14 +269,15 @@ class AutoExecutor(StageExecutor):
 
 
     def _measure_and_pin(self, stage: Stage, concrete: dict[tuple, Any], ctx,
-                         entry) -> str:
+                         entry, blocked: "set | frozenset" = frozenset()) -> str:
         """Time a bounded chunk sample under each viable candidate, record the
         extrapolated seconds (overwriting stale/poisoned values) and pin the
-        measured winner."""
+        measured winner.  Quarantined candidates are neither measured nor
+        pinned — no point timing a strategy known to crash here."""
         pinned = False
         try:
             feats = features_of(stage, concrete, ctx)
-            cands = candidates(feats, ctx)
+            cands = candidates(feats, ctx, blocked)
             scores = {c: analytic_seconds(c, feats, ctx.chip) for c in cands}
             floor = min(scores.values())
             cands = [c for c in cands
@@ -270,11 +292,13 @@ class AutoExecutor(StageExecutor):
                 batch = d.choose_batch(stage, concrete, ctx, n)
                 try:
                     secs = d.sampled_time(stage, concrete, ctx, batch, n)
-                except Exception:
-                    continue             # unmeasurable here: keep it unscored
+                except resilience.PROBE_ERRORS as e:
+                    # unmeasurable here: keep it unscored (but visibly)
+                    resilience.note_swallowed("auto_measure", e, ctx)
+                    continue
                 entry.record_exec_timing(stage.id, c, secs)
             measured = entry.exec_timings.get(stage.id, {})
-            name = choose(feats, ctx, measured)
+            name = choose(feats, ctx, measured, blocked)
             entry.pin_exec(stage.id, name, n=feats.n)
             pinned = True
             ctx.stats["auto_measured_stages"] += 1

@@ -35,6 +35,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import resilience
 from repro.core.graph import NodeRef
 from repro.core.planner import Stage
 from repro.core.stage_exec import (
@@ -166,6 +167,39 @@ class ChunkedExecutor(StageExecutor):
             mode = "pipelined"           # dynamic-shape fns cannot be traced
         n = effective_elements(ctx, stage_num_elements(stage, concrete, ctx.pedantic))
         batch = self.choose_batch(stage, concrete, ctx, n)
+        # Chunk-granular OOM policy (resilience leg 2): on resource
+        # exhaustion, halve the batch and re-drive — bounded, and only while
+        # no chunk buffer was REALLY donated (a freed buffer must never be
+        # re-read; defensive copies are safe).  The surviving size is
+        # re-pinned into the tuner state so warm calls start from it.
+        halvings = 0
+        while True:
+            real_donated = (ctx.stats.get("donated_chunks", 0)
+                            - ctx.stats.get("donation_copies", 0))
+            try:
+                self._drive(stage, concrete, ctx, mode, n, batch)
+                break
+            except resilience.PROBE_ERRORS as e:
+                still_clean = real_donated == (
+                    ctx.stats.get("donated_chunks", 0)
+                    - ctx.stats.get("donation_copies", 0))
+                if (not resilience.is_resource_exhausted(e) or batch <= 1
+                        or halvings >= resilience.MAX_OOM_HALVINGS
+                        or not still_clean):
+                    raise
+                halvings += 1
+                batch = max(1, batch // 2)
+                ctx.stats["chunk_oom_halvings"] += 1
+                resilience.record_event(
+                    "MZ403", f"stage {stage.id}: {type(e).__name__}, "
+                             f"batch halved to {batch}")
+        if halvings:
+            entry = getattr(ctx, "_plan_entry", None)
+            if entry is not None:
+                entry.pin(stage.id, batch)   # survive into warm calls
+
+    def _drive(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+               mode: str, n: int, batch: int) -> None:
         concrete, ranges = self._ingest_streams(stage, concrete, ctx, n, batch)
         ctx.stats["chunks"] += len(ranges)
 
@@ -184,6 +218,7 @@ class ChunkedExecutor(StageExecutor):
 
         partials: dict[int, list[Any]] = {p: [] for p in esc}
         for i, (s, e) in enumerate(ranges):
+            resilience.maybe_fail("chunk", f"stage {stage.id} chunk [{s},{e})")
             env = chunk_env_for(stage, concrete, s, e, ctx.pedantic,
                                 chunk_index=i, force_slice=donate)
             if mode == "pipelined":
@@ -416,6 +451,7 @@ class ScanExecutor(StageExecutor):
 
         consumed_keys: tuple = ()
         if n_chunks:
+            resilience.maybe_fail("chunk", f"stage {stage.id} scan driver")
             if donate:
                 key_of = {stage.ckey(k): k for k in stage.inputs}
                 donated = {}

@@ -40,6 +40,7 @@ from typing import Any, Callable
 
 import jax
 
+from repro.core import resilience
 from repro.core.future import Future
 from repro.core.runtime import MozartContext, _stack
 
@@ -340,7 +341,7 @@ class Pipeline:
         try:
             with counter_scope(ctx.counters):
                 for s in stages:
-                    get_executor(ctx.executor).run(s, ctx.graph, ctx)
+                    resilience.run_stage(ctx.executor, s, ctx.graph, ctx)
         finally:
             ctx._plan_entry, ctx._handoff = prev
         for n in pending:
@@ -373,7 +374,10 @@ class Pipeline:
                 try:
                     if not bool(l == spec[1]):
                         return _NO_FAST  # non-array args are specialized
-                except Exception:
+                except resilience.PROBE_ERRORS as e:
+                    # incomparable leaf (ambiguous array truth, custom
+                    # container): full capture handles the call
+                    resilience.note_swallowed("fast_leaf_compare", e)
                     return _NO_FAST
         ctx = self.ctx
         for idx, name, slot in f.node_bindings:
@@ -388,7 +392,7 @@ class Pipeline:
         try:
             with counter_scope(ctx.counters):
                 for s in f.stages:
-                    get_executor(ctx.executor).run(s, ctx.graph, ctx)
+                    resilience.run_stage(ctx.executor, s, ctx.graph, ctx)
         finally:
             ctx._plan_entry, ctx._handoff = prev
         ctx.stats["fast_path_calls"] += 1

@@ -35,7 +35,9 @@ stage templates, tuned batches and chosen executors to a versioned JSON file
 so a restarted process replays pinned plans with zero planner calls and zero
 tuning executions.  A schema-version + chip guard rejects stale or
 cross-chip files (cold planning, never a crash); saves write through a temp
-file + atomic rename so concurrent saves cannot corrupt the file.  Entries
+file + fsync + atomic rename under an advisory file lock, merging the
+on-disk entries first, so concurrent sessions can neither corrupt the file
+nor drop each other's entries.  Entries
 whose split types cannot round-trip structurally are skipped.  Rehydrated
 entries carry function *names* instead of live objects; the first lookup
 match binds the current process's ``AnnotatedFn`` identities.
@@ -48,6 +50,7 @@ from scratch every time, which is always correct, merely slower.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import json
 import os
@@ -70,7 +73,10 @@ _MAX_ENTRIES = 256
 #:     donation vetoes, for the staleness aging path) on handoff records.
 #: v5: ``bucket`` — the serving-scheduler bucket label a pinned entry was
 #:     compiled for (``Pipeline.compile(bucket=...)``).
-SCHEMA_VERSION = 5
+#: v6: ``quarantined`` — per-stage executor quarantine ages (resilience
+#:     degradation ladder), persisted so a restarted process keeps skipping
+#:     a strategy that crashed its predecessor until the quarantine ages out.
+SCHEMA_VERSION = 6
 
 #: older schemas the loader can migrate forward in place.  v2 files differ
 #: from v3/v4 only by the absence of ``convert_in`` on handoff records, and
@@ -79,8 +85,10 @@ SCHEMA_VERSION = 5
 #: exist, so no recorded decision could have used them; an empty ``vetoed``
 #: merely means the aging path has nothing to reconsider until the first
 #: re-analysis).  v4 files lack only ``bucket``, which defaults to None
-#: (unlabelled) — correct for every pre-serving plan.
-_MIGRATABLE_SCHEMAS = (2, 3, 4)
+#: (unlabelled) — correct for every pre-serving plan.  v5 files lack only
+#: ``quarantined``, which defaults to empty — correct for every pre-resilience
+#: plan (nothing had been observed to fail, so nothing is quarantined).
+_MIGRATABLE_SCHEMAS = (2, 3, 4, 5)
 
 #: process-global cache statistics (benchmarks report these).
 stats: collections.Counter = collections.Counter()
@@ -340,6 +348,10 @@ def rekey_config(old_prefix: tuple, new_prefix: tuple,
                     copy.tuned_batch = dict(e.tuned_batch)
                     copy.trials = {k: list(v) for k, v in e.trials.items()}
                     copy.block_shape = dict(e.block_shape)
+                    # Quarantines are observations of this hardware crashing
+                    # a strategy — they follow the tuned state, not the knob.
+                    copy.quarantined = {k: dict(v)
+                                        for k, v in e.quarantined.items()}
                 stats["rekey_migrated_tuned"] += len(copy.tuned_batch)
             _entries[new_key] = copy
             moved += 1
@@ -398,6 +410,14 @@ class PlanEntry:
     #: so a warm-started server can report which (batch, length) buckets its
     #: plan file covers before replaying them.
     bucket: tuple | None = None
+    #: resilience: per-stage quarantined executors, ``{stage_id: {name: age}}``.
+    #: A name lands here when that executor failed at compile or drive time
+    #: and the stage completed via the degradation ladder; warm calls skip
+    #: quarantined names.  ``age`` counts stage dispatches since quarantine —
+    #: at ``resilience.QUARANTINE_TTL`` the name is dropped and retried
+    #: (one transient crash must not ban a strategy forever).  Persisted, so
+    #: a restarted process does not re-crash on a known-bad pin.
+    quarantined: dict[int, dict[str, int]] = dataclasses.field(default_factory=dict)
     hits: int = 0
     loaded: bool = False                             # rehydrated from disk
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
@@ -486,6 +506,40 @@ class PlanEntry:
         with self._lock:
             self.exec_timings.setdefault(stage_id, {})[str(name)] = float(seconds)
         _mark_dirty()
+
+    # -- executor quarantine (resilience degradation ladder) -----------------
+    def quarantine_exec(self, stage_id: int, name: str) -> None:
+        """Ban ``name`` for this stage until the quarantine ages out."""
+        with self._lock:
+            self.quarantined.setdefault(int(stage_id), {})[str(name)] = 0
+        _mark_dirty()
+
+    def quarantined_execs(self, stage_id: int) -> set:
+        """The currently banned executor names for a stage (read-only)."""
+        with self._lock:
+            return set(self.quarantined.get(int(stage_id), ()))
+
+    def tick_quarantine(self, stage_id: int, ttl: int) -> set:
+        """Age this stage's quarantines by one dispatch; names reaching
+        ``ttl`` are dropped (eligible again).  Returns the still-banned set.
+        Called once per stage dispatch (``resilience.run_stage``)."""
+        with self._lock:
+            ages = self.quarantined.get(int(stage_id))
+            if not ages:
+                return set()
+            expired = []
+            for name in ages:
+                ages[name] += 1
+                if ages[name] >= ttl:
+                    expired.append(name)
+            for name in expired:
+                del ages[name]
+            if not ages:
+                del self.quarantined[int(stage_id)]
+            alive = set(ages or ())
+        if expired:
+            _mark_dirty()
+        return alive
 
     # -- pinned compiled executables (in-process, keyed by fingerprint) ------
     def exec_table(self) -> dict:
@@ -711,10 +765,12 @@ def _entry_enc(e: PlanEntry) -> dict:
         timings = {k: dict(v) for k, v in e.exec_timings.items()}
         meta = {k: dict(v) for k, v in e.exec_meta.items()}
         blocks = dict(e.block_shape)
+        quarantined = {k: dict(v) for k, v in e.quarantined.items()}
     return {
         "key": _enc(e.key),
         "fn_names": list(e.fn_names),
         "bucket": None if e.bucket is None else _enc(tuple(e.bucket)),
+        "quarantined": {str(k): v for k, v in quarantined.items()},
         "tuned_batch": {str(k): v for k, v in tuned.items()},
         "chosen_exec": {str(k): v for k, v in chosen.items()},
         "exec_timings": {str(k): v for k, v in timings.items()},
@@ -766,38 +822,77 @@ def _entry_dec(d: dict, classes: dict[str, type]) -> PlanEntry:
         handoff=None if raw_ho is None else {
             int(sid): StageHandoff.from_json(ho) for sid, ho in raw_ho.items()},
         bucket=None if d.get("bucket") is None else tuple(_dec(d["bucket"])),
+        quarantined={int(k): {str(n): int(a) for n, a in v.items()}
+                     for k, v in d.get("quarantined", {}).items()},
         loaded=True,
     )
+
+
+@contextlib.contextmanager
+def _file_lock(path: str):
+    """Advisory exclusive lock on a ``<path>.lock`` sidecar, so processes
+    sharing one ``MOZART_PLAN_CACHE`` serialize their read-merge-write saves.
+    Best-effort: platforms without ``fcntl`` (or locked-down filesystems)
+    fall through unlocked — the write is still atomic, only the cross-process
+    merge can then race (last writer wins, same as before the lock)."""
+    try:
+        import fcntl
+        lf = open(f"{path}.lock", "a+")
+    except (ImportError, OSError):
+        yield
+        return
+    try:
+        fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+        yield
+    finally:
+        try:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
+        finally:
+            lf.close()
 
 
 def save(path: str, force: bool = False) -> int:
     """Serialize every persistable cached plan to ``path``; returns the entry
     count written (0 when the file is already current — steady-state session
-    exits are no-ops).  Atomic (temp file + rename): concurrent saves race to
-    the rename, the file is never left half-written."""
+    exits are no-ops).
+
+    Crash- and concurrency-hardened: the payload is fsynced before the atomic
+    rename (a host crash can lose the save, never corrupt the file), and the
+    whole save runs read-merge-write under an advisory ``<path>.lock`` — the
+    current file is merged into the live cache first (live entries win), so
+    two processes sharing ``MOZART_PLAN_CACHE`` cannot lose each other's
+    entries."""
+    from repro.core import resilience
     ap = os.path.abspath(path)
     with _lock:
-        version = _mutations                 # taken BEFORE the snapshot
-        if (not force and _saved_versions.get(ap) == version
+        if (not force and _saved_versions.get(ap) == _mutations
                 and os.path.exists(path)):
             stats["persist_save_noop"] += 1
             return 0
-        snapshot = list(_entries.values())
-    encoded = []
-    for e in snapshot:
-        try:
-            encoded.append(_entry_enc(e))
-        except (TypeError, ValueError):
-            stats["persist_skipped"] += 1
-    payload = {
-        "schema": SCHEMA_VERSION,
-        "chip": hardware.TARGET.name,
-        "entries": encoded,
-    }
-    tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
-    with open(tmp, "w") as f:
-        json.dump(payload, f)
-    os.replace(tmp, path)
+    with _file_lock(path):
+        if os.path.exists(path):
+            _load(path)                  # merge concurrent sessions' entries
+        with _lock:
+            version = _mutations         # taken BEFORE the snapshot
+            snapshot = list(_entries.values())
+        encoded = []
+        for e in snapshot:
+            try:
+                encoded.append(_entry_enc(e))
+            except (TypeError, ValueError):
+                stats["persist_skipped"] += 1
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "chip": hardware.TARGET.name,
+            "entries": encoded,
+        }
+        resilience.maybe_fail("persist", where=ap)
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
     with _lock:
         _saved_versions[ap] = version
     stats["persist_saved"] += len(encoded)

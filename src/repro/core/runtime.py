@@ -20,10 +20,12 @@ import weakref
 from typing import Any
 
 from repro import hardware
+from repro.core import resilience
 from repro.core import split_types as st
 from repro.core.future import Future
 from repro.core.graph import DataflowGraph, NodeRef
 from repro.core.planner import plan
+from repro.core.resilience import inject_faults  # noqa: F401  (mozart.inject_faults)
 from repro.core.stage_exec import BoundaryCounters, counter_scope, get_executor
 
 
@@ -135,9 +137,11 @@ class MozartContext:
             # scored and routed independently (cost_model.AutoExecutor).
             # Trace/boundary events attribute to THIS context's counters
             # (plus the process-global aggregate) for the duration.
+            # ``resilience.run_stage`` arms the degradation ladder: a failing
+            # executor is quarantined and the stage completes on a lower rung.
             with counter_scope(self.counters):
                 for s in stages:
-                    get_executor(self.executor).run(s, self.graph, self)
+                    resilience.run_stage(self.executor, s, self.graph, self)
         finally:
             self._plan_entry, self._handoff = prev_entry, prev_ho
         self.graph.prune()

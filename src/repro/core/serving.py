@@ -83,10 +83,26 @@ class ServeRequest:
     first_token_s: float | None = None
     done_s: float | None = None
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    #: wall-clock budget from submit; the batcher enforces it at step
+    #: boundaries — an expired request frees its slot and resolves with
+    #: whatever tokens it produced, flagged ``timed_out``.
+    timeout_s: float | None = None
+    deadline_s: float | None = None       # absolute (perf_counter), at submit
+    timed_out: bool = False
+    cancelled: bool = False
+    #: terminal failure (overload shed, serving-step exception): the request
+    #: resolved WITHOUT completing; awaiting callers re-raise this.
+    error: BaseException | None = None
 
     @property
     def finished(self) -> bool:
         return self.done.is_set()
+
+    def cancel(self) -> None:
+        """Request cancellation: the slot is freed (or the queue entry
+        dropped) at the next step boundary and ``done`` is set with the
+        partial output.  Thread-safe, idempotent."""
+        self.cancelled = True
 
 
 def _pow2_buckets(lo: int, hi: int) -> list:
@@ -193,9 +209,11 @@ class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, batch: int, max_len: int,
                  driver: str = "mozart",
                  prompt_buckets: list | None = None,
-                 plan_cache_path: str | None = None):
+                 plan_cache_path: str | None = None,
+                 max_queue: int | None = None):
         if batch < 1:
             raise ValueError("batch must be >= 1")
+        self.max_queue = max_queue
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -258,6 +276,9 @@ class ContinuousBatcher:
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: ServeRequest) -> ServeRequest:
+        """Thread-safe enqueue.  A full bounded queue SHEDS the request:
+        it resolves immediately with ``req.error`` set (never hangs, never
+        silently drops) — backpressure the caller can see and retry."""
         if req.max_new < 1:
             raise ValueError(f"rid {req.rid}: max_new must be >= 1")
         if len(req.prompt) + req.max_new > self.max_len:
@@ -265,7 +286,17 @@ class ContinuousBatcher:
                 f"rid {req.rid}: prompt + max_new exceeds max_len "
                 f"({len(req.prompt)} + {req.max_new} > {self.max_len})")
         req.submitted_s = time.perf_counter()
+        if req.timeout_s is not None:
+            req.deadline_s = req.submitted_s + req.timeout_s
         with self._qlock:
+            if (self.max_queue is not None
+                    and len(self._queue) >= self.max_queue):
+                req.error = RuntimeError(
+                    f"rid {req.rid}: admission queue full "
+                    f"({self.max_queue}); request shed")
+                self.stats["shed_requests"] += 1
+                req.done.set()
+                return req
             self._queue.append(req)
         return req
 
@@ -369,8 +400,72 @@ class ContinuousBatcher:
             self._retire_if_done(r, i, now)
         return True
 
+    # -- deadlines / cancellation / failure domains --------------------------
+    def _expire(self, r: ServeRequest, now: float) -> None:
+        """Resolve a deadline-expired or cancelled request with its partial
+        output (slot/queue position already released by the caller)."""
+        if r.cancelled:
+            self.stats["cancelled_requests"] += 1
+        else:
+            r.timed_out = True
+            self.stats["timed_out_requests"] += 1
+        r.done_s = now
+        r.done.set()
+
+    def _sweep_expired(self) -> None:
+        """Step-boundary enforcement of deadlines and cancellation: expired
+        queued requests leave the queue, expired active requests free their
+        slot (the next ``_admit`` refills it) and keep their partial output."""
+        now = time.perf_counter()
+        with self._qlock:
+            if self._queue:
+                kept = collections.deque()
+                expired = []
+                for r in self._queue:
+                    if r.cancelled or (r.deadline_s is not None
+                                       and now >= r.deadline_s):
+                        expired.append(r)
+                    else:
+                        kept.append(r)
+                self._queue = kept
+            else:
+                expired = []
+        for r in expired:
+            self._expire(r, now)
+        for i, r in enumerate(self.slots):
+            if r is not None and (r.cancelled or (
+                    r.deadline_s is not None and now >= r.deadline_s)):
+                self.slots[i] = None
+                self._expire(r, now)
+
+    def fail_pending(self, exc: BaseException) -> int:
+        """Resolve EVERY in-flight request (active slots + queue) with
+        ``exc`` — the serving failure domain's backstop: after a step
+        exception nothing may stay blocked on ``done.wait`` forever.
+        Returns the number of requests failed."""
+        with self._qlock:
+            doomed = list(self._queue)
+            self._queue.clear()
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                self.slots[i] = None
+                doomed.append(r)
+        now = time.perf_counter()
+        for r in doomed:
+            r.error = exc
+            r.done_s = now
+            self.stats["failed_requests"] += 1
+            r.done.set()
+        return len(doomed)
+
     def step(self) -> bool:
-        """Admit at the step boundary, then decode once; False when idle."""
+        """Admit at the step boundary, then decode once; False when idle.
+
+        Deadline/cancellation sweeps run first — a request never occupies a
+        slot past the boundary after its deadline."""
+        from repro.core import resilience
+        resilience.maybe_fail("serve_step")
+        self._sweep_expired()
         self._admit()
         return self._decode_once()
 
@@ -444,7 +539,14 @@ class ContinuousBatcher:
             self.submit(r)
         t0 = time.perf_counter()
         while True:
-            if not self.step():
+            try:
+                busy = self.step()
+            except Exception as e:
+                # Batch front-end: the error propagates to the caller, but
+                # every in-flight request resolves first — nothing hangs.
+                self.fail_pending(e)
+                raise
+            if not busy:
                 with self._qlock:
                     if not self._queue:
                         break
@@ -474,6 +576,10 @@ class ContinuousBatcher:
                                / max(len(self.occupancy), 1)),
             "prefill_calls": int(self.stats["prefill_calls"]),
             "completed": int(self.stats["completed"]),
+            "timed_out": int(self.stats["timed_out_requests"]),
+            "cancelled": int(self.stats["cancelled_requests"]),
+            "shed": int(self.stats["shed_requests"]),
+            "failed": int(self.stats["failed_requests"]),
             "planner_calls": int(self.stats["planner_calls"]),
             "jit_traces": int(self.stats["jit_traces"]),
         }
@@ -483,11 +589,11 @@ class ContinuousBatcher:
                 list(self._prefill.buckets) + list(self._decode.buckets))
         return out
 
-    def make_request(self, prompt, max_new: int,
-                     eos: int | None = None) -> ServeRequest:
+    def make_request(self, prompt, max_new: int, eos: int | None = None,
+                     timeout_s: float | None = None) -> ServeRequest:
         return ServeRequest(rid=next(self._rids),
                             prompt=np.asarray(prompt, np.int32),
-                            max_new=max_new, eos=eos)
+                            max_new=max_new, eos=eos, timeout_s=timeout_s)
 
 
 class AsyncServer:
@@ -507,16 +613,51 @@ class AsyncServer:
         return self
 
     def _drive(self) -> None:
+        # The driver thread is the serving failure domain's root: it must
+        # survive ANY step exception, or every awaiting coroutine blocks on
+        # ``done.wait`` forever.  A failing step fails exactly the requests
+        # that were in flight (visible errors, no hangs) and keeps driving.
+        from repro.core import resilience
         while not self._stop.is_set():
-            if not self.batcher.step():
+            try:
+                busy = self.batcher.step()
+            except Exception as e:    # route into requests, never die silent
+                n = self.batcher.fail_pending(e)
+                self.batcher.stats["step_failures"] += 1
+                resilience.record_event(
+                    "MZ405", f"serving step failed ({type(e).__name__}: "
+                             f"{e}); {n} requests failed")
+                continue
+            if not busy:
                 time.sleep(self.idle_poll_s)
 
-    async def generate(self, prompt, max_new: int,
-                       eos: int | None = None) -> list:
-        req = self.batcher.make_request(prompt, max_new, eos=eos)
+    async def generate(self, prompt, max_new: int, eos: int | None = None,
+                       timeout_s: float | None = None) -> list:
+        """Generate tokens for one prompt; resolves when the request leaves
+        the batcher.  ``timeout_s`` bounds the wait: the batcher enforces
+        the deadline at a step boundary (partial output, ``timed_out`` on
+        the request); if even that never resolves (wedged driver), the
+        await itself gives up shortly after and cancels the request.
+        Raises the request's error (shed / step failure) if it failed."""
+        req = self.batcher.make_request(prompt, max_new, eos=eos,
+                                        timeout_s=timeout_s)
         self.batcher.submit(req)
         loop = asyncio.get_running_loop()
-        await loop.run_in_executor(None, req.done.wait)
+        if timeout_s is None:
+            await loop.run_in_executor(None, req.done.wait)
+        else:
+            # Grace past the deadline for the step-boundary sweep to run.
+            resolved = await loop.run_in_executor(
+                None, req.done.wait, timeout_s + 5.0)
+            if not resolved:
+                req.cancel()
+                await loop.run_in_executor(None, req.done.wait, 5.0)
+                if not req.done.is_set():
+                    raise TimeoutError(
+                        f"rid {req.rid}: driver did not resolve the request "
+                        f"within its deadline (thread wedged?)")
+        if req.error is not None:
+            raise req.error
         return list(req.out)
 
     def close(self) -> None:

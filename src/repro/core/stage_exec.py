@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import hardware
+from repro.core import resilience
 from repro.core import split_types as st
 from repro.core.graph import DataflowGraph, Node, NodeRef
 from repro.core.planner import Stage, _count_of_type, _value_key
@@ -656,6 +657,7 @@ def chunk_env_for(stage: Stage, concrete: dict[tuple, Any], s: int, e: int,
     """Build one chunk's canonical env.  ``force_slice`` lists canonical keys
     that must be REAL slices even for identity ranges — buffers about to be
     donated must never alias a producer's retained result."""
+    resilience.maybe_fail("split", f"stage {stage.id} range [{s},{e})")
     env: dict[tuple, Any] = {}
     for key, si in stage.inputs.items():
         v = concrete[key]
@@ -742,6 +744,7 @@ def finish_stage(stage: Stage, partials: dict[int, list[Any]],
     consumer accepts the producer grid are left UNMERGED as a
     :class:`ChunkStream` over ``ranges`` — the boundary merge happens lazily
     and only if the value is actually observed."""
+    resilience.maybe_fail("merge", f"stage {stage.id}")
     ho = None
     if ctx is not None and ranges is not None:
         plan = getattr(ctx, "_handoff", None)
@@ -792,6 +795,7 @@ def pinned_jit(stage: Stage, ctx, kind: str, extra_key: tuple,
             table = stage._jit_cache = {}
     fn = table.get(key)
     if fn is None:
+        resilience.maybe_fail("compile", f"stage {stage.id} {kind}")
         fn = table[key] = build()
         ctx.stats["exec_builds"] += 1
     return fn
@@ -882,6 +886,8 @@ def resolve_stage_inputs(stage: Stage, graph: DataflowGraph, ctx,
     materialized — correct by construction, merely the old cost.
     ``tally=False`` skips the ingest/materialize stats (scoring-only
     resolves, e.g. ``AutoExecutor``, whose delegate re-resolves and counts)."""
+    if tally:
+        resilience.maybe_fail("ingest", f"stage {stage.id}")
     plan = getattr(ctx, "_handoff", None)
     ho = plan.get(stage.id) if plan else None
     sanitize = sanitize_active()
@@ -1095,8 +1101,9 @@ def _block_stage_outputs(stage: Stage) -> None:
                     r = [x for x in (r._chunks, r.stacked, r.tail, r.sharded)
                          if x is not None]
                 jax.block_until_ready(r)
-            except Exception:
-                pass  # non-array results (tables, corpora): nothing async
+            except resilience.PROBE_ERRORS as e:
+                # non-array results (tables, corpora): nothing async
+                resilience.note_swallowed("block_stage_outputs", e)
 
 
 def candidate_batches(est: int, n: int) -> list[int]:
@@ -1215,8 +1222,10 @@ class StageExecutor:
             for b in cands:
                 try:
                     dt = self.sampled_time(stage, concrete, ctx, b, n)
-                except Exception:
-                    continue            # unsampleable candidate: skip it
+                except resilience.PROBE_ERRORS as e:
+                    # unsampleable candidate: skip it (but visibly)
+                    resilience.note_swallowed("tune_sample", e, ctx)
+                    continue
                 entry.record_trial(stage.id, b, dt)
                 if best_dt is None or dt < best_dt:
                     best, best_dt = b, dt

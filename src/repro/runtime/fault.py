@@ -1,101 +1,20 @@
-"""Fault tolerance: retries, step watchdog (straggler detection), restart loop.
-
-On a real fleet the `on_straggler` / `on_failure` hooks trigger re-slicing
-or pod eviction; on this CPU container they log and (for failures) restore
-from the latest complete checkpoint — the control flow is identical and
-unit-tested, only the actuator differs.
-"""
+"""Compatibility shim: the seed-era fault-tolerance helpers moved into the
+runtime-wide resilience layer (``repro.core.resilience``), where they share
+one transient-error taxonomy and backoff policy with the executor
+degradation ladder and the serving failure domains.  Import from there; this
+module re-exports the original names for existing callers
+(``launch/train.py``)."""
 
 from __future__ import annotations
 
-import dataclasses
-import logging
-import time
-from typing import Any, Callable
+from repro.core.resilience import (  # noqa: F401
+    FaultConfig,
+    StepFailure,
+    StepTimer,
+    TRANSIENT_ERRORS,
+    run_with_restarts,
+    with_retries,
+)
 
-log = logging.getLogger("repro.fault")
-
-
-class StepFailure(RuntimeError):
-    pass
-
-
-@dataclasses.dataclass
-class FaultConfig:
-    max_retries_per_step: int = 2
-    max_restarts: int = 3
-    # straggler watchdog: a step slower than median * factor is flagged
-    straggler_factor: float = 3.0
-    straggler_window: int = 20
-    min_steps_for_baseline: int = 5
-
-
-class StepTimer:
-    """Rolling per-step wall-clock stats + straggler flagging."""
-
-    def __init__(self, cfg: FaultConfig,
-                 on_straggler: Callable[[int, float, float], None] | None = None):
-        self.cfg = cfg
-        self.times: list[float] = []
-        self.stragglers: list[int] = []
-        self.on_straggler = on_straggler
-
-    def record(self, step: int, seconds: float) -> bool:
-        """Returns True if this step is a straggler."""
-        window = self.times[-self.cfg.straggler_window:]
-        is_straggler = False
-        if len(window) >= self.cfg.min_steps_for_baseline:
-            med = sorted(window)[len(window) // 2]
-            if seconds > med * self.cfg.straggler_factor:
-                is_straggler = True
-                self.stragglers.append(step)
-                log.warning("step %d took %.3fs (median %.3fs): straggler",
-                            step, seconds, med)
-                if self.on_straggler:
-                    self.on_straggler(step, seconds, med)
-        self.times.append(seconds)
-        return is_straggler
-
-
-def with_retries(fn: Callable[[], Any], *, retries: int,
-                 on_retry: Callable[[int, Exception], None] | None = None) -> Any:
-    """Run fn; retry transient failures (the paper-world analogue of a
-    preempted host re-issuing a step)."""
-    last: Exception | None = None
-    for attempt in range(retries + 1):
-        try:
-            return fn()
-        except (RuntimeError, OSError, StepFailure) as e:  # transient classes
-            last = e
-            log.warning("step attempt %d failed: %s", attempt, e)
-            if on_retry:
-                on_retry(attempt, e)
-    raise StepFailure(f"exhausted {retries} retries") from last
-
-
-def run_with_restarts(
-    make_state: Callable[[int | None], tuple[Any, int]],
-    run_from: Callable[[Any, int], Any],
-    *,
-    fault_cfg: FaultConfig,
-    latest_step: Callable[[], int | None],
-):
-    """Full restart loop: build state (fresh or from latest checkpoint),
-    run; on failure, rebuild from the newest complete checkpoint and
-    continue.  Returns the final result of ``run_from``.
-
-    make_state(step|None) -> (state, start_step)
-    run_from(state, start_step) -> result       (raises on fatal error)
-    """
-    restarts = 0
-    while True:
-        ckpt = latest_step()
-        state, start = make_state(ckpt)
-        try:
-            return run_from(state, start)
-        except Exception as e:  # noqa: BLE001 — restart boundary
-            restarts += 1
-            log.error("training crashed at restart %d: %s", restarts, e)
-            if restarts > fault_cfg.max_restarts:
-                raise
-            time.sleep(0.1)
+__all__ = ["FaultConfig", "StepFailure", "StepTimer", "TRANSIENT_ERRORS",
+           "run_with_restarts", "with_retries"]

@@ -268,7 +268,7 @@ def test_last_call_stats_property_returns_snapshot():
 
 
 # ---------------------------------------------------------------------------
-# Bucket labels persist through the plan cache (schema v5)
+# Bucket labels persist through the plan cache (schema v5+)
 # ---------------------------------------------------------------------------
 
 
@@ -284,7 +284,7 @@ def test_bucket_label_round_trips_through_plan_cache(tmp_path):
     plan_cache.save(path, force=True)
 
     payload = json.load(open(path))
-    assert payload["schema"] == 5
+    assert payload["schema"] == plan_cache.SCHEMA_VERSION
     plan_cache.clear()
     assert plan_cache.load(path) >= 1
     entry = [e for e in plan_cache.entries() if e.bucket is not None]
@@ -305,6 +305,122 @@ def test_v4_plan_file_migrates_without_bucket(tmp_path):
     plan_cache.clear()
     assert plan_cache.load(path) >= 1
     assert all(e.bucket is None for e in plan_cache.entries())
+
+
+# ---------------------------------------------------------------------------
+# Serving failure domains: deadlines, cancellation, shedding, step failures
+# ---------------------------------------------------------------------------
+
+
+class TestServingResilience:
+    def test_deadline_times_out_and_frees_slot(self, model):
+        """An expired request resolves flagged ``timed_out`` at the next
+        step boundary, frees its slot, and the batcher keeps serving."""
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=2, max_len=MAX_LEN,
+                              driver="jit")
+        doomed = b.make_request(prompts[0], 6, timeout_s=0.0)
+        ok = b.make_request(prompts[1], 3)
+        stats = b.run([doomed, ok])
+        assert doomed.finished and doomed.timed_out
+        assert doomed.error is None and len(doomed.out) < 6
+        assert ok.finished and not ok.timed_out and len(ok.out) == 3
+        assert stats["timed_out"] == 1 and stats["completed"] == 1
+
+    def test_cancel_mid_decode_keeps_partial_output(self, model):
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=1, max_len=MAX_LEN,
+                              driver="jit")
+        b.reset_metrics()
+        r = b.submit(b.make_request(prompts[0], 8))
+        while len(r.out) < 2:                 # admit + a couple of decodes
+            b.step()
+        r.cancel()
+        b.step()                              # boundary enforcement
+        assert r.finished and r.cancelled and not r.timed_out
+        assert 2 <= len(r.out) < 8
+        assert b.stats["cancelled_requests"] == 1
+        assert all(s is None for s in b.slots)   # slot freed
+
+    def test_bounded_queue_sheds_with_visible_error(self, model):
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=1, max_len=MAX_LEN,
+                              driver="jit", max_queue=1)
+        b.reset_metrics()
+        kept = b.submit(b.make_request(prompts[0], 2))
+        shed = b.submit(b.make_request(prompts[1], 2))
+        assert shed.finished and shed.error is not None
+        assert "shed" in str(shed.error)
+        assert b.stats["shed_requests"] == 1
+        while not kept.finished:              # the admitted one still serves
+            b.step()
+        assert len(kept.out) == 2 and kept.error is None
+
+    def test_run_step_exception_fails_pending_never_hangs(self, model):
+        """Batch front-end: a step exception propagates, but every
+        in-flight request resolves with the error first — no hangs."""
+        from repro.core import mozart
+        from repro.core.resilience import InjectedFault
+
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=2, max_len=MAX_LEN,
+                              driver="jit")
+        reqs = [b.make_request(prompts[i], 3) for i in range(2)]
+        with mozart.inject_faults("serve_step:fail:1"):
+            with pytest.raises(InjectedFault):
+                b.run(reqs)
+        assert all(r.finished for r in reqs)
+        assert all(isinstance(r.error, InjectedFault) for r in reqs)
+        assert b.stats["failed_requests"] == 2
+
+    def test_async_server_survives_step_failure(self, model, reference):
+        """The driver thread must outlive a step exception: the in-flight
+        request fails VISIBLY (no hang), and the next request completes."""
+        import asyncio
+
+        from repro.core import mozart
+        from repro.core.resilience import InjectedFault
+
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=2, max_len=MAX_LEN,
+                              driver="jit")
+        server = AsyncServer(b, idle_poll_s=1e-4)
+
+        async def main():
+            with mozart.inject_faults("serve_step:fail:1"):
+                req = b.submit(b.make_request(prompts[0], SPECS[0][1]))
+                server.start()
+                loop = asyncio.get_running_loop()
+                await loop.run_in_executor(None, req.done.wait, 60.0)
+                assert req.finished
+                assert isinstance(req.error, InjectedFault)
+                # Fault spent, driver still alive: serving continues.
+                return await server.generate(prompts[1], SPECS[1][1])
+
+        try:
+            out = asyncio.run(main())
+        finally:
+            server.close()
+        assert out == reference[1]
+        assert b.stats["step_failures"] == 1
+        assert b.stats["failed_requests"] == 1
+
+    def test_generate_timeout_returns_partial(self, model):
+        """``generate(timeout_s=...)`` resolves with the partial output the
+        step-boundary sweep left behind — it never blocks past the grace."""
+        import asyncio
+
+        cfg, params, prompts = model
+        b = ContinuousBatcher(cfg, params, batch=1, max_len=MAX_LEN,
+                              driver="jit")
+
+        async def main():
+            with AsyncServer(b, idle_poll_s=1e-4) as server:
+                return await server.generate(prompts[0], 6, timeout_s=0.0)
+
+        out = asyncio.run(main())
+        assert len(out) < 6                   # partial (likely empty)
+        assert b.stats["timed_out_requests"] == 1
 
 
 # ---------------------------------------------------------------------------
