@@ -25,7 +25,7 @@ def bench_crime_index(n=2_000_000, iters=3):
     t = _crime_table(n)
     ref = w.crime_index_np(t)
     for ex in ("eager", "pipelined"):
-        def once():
+        def once(ex=ex):
             with mozart.session(executor=ex, chip=hardware.CPU_HOST,
                                 plan_cache=False):
                 return float(w.crime_index(t))
@@ -41,7 +41,7 @@ def bench_data_cleaning(n=2_000_000, iters=3):
     t = tb.Table({"value": vals})
     ref = w.data_cleaning_np(t)
     for ex in ("eager", "pipelined", "scan"):
-        def once():
+        def once(ex=ex):
             with mozart.session(executor=ex, chip=hardware.CPU_HOST,
                                 plan_cache=False):
                 valid, total = w.data_cleaning(t)
@@ -60,7 +60,7 @@ def bench_birth_analysis(n=2_000_000, iters=3):
     })
     ref = tb._group_reduce(t, "year", "births", "sum")
     for ex in ("eager", "pipelined"):
-        def once():
+        def once(ex=ex):
             with mozart.session(executor=ex, chip=hardware.CPU_HOST,
                                 plan_cache=False):
                 return w.birth_analysis(t).value
@@ -82,7 +82,7 @@ def bench_movielens(n=1_000_000, n_movies=4000, iters=3):
         "year": r.randint(1950, 2020, n_movies).astype(np.float64),
     })
     for ex in ("eager", "pipelined"):
-        def once():
+        def once(ex=ex):
             with mozart.session(executor=ex, chip=hardware.CPU_HOST,
                                 plan_cache=False):
                 return w.movielens(ratings, movies).value

@@ -20,7 +20,7 @@ def bench_filter(name, pipeline, h=2000, wd=1500, iters=3):
     ref = w.image_pipeline_ref(pipeline, im)
     base = None
     for ex in ("eager", "pipelined", "fused", "scan"):
-        def once():
+        def once(ex=ex):
             with mozart.session(executor=ex, chip=hardware.CPU_HOST,
                                 plan_cache=False):
                 return np.asarray(pipeline(im))

@@ -22,7 +22,7 @@ EXECUTORS = ("eager", "pipelined", "fused", "scan")
 def _run(name, build, check, n_label, executors=EXECUTORS, iters=3):
     base_us = None
     for ex in executors:
-        def once():
+        def once(ex=ex):
             with mozart.session(executor=ex, chip=hardware.CPU_HOST,
                                 plan_cache=False):
                 outs = build()

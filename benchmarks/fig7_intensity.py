@@ -38,7 +38,7 @@ def main(quick=False):
                         jnp.float32)
     intens = {}
     for op in OPS:
-        def once():
+        def once(op=op):
             with mozart.session(executor="eager"):
                 return np.asarray(_chain(op, small, times=10))
         us = time_fn(once, iters=3)
@@ -49,18 +49,18 @@ def main(quick=False):
     n = 4_000_000 // (4 if quick else 1)
     big = jnp.asarray(np.random.RandomState(1).rand(n) + 0.5, jnp.float32)
     for op in OPS:
-        def eager():
+        def eager(op=op):
             with mozart.session(executor="eager"):
                 return np.asarray(_chain(op, big, times=10))
-        def piped():
+        def piped(op=op):
             with mozart.session(executor="scan", chip=hardware.CPU_HOST,
                                 plan_cache=False):
                 return np.asarray(_chain(op, big, times=10))
-        def cached():
+        def cached(op=op):
             with mozart.session(executor="scan", chip=hardware.CPU_HOST) as c:
                 out = np.asarray(_chain(op, big, times=10))
             return out, c
-        def auto():
+        def auto(op=op):
             with mozart.session(executor="auto", chip=hardware.CPU_HOST) as c:
                 out = np.asarray(_chain(op, big, times=10))
             return out, c

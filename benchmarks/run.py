@@ -15,7 +15,11 @@ plan-cache file with zero planner calls, gates cross-stage chunk handoff
 wall-clock must not regress vs the merge-everything path), gates the
 continuous-batching serving scheduler (per-request token parity vs the
 fixed-group baseline, zero warm planner calls / retraces, p50/p99 in the
-JSON artifact), and exits nonzero on any mismatch.
+JSON artifact), gates the static graph rewrite pass (dead-elimination,
+CSE and filter pushdown all fire with persisted MZ5xx records, rewritten
+output matches the unrewritten chain, interior boundary bytes and library
+calls both drop, warm replay does zero planner calls / retraces), and
+exits nonzero on any mismatch.
 """
 
 from __future__ import annotations
@@ -64,7 +68,7 @@ def smoke() -> int:
         if name == "sharded":
             kwargs["mesh"] = jax.make_mesh((1,), ("data",))
 
-        def once():
+        def once(name=name, kwargs=kwargs):
             with mozart.session(executor=name, **kwargs):
                 c, p = w.black_scholes(**d)
                 return np.asarray(c), np.asarray(p)
@@ -757,6 +761,91 @@ print(json.dumps({
            f"{'ok' if not pipe_failures else 'RETRACED'}")
     if pipe_failures:
         failures.append(f"pipeline-warm:{pipe_failures}")
+
+    # -- static graph rewrite: dead-elim, CSE and pushdown fire + pay off ---
+    # One chain with one dead stage, one repeated call and one pushdown
+    # opportunity.  Gates: all three MZ5xx rewrite records persist in the
+    # plan entry, rewritten output is exactly the unrewritten output,
+    # interior boundary bytes DROP vs the unrewritten chain (the pushdown
+    # shrinks the map's input extent), and the warm (third) call replays the
+    # rewritten graph with zero planner calls and zero retraces.
+    n_r = 8192
+    xr = jnp.linspace(0.1, 1.0, n_r, dtype=jnp.float32)
+    dead_mat = jnp.ones((256, n_r), jnp.float32)
+    mask_r = np.arange(n_r) % 2 == 0
+
+    def rewrite_chain(x, mask):
+        a = w.anp.exp(x)
+        # Dead branch: the matvec's 256-row extent forces its own stage, so
+        # ``a`` crosses a boundary — eliminating it (plus the cascade into
+        # ``a`` itself) removes real interior traffic, not just calls.
+        w.anp.matvec(dead_mat, a)
+        b1 = w.anp.exp(x)
+        b2 = w.anp.exp(x)                # CSE duplicate of b1
+        s = w.anp.add(b1, b2)
+        m = w.anp.multiply(x, 3.0)
+        f = w.anp.compress(mask, m)      # pushdown: m itself is unobserved
+        return s, f
+
+    def run_rewrite(on):
+        # handoff off so every stage boundary materializes (the saving is
+        # visible in isolation); fixed chunking so byte counts are stable.
+        with mozart.session(executor="fused", rewrite=on, handoff=False,
+                            autotune=False,
+                            batch_elements=n_r // 4) as ctx:
+            s, f = rewrite_chain(xr, mask_r)
+            out = (np.asarray(s.value), np.asarray(f.value))
+        return out, ctx
+
+    rewrite_failures = []
+    plan_cache.clear()
+    (on_s, on_f), rint_on_ctx = run_rewrite(True)
+    (off_s, off_f), rint_off_ctx = run_rewrite(False)
+    if not (np.array_equal(on_s, off_s) and np.array_equal(on_f, off_f)):
+        rewrite_failures.append("parity")
+    rw_codes = sorted({r["code"] for e in plan_cache.entries()
+                       for r in e.rewrites})
+    for code in ("MZ501", "MZ502", "MZ503"):
+        if code not in rw_codes:
+            rewrite_failures.append(f"missing:{code}")
+    rint_on = rint_on_ctx.counters.bytes_interior()
+    rint_off = rint_off_ctx.counters.bytes_interior()
+    if rint_on >= rint_off:
+        rewrite_failures.append(f"interior_not_reduced:{rint_on}>={rint_off}")
+    rcalls_on = rint_on_ctx.stats.get("calls", 0)
+    rcalls_off = rint_off_ctx.stats.get("calls", 0)
+    if rcalls_on >= rcalls_off:
+        rewrite_failures.append(f"calls_not_reduced:{rcalls_on}>={rcalls_off}")
+    # Warm replay of the rewritten graph: zero planner calls, zero retraces.
+    run_rewrite(True)                    # second hit: everything compiled
+    rtraces0 = stage_exec.trace_count()
+    _, rw_warm_ctx = run_rewrite(True)
+    rw_trace_delta = stage_exec.trace_count() - rtraces0
+    if rw_warm_ctx.stats["planner_calls"] != 0:
+        rewrite_failures.append("warm_planned")
+    if rw_trace_delta != 0:
+        rewrite_failures.append(f"warm_retraced:{rw_trace_delta}")
+    record("smoke/rewrite", 0.0,
+           f"codes={','.join(rw_codes)};"
+           f"interior_on={rint_on};interior_off={rint_off};"
+           f"calls_on={rcalls_on};calls_off={rcalls_off};"
+           f"warm_planner_calls={rw_warm_ctx.stats['planner_calls']};"
+           f"warm_trace_delta={rw_trace_delta};"
+           f"{'ok' if not rewrite_failures else 'REGRESSED'}",
+           extra={
+               "rewrite_codes": rw_codes,
+               "interior_bytes_rewritten": int(rint_on),
+               "interior_bytes_unrewritten": int(rint_off),
+               "library_calls_rewritten": int(rcalls_on),
+               "library_calls_unrewritten": int(rcalls_off),
+               "warm_planner_calls":
+                   int(rw_warm_ctx.stats["planner_calls"]),
+               "warm_trace_delta": int(rw_trace_delta),
+               "rewrites_applied":
+                   int(rw_warm_ctx.stats.get("rewrites_applied", 0)),
+           })
+    if rewrite_failures:
+        failures.append(f"rewrite:{rewrite_failures}")
 
     if failures:
         print(f"SMOKE FAILED: {failures}", file=sys.stderr)

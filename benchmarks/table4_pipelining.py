@@ -58,7 +58,7 @@ def bench(name, build, iters=3):
     for vname, kw, *rest in variants:
         warm = bool(rest and rest[0])
 
-        def once():
+        def once(kw=kw, warm=warm):
             with mozart.session(chip=hardware.CPU_HOST, plan_cache=warm,
                                 **kw) as ctx:
                 outs = build()

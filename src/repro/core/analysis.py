@@ -46,7 +46,8 @@ from repro.core.planner import Stage, plan
 #: Stable diagnostic codes.  MZ1xx = annotation contract, MZ2xx = pipeline
 #: dataflow, MZ3xx = runtime boundary sanitizer (MOZART_SANITIZE=1),
 #: MZ4xx = resilience events (core/resilience.py: faults, demotion,
-#: quarantine, serving failure domains).
+#: quarantine, serving failure domains), MZ5xx = static graph rewrites
+#: (core/rewrite.py: applied rewrites and justified declines).
 CODES: dict[str, str] = {
     "MZ101": "split followed by merge does not reproduce the value",
     "MZ102": "merge is not associative",
@@ -72,6 +73,11 @@ CODES: dict[str, str] = {
     "MZ404": "executor quarantined in the plan entry (aging until retry)",
     "MZ405": "serving step failed; affected requests failed, driver survived",
     "MZ406": "transient error swallowed at a probe site (counted, not hidden)",
+    "MZ501": "dead stage eliminated by the rewrite pass",
+    "MZ502": "common subexpression shared: duplicate call collapsed",
+    "MZ503": "selective stage pushed ahead of an elementwise map",
+    "MZ504": "stage chain reassociated into fewer stages for splitting",
+    "MZ505": "rewrite declined with reason",
 }
 
 _SEV_ORDER = {"error": 0, "warning": 1, "info": 2}
@@ -803,7 +809,15 @@ def analyze_dataflow(stages: Sequence[Stage], graph: DataflowGraph,
 def verify_pipeline(fn: Callable, *args, **config) -> Report:
     """Trace ``fn`` under a throwaway lazy context, plan it, and run the
     dataflow analyzer over the resulting stages.  Never executes the
-    pipeline and never touches the plan cache."""
+    pipeline and never mutates the plan cache (a read-only ``peek`` reuses
+    recorded handoff decisions when the entry already carries fresh ones —
+    re-deriving them per ``verify()`` call was pure waste).  The MZ2xx
+    analysis always runs over the UNREWRITTEN plan — the verifier reports on
+    the program as written (a dead stage must still surface as MZ201) — and
+    the static rewrite pass then runs dry on the throwaway graph to report
+    what it *would* do as MZ5xx info diagnostics."""
+    from repro.core import plan_cache as _pc
+    from repro.core import rewrite as rewrite_mod
     from repro.core import runtime
 
     config.setdefault("executor", "auto")
@@ -823,9 +837,48 @@ def verify_pipeline(fn: Callable, *args, **config) -> Report:
         return rep
     stages = plan(pending, ctx.graph,
                   max_stage_nodes=None if ctx.pipeline else 1)
-    ho = handoff_mod.analyze(stages, ctx.executor)
+    ho = None
+    if getattr(ctx, "handoff", True):
+        entry = _pc.peek(pending, ctx.graph, ctx)
+        if (entry is not None and entry.handoff is not None
+                and handoff_mod.decisions_fresh(entry.handoff, stages)):
+            ho = entry.handoff
+            with _pc._lock:
+                _pc.stats["verify_handoff_reused"] += 1
+        else:
+            ho = handoff_mod.analyze(stages, ctx.executor)
     rep = analyze_dataflow(stages, ctx.graph, ho, executor=ctx.executor)
+    if getattr(ctx, "rewrite", True):
+        rw = rewrite_mod.apply(pending, ctx.graph, ctx)
+        rep.extend(rewrite_mod.records_to_diagnostics(rw.records))
     del out                            # keep Futures alive through analysis
+    return rep
+
+
+def rewrite_report(fn: Callable, *args, **config) -> Report:
+    """Dry-run the static rewrite pass (``core/rewrite.py``) over one traced
+    pipeline and report every MZ5xx rewrite it would apply (or decline),
+    with cost-model deltas, without executing anything or mutating any plan
+    cache.  Backs ``repro.launch.lint --rewrite-report``."""
+    from repro.core import rewrite as rewrite_mod
+    from repro.core import runtime
+
+    config.setdefault("executor", "auto")
+    config.setdefault("plan_cache", False)
+    ctx = runtime.MozartContext(**config)
+    stack = runtime._stack()
+    stack.append(ctx)
+    try:
+        out = fn(*args)
+    finally:
+        stack.pop()
+    pending = ctx.graph.pending()
+    rep = Report(checked=1)
+    if not pending:
+        return rep
+    rw = rewrite_mod.apply(pending, ctx.graph, ctx)
+    rep.extend(rewrite_mod.records_to_diagnostics(rw.records))
+    del out                            # keep Futures alive through the pass
     return rep
 
 

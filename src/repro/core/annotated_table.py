@@ -285,6 +285,7 @@ def _filter_rows(t: Table, mask):
 _filter = annotate(_filter_rows, name="filter_rows",
                    t=st.Generic("S"), mask=st.Generic("M"), ret=TableUnknownSpec())
 _filter.sa.dynamic = True
+_filter.sa.selective = "t"           # row-subset of t: pushdown-eligible
 _reg("filter_rows", _filter)
 
 

@@ -63,6 +63,13 @@ class SA:
         self.elementwise = elementwise      # hint: stage may lower to Pallas
         self.mut = tuple(mut)               # donation hint (JAX is pure)
         self.cost_hint = cost_hint
+        #: name of the data argument a SELECTIVE op filters (row-subset
+        #: semantics: output rows are a subset of that argument's rows, other
+        #: arguments are selectors).  Set ad hoc by integrations — like the
+        #: ``dynamic`` flag — e.g. ``compress`` ("x") and ``filter_rows``
+        #: ("t").  The static rewrite pass (core/rewrite.py) uses it to prove
+        #: filter-before-map commutation for the MZ503 pushdown.
+        self.selective: str | None = None
 
 
 class AnnotatedFn:
@@ -188,7 +195,7 @@ class AnnotatedFn:
         generics: dict[str, st.GenericVar] = {}
         ctor_args = dict(bound)          # constructors may read runtime args
         arg_types: dict[str, Any] = {}
-        for name, value in bound.items():
+        for name in bound:
             spec = self.sa.arg_specs.get(name, st._)
             arg_types[name] = spec.construct(avals[name], ctor_args, generics)
         out_type = self.sa.ret_spec.construct(out_aval, ctor_args, generics)

@@ -219,6 +219,9 @@ class AutoExecutor(StageExecutor):
             # when the quarantine ages out, warm calls resume replaying it).
             ctx.stats["auto_quarantine_skips"] += 1
             name = None
+        elif name is not None and self._recheck_due(stage, concrete, ctx,
+                                                    entry):
+            name = None              # periodic re-analysis: pin drifted
         elif name is not None and self._aged_out(stage, concrete, ctx, entry):
             name = None              # shape drift past a crossover: re-measure
         if name is not None:
@@ -267,6 +270,32 @@ class AutoExecutor(StageExecutor):
         ctx.stats["auto_repinned_drift"] += 1
         return True
 
+
+    def _recheck_due(self, stage: Stage, concrete: dict[tuple, Any], ctx,
+                     entry) -> bool:
+        """Periodic re-analysis (``MOZART_REANALYZE_EVERY``): the tick in
+        ``plan_cache._maybe_reanalyze`` flags every stage for one drift
+        re-check; here the flag is consumed.  Unlike ``_aged_out`` this does
+        not wait for the shape bucket to change — the tick exists precisely
+        to revisit pins whose *cost inputs* may have drifted while the shape
+        stayed put.  The pin is dropped only when the analytic model's
+        winner actually flipped between the measured and current shapes."""
+        if entry is None:
+            return False
+        with entry._lock:
+            due = stage.id in entry.recheck_stages
+            entry.recheck_stages.discard(stage.id)
+        if not due:
+            return False
+        meta = entry.exec_meta.get(stage.id)
+        if not meta:
+            return False                      # pre-aging pin: nothing recorded
+        feats_now = features_of(stage, concrete, ctx)
+        if not drifted_past_crossover(feats_now, meta, ctx):
+            return False                      # pin still justified: replay it
+        entry.unpin_exec(stage.id)
+        ctx.stats["auto_repinned_periodic"] += 1
+        return True
 
     def _measure_and_pin(self, stage: Stage, concrete: dict[tuple, Any], ctx,
                          entry, blocked: "set | frozenset" = frozenset()) -> str:

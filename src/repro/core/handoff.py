@@ -154,6 +154,15 @@ def _liveness_stale(ho_map: dict[int, "StageHandoff"],
     return False
 
 
+def decisions_fresh(ho_map: dict[int, "StageHandoff"],
+                    stages: list[Stage]) -> bool:
+    """Whether a recorded decision map still describes ``stages``' current
+    Future liveness — the reuse guard for read-only consumers (the verifier's
+    ``analyze_dataflow`` cached path), which must not re-derive decisions a
+    plan entry already carries unless they have actually gone stale."""
+    return not _liveness_stale(ho_map, stages)
+
+
 def resolve_decisions(ctx, entry, stages: list[Stage]):
     """Handoff decisions for one evaluation of ``stages``.
 
@@ -168,7 +177,12 @@ def resolve_decisions(ctx, entry, stages: list[Stage]):
     consecutive calls, the plan re-analyzes against this call's liveness
     (one retrace on the donate-set change, then warm again) — so a producer
     that stops being observed after the first call does not pay defensive
-    ``donation_copies`` forever."""
+    ``donation_copies`` forever.  The periodic re-analysis tick
+    (``MOZART_REANALYZE_EVERY``, ``plan_cache._maybe_reanalyze``) drives the
+    same machinery from the other end: it clears ``entry.handoff`` outright,
+    so the next call lands on the analyze-fresh path below and plan-time
+    donation vetoes get revisited on schedule rather than only on observed
+    staleness."""
     if not getattr(ctx, "handoff", True):
         return None
     if entry is not None and entry.handoff is not None:
@@ -266,7 +280,7 @@ def analyze(stages: list[Stage],
     done_edges: dict[tuple[int, int], int] = {}    # cross-evaluation ingests
     convert_edges: set[tuple[int, int]] = set()    # ConcatSplit→ArraySplit
     for s in stages:
-        for i, (key, si) in enumerate(s.inputs.items()):
+        for i, (_key, si) in enumerate(s.inputs.items()):
             v = si.value
             if not isinstance(v, NodeRef):
                 continue

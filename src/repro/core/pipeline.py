@@ -313,10 +313,17 @@ class Pipeline:
                     # producers from the build call — pruned later (KeyError)
                     # or silently stale on replay.  Not replayable.
                     return _NO_FAST
+        stages, entry = lookup_or_plan(pending, ctx.graph, ctx)
+        # The static rewrite pass (inside lookup_or_plan) may have retired
+        # nodes (dead-elimination, CSE) and reordered the rest; the retained
+        # replay set is the REWRITTEN live graph — the stages reference it.
+        live = ctx.graph.pending()
+        if not live:
+            return _NO_FAST              # everything rewritten away
         leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
         slot_of = {id(l): j for j, l in enumerate(leaves)}
         node_bindings, bound_ids = [], set()
-        for idx, n in enumerate(pending):
+        for idx, n in enumerate(live):
             for name, v in n.bound.items():
                 if isinstance(v, NodeRef) or id(v) not in slot_of:
                     continue
@@ -324,10 +331,9 @@ class Pipeline:
                     return _NO_FAST      # value baked into compiled plans
                 node_bindings.append((idx, name, slot_of[id(v)]))
                 bound_ids.add(id(v))
-        for j, l in enumerate(leaves):
+        for l in leaves:
             if hasattr(l, "shape") and id(l) not in bound_ids:
                 return _NO_FAST          # array arg never reaches a node
-        stages, entry = lookup_or_plan(pending, ctx.graph, ctx)
         input_bindings = []
         for s_idx, s in enumerate(stages):
             for key, si in s.inputs.items():
@@ -344,10 +350,10 @@ class Pipeline:
                     resilience.run_stage(ctx.executor, s, ctx.graph, ctx)
         finally:
             ctx._plan_entry, ctx._handoff = prev
-        for n in pending:
+        for n in live:
             n.pinned = True              # survive prune(): re-executed per call
         self._fast = _FastReplay(
-            pending=pending, stages=stages, entry=entry, handoff=ho, out=out,
+            pending=live, stages=stages, entry=entry, handoff=ho, out=out,
             treedef=treedef, leaf_specs=[_leaf_spec(l) for l in leaves],
             alias_sig=_alias_sig(leaves), node_bindings=node_bindings,
             input_bindings=input_bindings)
@@ -460,7 +466,7 @@ class Pipeline:
             lambda *a: self.fn(*a, **kwargs), *args,
             executor=c.executor, chip=c.chip, mesh=c.mesh,
             batch_elements=c.batch_elements, inner_executor=c.inner_executor,
-            pipeline=c.pipeline, handoff=c.handoff)
+            pipeline=c.pipeline, handoff=c.handoff, rewrite=c.rewrite)
 
     def _require_fn(self) -> None:
         if self.fn is None:

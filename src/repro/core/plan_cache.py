@@ -76,7 +76,11 @@ _MAX_ENTRIES = 256
 #: v6: ``quarantined`` — per-stage executor quarantine ages (resilience
 #:     degradation ladder), persisted so a restarted process keeps skipping
 #:     a strategy that crashed its predecessor until the quarantine ages out.
-SCHEMA_VERSION = 6
+#: v7: ``rewrites`` — the MZ5xx rewrite-justification records of the static
+#:     graph rewrite pass (``core/rewrite.py``) that produced this entry's
+#:     (rewritten) graph, persisted so warm-started processes can report why
+#:     the replayed plan differs from the captured program.
+SCHEMA_VERSION = 7
 
 #: older schemas the loader can migrate forward in place.  v2 files differ
 #: from v3/v4 only by the absence of ``convert_in`` on handoff records, and
@@ -88,7 +92,11 @@ SCHEMA_VERSION = 6
 #: (unlabelled) — correct for every pre-serving plan.  v5 files lack only
 #: ``quarantined``, which defaults to empty — correct for every pre-resilience
 #: plan (nothing had been observed to fail, so nothing is quarantined).
-_MIGRATABLE_SCHEMAS = (2, 3, 4, 5)
+#: v6 files lack only ``rewrites``, which defaults to empty — correct for
+#: every pre-rewrite plan: the pass postdates them, and any graph the pass
+#: *would* rewrite fingerprints to a different key than the unrewritten one,
+#: so a v6 entry can only ever be hit by a capture the pass left alone.
+_MIGRATABLE_SCHEMAS = (2, 3, 4, 5, 6)
 
 #: process-global cache statistics (benchmarks report these).
 stats: collections.Counter = collections.Counter()
@@ -418,6 +426,18 @@ class PlanEntry:
     #: (one transient crash must not ban a strategy forever).  Persisted, so
     #: a restarted process does not re-crash on a known-bad pin.
     quarantined: dict[int, dict[str, int]] = dataclasses.field(default_factory=dict)
+    #: MZ5xx rewrite-justification records (``RewriteRecord.to_json()`` dicts)
+    #: of the static rewrite pass that produced this entry's graph, including
+    #: MZ505 declines.  Persisted (schema v7): a warm-started process replays
+    #: the rewritten graph and can still report why it looks the way it does.
+    rewrites: list = dataclasses.field(default_factory=list)
+    #: warm hits since the last periodic re-analysis tick
+    #: (``MOZART_REANALYZE_EVERY``).  Runtime-only, never persisted.
+    evals_since_reanalysis: int = 0
+    #: stage ids whose pinned executor choice the next dispatch must re-check
+    #: against the cost model's drift test (set by the re-analysis tick,
+    #: consumed by ``cost_model.AutoExecutor``).  Runtime-only.
+    recheck_stages: set = dataclasses.field(default_factory=set)
     hits: int = 0
     loaded: bool = False                             # rehydrated from disk
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
@@ -623,8 +643,20 @@ def _instantiate(entry: PlanEntry, pending: list[Node],
 def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
                    ctx) -> tuple[list[Stage], PlanEntry | None]:
     """Return (stages, cache entry or None).  Counts live in ``ctx.stats``:
-    ``planner_calls`` increments only when the planner actually runs."""
+    ``planner_calls`` increments only when the planner actually runs.
+
+    The static rewrite pass (``core/rewrite.py``) runs FIRST, so everything
+    downstream — fingerprint, planner, handoff analysis, templates — sees the
+    rewritten graph.  The rewrite is cheap, deterministic pure Python: warm
+    calls re-run it per capture and land on the rewritten graph's cache key,
+    replaying the optimized plan with zero planner calls and zero retraces."""
+    from repro.core import rewrite as rewrite_mod
+    rw = rewrite_mod.apply(pending, graph, ctx)
+    pending = rw.pending
+    ctx._last_rewrites = rw.records
     max_nodes = None if ctx.pipeline else 1
+    if not pending:                      # the rewriter eliminated every node
+        return [], None
     if not getattr(ctx, "plan_cache", True):
         ctx.stats["planner_calls"] += 1
         return plan(pending, graph, max_stage_nodes=max_nodes), None
@@ -653,6 +685,7 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
             entry.bind_fns(pending)      # rehydrated entry: bind live identities
         ctx.stats["plan_cache_hits"] += 1
         _note_entry_key(ctx, key)        # configure() rekeys only owned entries
+        _maybe_reanalyze(ctx, entry, rw.records)
         # O(graph) template instantiation happens outside the global lock so
         # concurrent sessions on different pipelines don't serialize here.
         return _instantiate(entry, pending, graph), entry
@@ -678,7 +711,8 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
             entry = PlanEntry(key=key, stage_templates=templates,
                               fns=tuple(n.fn for n in pending),
                               fn_names=tuple(n.fn.name for n in pending),
-                              handoff=ho)
+                              handoff=ho,
+                              rewrites=[r.to_json() for r in rw.records])
             _entries[key] = entry
             _mark_dirty()
             while len(_entries) > _MAX_ENTRIES:
@@ -686,6 +720,57 @@ def lookup_or_plan(pending: list[Node], graph: DataflowGraph,
                 _exec_tables.pop(evicted, None)
     _note_entry_key(ctx, key)
     return stages, entry
+
+
+def peek(pending: list[Node], graph: DataflowGraph, ctx) -> PlanEntry | None:
+    """Read-only lookup of the entry an UNREWRITTEN pending graph maps to —
+    no rewrite pass, no hit counters, no LRU reshuffle, no planning.  Used by
+    the verifier (``analysis.verify_pipeline``) to reuse recorded handoff
+    decisions instead of re-analyzing per ``verify()`` call; it only hits
+    when the rewrite pass left this graph alone, which is exactly when the
+    entry's decisions describe the verifier's (unrewritten) plan."""
+    if not getattr(ctx, "plan_cache", True):
+        return None
+    key = fingerprint(pending, graph, ctx)
+    if key is None:
+        return None
+    with _lock:
+        entry = _entries.get(key)
+    if entry is not None and entry.matches(pending):
+        return entry
+    return None
+
+
+def _maybe_reanalyze(ctx, entry: PlanEntry, records: list) -> None:
+    """Periodic re-analysis tick (``MOZART_REANALYZE_EVERY``, 0/unset = off).
+
+    First-plan conclusions age: a donation vetoed because a Future happened
+    to be alive at plan time, an executor pinned at one shape, a rewrite
+    declined when the cost inputs looked different.  Every N warm hits this
+    drops the entry's resolved handoff decisions (``resolve_decisions``
+    re-analyzes on next use — vetoed donations get reconsidered), flags every
+    stage for a pinned-executor drift re-check (``cost_model.AutoExecutor``),
+    and refreshes the persisted rewrite records from this capture's pass (a
+    formerly declined rewrite that now applies replaces its MZ505 record)."""
+    try:
+        every = int(os.environ.get("MOZART_REANALYZE_EVERY", "0") or 0)
+    except ValueError:
+        every = 0
+    if every <= 0:
+        return
+    with entry._lock:
+        entry.evals_since_reanalysis += 1
+        if entry.evals_since_reanalysis < every:
+            return
+        entry.evals_since_reanalysis = 0
+        entry.handoff = None             # resolve_decisions re-analyzes
+        entry.ho_age = 0
+        entry.rewrites = [r.to_json() for r in records]
+        entry.recheck_stages = set(range(len(entry.stage_templates)))
+    with _lock:
+        stats["reanalysis_ticks"] += 1
+    ctx.stats["reanalysis_ticks"] += 1
+    _mark_dirty()
 
 
 def _note_entry_key(ctx, key: tuple) -> None:
@@ -766,9 +851,11 @@ def _entry_enc(e: PlanEntry) -> dict:
         meta = {k: dict(v) for k, v in e.exec_meta.items()}
         blocks = dict(e.block_shape)
         quarantined = {k: dict(v) for k, v in e.quarantined.items()}
+        rewrites = [dict(r) for r in e.rewrites]
     return {
         "key": _enc(e.key),
         "fn_names": list(e.fn_names),
+        "rewrites": rewrites,
         "bucket": None if e.bucket is None else _enc(tuple(e.bucket)),
         "quarantined": {str(k): v for k, v in quarantined.items()},
         "tuned_batch": {str(k): v for k, v in tuned.items()},
@@ -824,6 +911,7 @@ def _entry_dec(d: dict, classes: dict[str, type]) -> PlanEntry:
         bucket=None if d.get("bucket") is None else tuple(_dec(d["bucket"])),
         quarantined={int(k): {str(n): int(a) for n, a in v.items()}
                      for k, v in d.get("quarantined", {}).items()},
+        rewrites=[dict(r) for r in d.get("rewrites", [])],
         loaded=True,
     )
 

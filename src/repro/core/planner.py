@@ -197,6 +197,32 @@ def _resolve(env: st.TypeEnv, t: Any, aval_like: Any) -> st.SplitType:
 N_CALLS = 0
 
 
+def simulate_stage_breaks(nodes: list[Node], graph: DataflowGraph,
+                          max_stage_nodes: int | None = None
+                          ) -> list[list[Node]]:
+    """Dry-run the greedy grouping loop on a candidate node order and return
+    the stage partition it would produce — WITHOUT counting as a planner call
+    (``N_CALLS`` untouched) and without building ``Stage`` objects.
+
+    Used by ``core/rewrite.py`` to score node orders before committing a
+    reassociation: fewer breaks means fewer merge/re-split boundaries.
+    ``try_place`` tags ``node.stage_id`` as a side effect; callers always
+    re-plan (or re-simulate) afterwards, so the tags are transient.
+    """
+    groups: list[_OpenStage] = []
+    cur: _OpenStage | None = None
+    for node in nodes:
+        full = (cur is not None and
+                (cur.closed or (max_stage_nodes is not None
+                                and len(cur.nodes) >= max_stage_nodes)))
+        if cur is None or full or not cur.try_place(node, graph):
+            cur = _OpenStage(len(groups))
+            groups.append(cur)
+            if not cur.try_place(node, graph):
+                raise AssertionError(f"cannot place {node} in empty stage")
+    return [g.nodes for g in groups]
+
+
 def plan(nodes: list[Node], graph: DataflowGraph,
          max_stage_nodes: int | None = None) -> list[Stage]:
     """Greedy consecutive grouping in topological (= program) order.

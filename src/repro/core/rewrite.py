@@ -1,0 +1,620 @@
+"""Static dataflow rewrite pass: optimize the captured graph before planning.
+
+``Pipeline.lower()`` captures a whole dataflow graph; everything downstream
+(planner, handoff plane, cost model) optimizes *execution* of that graph
+as-given.  This pass closes the loop the ROADMAP's "graph rewrite" item
+asks for: a Dias-style (PAPERS.md) source-level rewrite of the captured
+graph itself, run between capture and planning (``plan_cache.lookup_or_plan``
+calls :func:`apply` first), so the planner only ever sees the optimized
+graph and warm calls replay it with zero re-analysis.
+
+Four rewrite kinds, each justified by ``cost_model.analytic_seconds`` and
+recorded as a structured :class:`RewriteRecord` (surfaced as MZ5xx
+``Diagnostic``s and persisted on the plan entry, schema v7):
+
+* **MZ501 dead-stage elimination** — the MZ201 predicate (no in-graph
+  consumer, no live ``Future``) applied transitively: unobservable nodes
+  are retired before they ever reach a stage.
+* **MZ502 common-subexpression sharing** — annotated calls are
+  value-numbered (fn identity + static values + input VNs + normalized
+  split types); structurally identical repeats collapse onto one node with
+  fanned-out edges.  Never merges across distinct split types, distinct
+  captured scalars, dynamic-shape fns, or fns with donation (``mut``)
+  hints.
+* **MZ503 filter pushdown** — a selective stage (``sa.selective`` names
+  the filtered data argument: ``compress``, ``filter_rows``) hoists ahead
+  of an elementwise map when the SA contracts prove commutation
+  (elementwise + scalar-broadcast operands ⇒ ``F(filter(x)) ==
+  filter(F(x))`` elementwise), shrinking the interior bytes the handoff
+  plane meters.
+* **MZ504 splitting-friendly reassociation** — independent chains whose
+  program order interleaves are regrouped (justified by the MZ102
+  merge-associativity law: stage merges are associative, so chain-local
+  regrouping preserves results) when the planner simulation
+  (``planner.simulate_stage_breaks``) proves strictly fewer stages — fewer
+  boundaries for ``can_handoff`` to lose.
+
+Rewrites that *almost* apply are recorded as **MZ505 declines** with the
+failing condition spelled out, so ``repro.launch.lint --rewrite-report``
+explains why a pipeline was left alone — and the periodic re-analysis tick
+(``MOZART_REANALYZE_EVERY``, see ``plan_cache``) revisits them once cost
+inputs drift.
+
+The pass is deterministic and idempotent: re-applying it to its own output
+is a no-op (retired nodes are ``done`` and leave ``pending``; pushed-down
+patterns no longer match; the clustering order is a fixpoint), which the
+Pipeline fast-path build relies on (it re-enters ``lookup_or_plan`` once
+more when it declines a call).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+
+from repro import hardware
+from repro.core import split_types as st
+from repro.core.graph import DataflowGraph, Node, NodeRef
+
+#: assumed selectivity of a filter whose mask is unknowable statically; the
+#: cost-model justification for a pushdown states it explicitly.
+ASSUMED_SELECTIVITY = 0.5
+
+#: rewrite-kind -> MZ5xx diagnostic code.
+REWRITE_CODES = {
+    "dead": "MZ501",
+    "cse": "MZ502",
+    "pushdown": "MZ503",
+    "reassoc": "MZ504",
+    "declined": "MZ505",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RewriteRecord:
+    """One applied (or declined) rewrite, with its cost-model justification.
+
+    JSON-stable: persisted verbatim on the plan entry (``PlanEntry.rewrites``,
+    schema v7) so a warm-started process can report why its replayed graph
+    looks the way it does."""
+
+    code: str            # MZ501..MZ505
+    kind: str            # "dead" | "cse" | "pushdown" | "reassoc" | "declined"
+    subject: str         # e.g. "exp#3" or "exp#3 -> compress#5"
+    detail: str          # human-readable justification / decline reason
+    saved_s: float       # analytic_seconds delta (0.0 for declines)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "RewriteRecord":
+        return cls(code=str(d["code"]), kind=str(d["kind"]),
+                   subject=str(d["subject"]), detail=str(d["detail"]),
+                   saved_s=float(d.get("saved_s", 0.0)))
+
+
+@dataclasses.dataclass
+class RewriteResult:
+    pending: list                    # the (possibly reordered) surviving nodes
+    records: list                    # [RewriteRecord]
+
+    @property
+    def applied(self) -> list:
+        return [r for r in self.records if r.kind != "declined"]
+
+
+def records_to_diagnostics(records: list) -> list:
+    """RewriteRecords as MZ5xx ``analysis.Diagnostic``s (all info-severity:
+    rewrites are optimizations, never gate failures)."""
+    from repro.core.analysis import Diagnostic
+    out = []
+    for r in records:
+        msg = r.detail
+        if r.kind != "declined" and r.saved_s > 0:
+            msg = f"{msg} (est {r.saved_s * 1e6:.1f}us saved)"
+        out.append(Diagnostic(r.code, "info", r.subject, msg))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cost-model justification
+# ---------------------------------------------------------------------------
+
+
+def _node_cost_features(node: Node, graph: DataflowGraph) -> tuple[int, int]:
+    """(element count, bytes per element) estimated for one node's work,
+    from its output aval/split type, falling back to its first array-shaped
+    input.  Conservative defaults when nothing is shaped."""
+    n = None
+    total = 0
+    t = node.out_type
+    if isinstance(t, st.ArraySplit) and t.shape:
+        n = t.shape[t.axis]
+    try:
+        if node.out_aval is not None:
+            total = sum(st.nbytes_of(l)
+                        for l in jax.tree_util.tree_leaves(node.out_aval))
+    except (TypeError, ValueError):
+        total = 0
+    if n is None or not total:
+        for name, v in node.bound.items():
+            if name in node.fn.sa.static:
+                continue
+            src = graph.nodes.get(v.node_id) if isinstance(v, NodeRef) else None
+            a = src.out_aval if src is not None else v
+            shape = tuple(getattr(a, "shape", ()) or ())
+            if not shape:
+                continue
+            if n is None:
+                n = shape[0]
+            if not total:
+                try:
+                    total = sum(st.nbytes_of(l)
+                                for l in jax.tree_util.tree_leaves(a))
+                except (TypeError, ValueError):
+                    total = 0
+            break
+    n = max(int(n) if n is not None else 1, 1)
+    elem_bytes = max(total // n, 1) if total else 4
+    return n, elem_bytes
+
+
+def node_seconds(node: Node, graph: DataflowGraph, ctx,
+                 n_override: int | None = None) -> float:
+    """Analytic wall-time estimate of executing ``node`` alone — the
+    justification yardstick every rewrite record carries.  Scored under a
+    fixed representative strategy (fused; pipelined for dynamic chains) so
+    deltas are comparable across records regardless of the session's
+    executor knob."""
+    from repro.core import cost_model
+    n, elem_bytes = _node_cost_features(node, graph)
+    if n_override is not None:
+        n = max(int(n_override), 1)
+    dynamic = node.out_aval is None or getattr(node.fn.sa, "dynamic", False)
+    feats = cost_model.StageFeatures(
+        n=n, elem_bytes=elem_bytes, n_nodes=1,
+        flops_per_elem=float(getattr(node.fn.sa, "cost_hint", 1.0))
+        * cost_model._FLOPS_PER_HINT,
+        dynamic=dynamic, pallas_eligible=False, mesh_devices=0, on_tpu=False)
+    name = "pipelined" if dynamic else "fused"
+    s = cost_model.analytic_seconds(name, feats, ctx.chip)
+    return s if math.isfinite(s) else 0.0
+
+
+# ---------------------------------------------------------------------------
+# MZ501: dead-stage elimination
+# ---------------------------------------------------------------------------
+
+
+def _retire(node: Node) -> None:
+    """Remove a node from execution: marked done with no result, it leaves
+    ``graph.pending()`` immediately and ``graph.prune()`` collects it."""
+    node.done = True
+    node.result = None
+    node.future_ref = None
+    node.alias_refs = []
+
+
+def _live_consumers(pending: list) -> dict[int, list[int]]:
+    """Consumer map over NOT-yet-executed nodes only.  ``graph.consumers()``
+    also counts edges from done nodes — including nodes this very pass just
+    retired — which would keep a dead producer "live" forever and stall the
+    elimination fixpoint (or wrongly fail a sole-consumer check)."""
+    out: dict[int, list[int]] = {}
+    for n in pending:
+        for d in n.deps():
+            out.setdefault(d, []).append(n.id)
+    return out
+
+
+def _eliminate_dead(pending: list, graph: DataflowGraph, ctx,
+                    records: list) -> list:
+    """Transitively retire nodes with no consumer and no live Future (the
+    MZ201 predicate, enforced instead of advised)."""
+    while True:
+        cons = _live_consumers(pending)
+        dead = [n for n in pending
+                if not cons.get(n.id) and not n.future_alive()]
+        if not dead:
+            return pending
+        for n in dead:
+            saved = node_seconds(n, graph, ctx)
+            records.append(RewriteRecord(
+                "MZ501", "dead", f"{n.fn.name}#{n.id}",
+                "output has no consumer and no live Future; "
+                "eliminated before planning", saved))
+            _retire(n)
+        pending = [n for n in pending if not n.done]
+
+
+# ---------------------------------------------------------------------------
+# MZ502: common-subexpression sharing
+# ---------------------------------------------------------------------------
+
+_HASHABLE_SCALARS = (bool, int, float, complex, str, bytes, type(None))
+
+
+def _vn_key(node: Node, vn: dict[int, int]) -> tuple | None:
+    """Structural value number of one annotated call, or None (never merge).
+
+    Two calls share a key iff they call the SAME function object on the
+    same value-numbered inputs with equal static values, equal captured
+    scalars, identical external-array identities and identical (normalized)
+    split types — the conditions under which a pure annotated call is
+    guaranteed to produce the same value."""
+    sa = node.fn.sa
+    if getattr(sa, "dynamic", False) or node.out_aval is None or sa.mut:
+        return None                      # dynamic output / donation hint
+    from repro.core.plan_cache import (_aval_fingerprint, _type_fingerprint,
+                                       value_fingerprint)
+    parts: list = [("fn", id(node.fn))]
+    varmap: dict[int, int] = {}
+    for name, v in node.bound.items():
+        if name in sa.static:
+            f = value_fingerprint(v, with_value=True)
+            if f is None:
+                return None
+            parts.append(("static", name, f))
+        elif isinstance(v, NodeRef):
+            if v.node_id in vn:
+                parts.append(("ref", name, vn[v.node_id]))
+            else:
+                parts.append(("done", name, v.node_id))
+        elif isinstance(v, _HASHABLE_SCALARS):
+            # captured Python scalars: by value AND type — 1 never merges
+            # with 1.0, and distinct values never merge.
+            parts.append(("pyval", name, type(v).__name__, v))
+        else:
+            # external arrays/containers: identity only — equal-shaped but
+            # distinct objects may hold different data.
+            parts.append(("extid", name, id(v)))
+        if name not in sa.static:
+            tf = _type_fingerprint(node.arg_types[name], varmap)
+            if tf is None:
+                return None
+            parts.append(("T", name, tf))
+    of = _type_fingerprint(node.out_type, varmap)
+    af = _aval_fingerprint(node.out_aval)
+    if of is None or af is None:
+        return None
+    parts.append(("out", of, af))
+    return tuple(parts)
+
+
+def _merge_into(rep: Node, dupe: Node, pending: list) -> None:
+    """Redirect every consumer and live Future of ``dupe`` onto ``rep``,
+    then retire ``dupe``."""
+    for c in pending:
+        if c is dupe:
+            continue
+        for name, v in c.bound.items():
+            if isinstance(v, NodeRef) and v.node_id == dupe.id:
+                c.bound[name] = NodeRef(rep.id)
+    if dupe.future_ref is not None:
+        fut = dupe.future_ref()
+        if fut is not None:
+            fut._node = rep              # observation now reads the shared node
+        # keep the weakref on the representative: while the dupe's Future
+        # lives, the shared output must stay escaping/mergeable.
+        rep.alias_refs = list(rep.alias_refs) + [dupe.future_ref]
+    rep.alias_refs = list(rep.alias_refs) + list(dupe.alias_refs)
+    dupe.future_ref = None
+    dupe.alias_refs = []
+    _retire(dupe)
+
+
+def _share_common(pending: list, graph: DataflowGraph, ctx,
+                  records: list) -> list:
+    vn: dict[int, int] = {}
+    table: dict[tuple, Node] = {}
+    changed = False
+    for n in pending:
+        key = _vn_key(n, vn)
+        vn[n.id] = n.id
+        if key is None:
+            continue
+        rep = table.get(key)
+        if rep is None:
+            table[key] = n
+            continue
+        saved = node_seconds(n, graph, ctx)
+        records.append(RewriteRecord(
+            "MZ502", "cse", f"{n.fn.name}#{n.id}",
+            f"structurally identical to {rep.fn.name}#{rep.id}; "
+            "collapsed onto the shared call", saved))
+        _merge_into(rep, n, pending)
+        vn[n.id] = rep.id
+        changed = True
+    if changed:
+        pending = [n for n in pending if not n.done]
+    return pending
+
+
+# ---------------------------------------------------------------------------
+# MZ503: filter pushdown (selective stage ahead of an elementwise map)
+# ---------------------------------------------------------------------------
+
+
+def _is_scalarish(v: Any, graph: DataflowGraph) -> bool:
+    if isinstance(v, NodeRef):
+        return False
+    return not tuple(getattr(v, "shape", ()) or ())
+
+
+def _rebuild_types(node: Node, graph: DataflowGraph) -> None:
+    """Re-run the node's split-type constructors after its bound arguments
+    changed (the same construction ``runtime.register_call`` performs)."""
+    avals: dict[str, Any] = {}
+    ctor: dict[str, Any] = {}
+    for name, v in node.bound.items():
+        if isinstance(v, NodeRef):
+            src = graph.nodes.get(v.node_id)
+            a = src.out_aval if src is not None else None
+        else:
+            a = v
+        avals[name] = a
+        ctor[name] = a
+    node.out_aval = None if (getattr(node.fn.sa, "dynamic", False)
+                             or any(a is None for a in avals.values())) \
+        else node.fn.abstract_eval(avals)
+    node.arg_types, node.out_type = node.fn.construct_types(
+        ctor, avals, node.out_aval)
+
+
+def _reorder_graph(graph: DataflowGraph, new_pending: list) -> None:
+    """Rebuild the node dict so ``graph.pending()`` iterates the rewritten
+    order (done nodes first — they never consume pending ones, so the
+    result stays topological)."""
+    order = {n.id for n in new_pending}
+    rebuilt: dict[int, Node] = {}
+    for n in graph.nodes.values():
+        if n.id not in order:
+            rebuilt[n.id] = n
+    for n in new_pending:
+        rebuilt[n.id] = n
+    graph.nodes = rebuilt
+
+
+def _pushdown(pending: list, graph: DataflowGraph, ctx,
+              records: list) -> list:
+    """Hoist ``sa.selective`` stages ahead of elementwise maps.
+
+    Pattern: ``flt = F(sel..., data=M(...))`` where M is elementwise with a
+    single array operand, F is M's only consumer and M's own output is
+    never observed.  The SA contracts prove commutation — an elementwise
+    map applied per row commutes with any row-subset selection — so the
+    edge becomes ``M(F(sel..., data=x))`` and M runs on the filtered
+    (smaller) extent."""
+    declined: set[tuple] = set()      # (map id, filter id): record MZ505 once
+    # Reduce-past-map is the pattern the ISSUE's "filter/reduce pushdown"
+    # names but the SA contracts CANNOT license: a ReduceSplit consumer
+    # collapses the extent, and ``reduce(map(x)) == map(reduce(x))`` needs a
+    # distributivity law no annotation states.  Record the decline so the
+    # report explains why the hoist did not happen (and the periodic
+    # re-analysis tick revisits it if a future contract ever proves it).
+    cons0 = _live_consumers(pending)
+    for r_node in pending:
+        if not isinstance(r_node.out_type, st.ReduceSplit):
+            continue
+        for v in r_node.bound.values():
+            if not isinstance(v, NodeRef):
+                continue
+            p = graph.nodes.get(v.node_id)
+            if (p is None or p.done or not p.fn.sa.elementwise
+                    or cons0.get(p.id, []) != [r_node.id]):
+                continue
+            if (p.id, r_node.id) not in declined:
+                declined.add((p.id, r_node.id))
+                records.append(RewriteRecord(
+                    "MZ505", "declined",
+                    f"{p.fn.name}#{p.id} -> {r_node.fn.name}#{r_node.id}",
+                    "pushdown declined: reduction past a map — "
+                    "reduce/map commutation is not provable from SA "
+                    "contracts (no distributivity law)", 0.0))
+    for _ in range(len(pending)):
+        cons = _live_consumers(pending)
+        pos = {n.id: i for i, n in enumerate(pending)}
+        swap = None
+        for f_node in pending:
+            data_arg = getattr(f_node.fn.sa, "selective", None)
+            if not data_arg:
+                continue
+            v = f_node.bound.get(data_arg)
+            if not isinstance(v, NodeRef) or v.node_id not in pos:
+                continue
+            m_node = graph.nodes[v.node_id]
+            reason = _pushdown_blocker(f_node, m_node, data_arg, cons,
+                                       pos, graph)
+            if reason is not None:
+                if (m_node.id, f_node.id) not in declined:
+                    declined.add((m_node.id, f_node.id))
+                    records.append(RewriteRecord(
+                        "MZ505", "declined",
+                        f"{m_node.fn.name}#{m_node.id} -> "
+                        f"{f_node.fn.name}#{f_node.id}",
+                        f"pushdown declined: {reason}", 0.0))
+                continue
+            swap = (f_node, m_node, data_arg)
+            break
+        if swap is None:
+            return pending
+        f_node, m_node, data_arg = swap
+        n_full = _node_cost_features(m_node, graph)[0]
+        n_filtered = max(int(math.ceil(n_full * ASSUMED_SELECTIVITY)), 1)
+        saved = (node_seconds(m_node, graph, ctx, n_override=n_full)
+                 - node_seconds(m_node, graph, ctx, n_override=n_filtered))
+        m_data = next(name for name, mv in m_node.bound.items()
+                      if name not in m_node.fn.sa.static
+                      and not _is_scalarish(mv, graph))
+        # Downstream consumers of the filter now read the (filtered) map.
+        for c in pending:
+            if c is m_node or c is f_node:
+                continue
+            for name, cv in c.bound.items():
+                if isinstance(cv, NodeRef) and cv.node_id == f_node.id:
+                    c.bound[name] = NodeRef(m_node.id)
+        f_node.bound[data_arg] = m_node.bound[m_data]
+        m_node.bound[m_data] = NodeRef(f_node.id)
+        _rebuild_types(f_node, graph)
+        _rebuild_types(m_node, graph)
+        # The observable final value moves from the filter to the map.
+        if f_node.future_ref is not None:
+            fut = f_node.future_ref()
+            if fut is not None:
+                fut._node = m_node
+            m_node.future_ref = f_node.future_ref
+            f_node.future_ref = None
+        m_node.alias_refs = list(m_node.alias_refs) + list(f_node.alias_refs)
+        f_node.alias_refs = []
+        # Reorder: the filter takes the map's slot (its remaining deps all
+        # precede it — checked by _pushdown_blocker).
+        new_pending = [n for n in pending if n is not f_node]
+        new_pending.insert(new_pending.index(m_node), f_node)
+        pending = new_pending
+        _reorder_graph(graph, pending)
+        records.append(RewriteRecord(
+            "MZ503", "pushdown",
+            f"{f_node.fn.name}#{f_node.id} <- {m_node.fn.name}#{m_node.id}",
+            f"selective stage hoisted ahead of elementwise map "
+            f"{m_node.fn.name} (assumed selectivity "
+            f"{ASSUMED_SELECTIVITY:g}: {n_full} -> {n_filtered} elements)",
+            max(saved, 0.0)))
+    return pending
+
+
+def _pushdown_blocker(f_node: Node, m_node: Node, data_arg: str,
+                      cons: dict, pos: dict, graph: DataflowGraph
+                      ) -> str | None:
+    """Why F cannot hoist ahead of M, or None when the commutation holds."""
+    sa = m_node.fn.sa
+    if isinstance(m_node.out_type, st.ReduceSplit):
+        return ("producer is a reduction; filter/reduce commutation is not "
+                "provable from SA contracts (no distributivity law)")
+    if not sa.elementwise:
+        return (f"producer {m_node.fn.name} is not elementwise; the SA "
+                "contracts cannot prove commutation with a row filter")
+    if sa.mut:
+        return "producer carries a donation (mut) hint"
+    if sa.static:
+        return "producer has static parameters; commutation unproven"
+    array_args = [name for name, v in m_node.bound.items()
+                  if name not in sa.static and not _is_scalarish(v, graph)]
+    if len(array_args) != 1:
+        return ("producer has multiple array operands; filtering one "
+                "operand does not commute with the map")
+    consumers = cons.get(m_node.id, [])
+    if len(consumers) != 1 or consumers[0] != f_node.id:
+        return ("producer's full (unfiltered) output has other consumers")
+    if m_node.future_alive():
+        return "producer's full output is observed (live Future)"
+    # Every remaining dependency of F must already precede M in program
+    # order, or hoisting F to M's slot would break topological order.
+    for name, v in f_node.bound.items():
+        if name == data_arg or not isinstance(v, NodeRef):
+            continue
+        if v.node_id in pos and pos[v.node_id] >= pos[m_node.id]:
+            return (f"selector argument {name!r} is defined after the map; "
+                    "hoisting would break program order")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# MZ504: splitting-friendly reassociation
+# ---------------------------------------------------------------------------
+
+
+def _cluster(pending: list) -> list:
+    """Chain-clustered topological order: after emitting a node, prefer a
+    ready consumer of it (continue the chain); otherwise the earliest ready
+    node in program order.  Deterministic, and a fixpoint of itself."""
+    ids = {n.id for n in pending}
+    order = {n.id: i for i, n in enumerate(pending)}
+    deps = {n.id: [d for d in n.deps() if d in ids] for n in pending}
+    consumers: dict[int, list[int]] = {n.id: [] for n in pending}
+    for n in pending:
+        for d in deps[n.id]:
+            consumers[d].append(n.id)
+    by_id = {n.id: n for n in pending}
+    emitted: set[int] = set()
+    out: list = []
+    last: int | None = None
+    while len(out) < len(pending):
+        ready = [nid for nid in ids - emitted
+                 if all(d in emitted for d in deps[nid])]
+        pick = None
+        if last is not None:
+            chain = [c for c in consumers[last] if c in ready]
+            if chain:
+                pick = min(chain, key=lambda c: order[c])
+        if pick is None:
+            pick = min(ready, key=lambda c: order[c])
+        out.append(by_id[pick])
+        emitted.add(pick)
+        last = pick
+    return out
+
+
+def _reassociate(pending: list, graph: DataflowGraph, ctx,
+                 records: list) -> list:
+    if len(pending) < 3:
+        return pending
+    clustered = _cluster(pending)
+    if [n.id for n in clustered] == [n.id for n in pending]:
+        return pending
+    from repro.core.planner import simulate_stage_breaks
+    max_nodes = None if getattr(ctx, "pipeline", True) else 1
+    base = simulate_stage_breaks(pending, graph, max_stage_nodes=max_nodes)
+    alt = simulate_stage_breaks(clustered, graph, max_stage_nodes=max_nodes)
+    if len(alt) >= len(base):
+        records.append(RewriteRecord(
+            "MZ505", "declined",
+            f"{len(pending)}-node graph",
+            f"reassociation declined: chain clustering yields {len(alt)} "
+            f"stage(s) vs {len(base)} — no boundary eliminated", 0.0))
+        return pending
+    # Each eliminated boundary skips one merge + one re-split round trip of
+    # roughly a stage's interior bytes through HBM, plus a dispatch.
+    bytes_est = max(_node_cost_features(n, graph)[0]
+                    * _node_cost_features(n, graph)[1] for n in pending)
+    eliminated = len(base) - len(alt)
+    saved = eliminated * (2.0 * bytes_est / ctx.chip.hbm_bandwidth
+                          + hardware.effective_dispatch_overhead_s(ctx.chip))
+    _reorder_graph(graph, clustered)
+    records.append(RewriteRecord(
+        "MZ504", "reassoc",
+        ",".join(f"{n.fn.name}#{n.id}" for n in clustered),
+        f"independent chains regrouped: {len(base)} -> {len(alt)} stage(s) "
+        f"({eliminated} boundary(ies) eliminated; merge associativity "
+        "[MZ102] preserves results)", max(saved, 0.0)))
+    return clustered
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def apply(pending: list, graph: DataflowGraph, ctx) -> RewriteResult:
+    """Rewrite the pending graph in place; returns the surviving node order
+    plus the justification records.  Gated by the context's ``rewrite``
+    knob; a disabled (or empty) pass returns the input untouched."""
+    if not getattr(ctx, "rewrite", True) or not pending:
+        return RewriteResult(list(pending), [])
+    records: list[RewriteRecord] = []
+    pending = _eliminate_dead(pending, graph, ctx, records)
+    if pending:
+        pending = _share_common(pending, graph, ctx, records)
+    if pending:
+        pending = _pushdown(pending, graph, ctx, records)
+    if pending:
+        pending = _reassociate(pending, graph, ctx, records)
+    applied = [r for r in records if r.kind != "declined"]
+    if applied:
+        ctx.stats["rewrites_applied"] += len(applied)
+    if len(applied) != len(records):
+        ctx.stats["rewrites_declined"] += len(records) - len(applied)
+    return RewriteResult(pending, records)

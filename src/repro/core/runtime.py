@@ -46,6 +46,7 @@ class MozartContext:
         autotune: bool = True,
         plan_cache_path: str | None = None,
         handoff: bool = True,
+        rewrite: bool = True,
     ):
         self.executor = executor
         self.chip = chip
@@ -60,6 +61,7 @@ class MozartContext:
         self.plan_cache = plan_cache             # reuse plans across evaluations
         self.autotune = autotune                 # measure+pin chunk sizes on cached plans
         self.handoff = handoff                   # cross-stage chunk handoff (core/handoff.py)
+        self.rewrite = rewrite                   # static graph rewrite pass (core/rewrite.py)
         # Persist plans/tuned batches/executor choices across processes.  The
         # MOZART_PLAN_CACHE env var pre-warms every context (serving replicas
         # restart with pinned plans: zero planner calls, zero tuning runs).
@@ -76,6 +78,7 @@ class MozartContext:
         self._batch_override: int | None = None  # set by the auto-tuner only
         self._n_cap: int | None = None           # set during sampled tuning only
         self._entry_keys: set = set()            # cache keys this context used
+        self._last_rewrites: list = []           # RewriteRecords of the last plan
         if self.plan_cache_path:
             from repro.core.plan_cache import load_once
             load_once(self.plan_cache_path)

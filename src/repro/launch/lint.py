@@ -105,6 +105,21 @@ def check_examples() -> analysis.Report:
     return rep
 
 
+def rewrite_report() -> analysis.Report:
+    """Dry-run the static rewrite pass over every example/config pipeline
+    and report the MZ5xx rewrites that WOULD apply (with cost-model deltas)
+    — no execution, no plan-cache mutation (``--rewrite-report``)."""
+    rep = analysis.Report()
+    for name, fn, args, config in _example_pipelines():
+        sub = analysis.rewrite_report(fn, *args, **config)
+        for d in sub.diagnostics:
+            rep.diagnostics.append(analysis.Diagnostic(
+                d.code, d.severity, f"{name}: {d.subject}", d.message,
+                d.where))
+        rep.checked += 1
+    return rep
+
+
 def check_configs() -> analysis.Report:
     from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 
@@ -138,9 +153,24 @@ def main(argv: list[str] | None = None) -> int:
                     help="skip the architecture-config construction sweep")
     ap.add_argument("--plan-cache", metavar="PATH", default=None,
                     help="persisted plan-cache file to audit (MZ205)")
+    ap.add_argument("--rewrite-report", action="store_true",
+                    help="dry-run only the static graph rewrite pass over "
+                         "the example pipelines and print the MZ5xx "
+                         "rewrites it would apply (no plan-cache mutation)")
     args = ap.parse_args(argv)
 
     rep = analysis.Report()
+    if args.rewrite_report:
+        print("== rewrite report: static graph rewrite dry-run (MZ5xx) ==")
+        rep.extend(rewrite_report())
+        # MZ5xx notes are info severity: always show them — they ARE the
+        # requested output, not noise to be hidden behind -v.
+        print(rep.render(verbose=True))
+        if args.json:
+            with open(args.json, "w", encoding="utf-8") as f:
+                json.dump(rep.to_json(), f, indent=2)
+            print(f"wrote {args.json}")
+        return 0 if rep.ok else 1
     if not args.skip_contract:
         print("== contract: split-type laws + SA condition ==")
         rep.extend(analysis.check_split_types())

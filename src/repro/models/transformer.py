@@ -232,7 +232,7 @@ def run_stack(params, x, cfg: ModelConfig, *, caches=None, mode="train",
         for i, pl in enumerate(params["pre_layers"]):
             io = BlockIO(
                 cache=None if caches is None else jax.tree_util.tree_map(
-                    lambda c: c[i], caches["pre"]),
+                    lambda c, i=i: c[i], caches["pre"]),
                 window=jnp.int32(BIG_WINDOW), cross_kv=None)
             x, new_c, aux = _apply_block(pl, x, cfg, io, kind="dense",
                                          mode=mode, causal=causal,

@@ -237,7 +237,7 @@ class TestPlanCache:
     def test_consumed_done_future_replans_correctly(self):
         """NodeRefs to already-materialized nodes rebind across cache hits."""
         x = jnp.arange(16.0)
-        for i in range(2):
+        for _ in range(2):
             with mozart.session(executor="fused") as ctx:
                 a = anp.exp(x)
                 _ = a.value                       # materialize

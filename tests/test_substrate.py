@@ -36,7 +36,7 @@ class TestDataPipeline:
         cfg = get_smoke_config("rwkv6-1.6b")
         p = DataPipeline(cfg, batch=2, seq=8, seed=0, prefetch=3)
         seen = []
-        for step, batch in p.iterate(start_step=7):
+        for step, _batch in p.iterate(start_step=7):
             seen.append(step)
             if len(seen) == 5:
                 break

@@ -72,7 +72,7 @@ def test_training_with_mozart_optimizer_converges():
     pipe = DataPipeline(cfg, batch=4, seq=32, seed=0)
     grad_fn = jax.jit(jax.value_and_grad(lambda p, b: lm.loss_fn(p, b, cfg)))
     losses = []
-    for step in range(8):
+    for _ in range(8):
         batch = pipe.batch_for_step(0)      # overfit one batch
         loss, grads = grad_fn(params, batch)
         params, opt, _ = mozart_adamw_update(params, grads, opt, ocfg,
